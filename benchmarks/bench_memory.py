@@ -1,0 +1,61 @@
+"""Claim: FreqCa's CRF caching is O(1) in depth vs O(L) for per-block
+caches, ~99% memory saving (survey Eq. 52, §V-A); TaylorSeer's per-layer
+history costs O(order * L).
+
+We measure actual cache-state bytes held by each policy at BLOCK vs MODEL
+granularity on the benchmark DiT.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CachedStack, cache_state_bytes, make_policy
+from repro.diffusion.pipeline import CachedDenoiser
+
+from .common import save_result, small_dit
+
+
+def run():
+    cfg, params = small_dit()
+    B = 2
+    rows = []
+    for name, gran in [
+        ("fora", "block"), ("fora", "model"),
+        ("taylorseer", "block"), ("taylorseer", "model"),
+        ("hicache", "block"), ("hicache", "model"),
+        ("freqca", "model"),      # CRF: one cumulative-residual tensor
+        ("teacache", "model"),
+    ]:
+        pol = make_policy(name)
+        den = CachedDenoiser(params, cfg, pol, granularity=gran)
+        state = den.init_state(B)
+        nbytes = cache_state_bytes(state)
+        rows.append({"policy": name, "granularity": gran, "bytes": nbytes})
+        print(f"{name:12s} {gran:6s}: {nbytes/1e6:8.2f} MB")
+
+    by = {(r["policy"], r["granularity"]): r["bytes"] for r in rows}
+    block = by[("taylorseer", "block")]
+    model = by[("freqca", "model")]
+
+    # O(1)-in-depth check: the CRF cache must not grow with L while the
+    # per-block cache grows linearly
+    cfg12, params12 = small_dit(layers=12)
+    den12 = CachedDenoiser(params12, cfg12, make_policy("freqca"),
+                           granularity="model")
+    crf12 = cache_state_bytes(den12.init_state(B))
+    blk12 = cache_state_bytes(
+        CachedDenoiser(params12, cfg12, make_policy("taylorseer"),
+                       granularity="block").init_state(B))
+    claims = {
+        "block_cache_scales_with_L": blk12 > 1.8 * block,  # 12L vs 6L
+        "crf_vs_per_block_saving_pct": 100.0 * (1 - model / block),
+        "crf_is_O1_in_depth": crf12 == model,              # 12L == 6L bytes
+    }
+    print("claims:", claims)
+    save_result("bench_memory", {"rows": rows, "claims": claims,
+                                 "num_layers": cfg.num_layers})
+    return rows, claims
+
+
+if __name__ == "__main__":
+    run()

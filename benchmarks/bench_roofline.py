@@ -1,0 +1,61 @@
+"""Roofline table assembler: reads benchmarks/results/dryrun_*.json (emitted
+by repro.launch.dryrun) and renders the §Roofline table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import RESULTS_DIR, save_result
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh"), "status": "skipped",
+                         "reason": rec.get("skip_reason")})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec.get("mesh"), "status": "error",
+                         "reason": rec.get("error", "?")[:120]})
+            continue
+        rl = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": "ok",
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "bytes_per_device_gb": rec["bytes_per_device"] / 1e9,
+            "fits": rec["fits_16gb_hbm"],
+            "useful_flops_ratio": rec.get("useful_flops_ratio"),
+        })
+
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"{'arch':18s} {'shape':12s} {'mesh':10s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'dom':>10s} {'GB/dev':>7s} fit")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:18s} {r['shape']:12s} -- {r['status']}: "
+                  f"{r.get('reason','')}")
+            continue
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:10s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['bytes_per_device_gb']:7.1f} {r['fits']}")
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"\n{len(ok)} ok; dominant terms: {doms}")
+    save_result("roofline_table", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

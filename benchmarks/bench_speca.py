@@ -1,0 +1,78 @@
+"""Claim: SpeCa's speedup S ~= 1/((1-alpha)+gamma) where alpha is the
+prediction acceptance rate and gamma the (small) verification cost ratio
+(survey Eq. 57).
+
+We run SpeCa at several tolerances with an oracle verifier, read the
+acceptance/rejection counters from the policy state, and compare the
+realized compute fraction against the formula.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_policy
+from repro.core.metrics import psnr, rel_l2
+from repro.diffusion import ddim_step, sample
+from repro.models import dit
+
+from .common import save_result, small_dit, trajectory_reference
+
+NUM_STEPS = 40
+INTERVAL = 4
+
+
+def run():
+    cfg, params = small_dit()
+    sched, ts, xT, x0_ref, _ = trajectory_reference(params, cfg, NUM_STEPS)
+    B = xT.shape[0]
+    y = jnp.zeros((B,), jnp.int32)
+
+    rows = []
+    for tau in (0.02, 0.05, 0.1, 0.3):
+        pol = make_policy("speca", interval=INTERVAL, tau=tau)
+        state = pol.init_state(xT.shape)
+
+        def denoise(state, i, x, t, _pol=pol):
+            def compute(lat):
+                return dit.forward(params, lat, t, y, cfg)
+
+            def verify(lat, y_hat):
+                return rel_l2(y_hat, compute(lat))
+
+            return _pol.apply(state, i, x, compute, verify_fn=verify)
+
+        x0, state = sample(denoise, xT, ts, sched, step_fn=ddim_step,
+                           denoiser_state=state)
+        x0 = np.asarray(x0)
+        acc, rej = int(state["accepts"]), int(state["rejects"])
+        scheduled = sum(1 for s in range(NUM_STEPS) if s % INTERVAL == 0)
+        frac = (scheduled + rej) / NUM_STEPS
+        alpha = acc / max(acc + rej, 1)
+        gamma = 0.05                      # probe cost ratio in production
+        s_formula = 1.0 / ((1.0 - alpha) + gamma)
+        rows.append({
+            "tau": tau, "accepts": acc, "rejects": rej,
+            "compute_fraction": frac, "alpha": alpha,
+            "speedup_formula": s_formula,
+            "speedup_fraction_based": 1.0 / frac,
+            "psnr_vs_exact": float(psnr(x0, x0_ref)),
+        })
+        print(f"tau={tau}: acc={acc} rej={rej} frac={frac:.2f} "
+              f"alpha={alpha:.2f} S_formula={s_formula:.2f} "
+              f"S_realized={1/frac:.2f} psnr={rows[-1]['psnr_vs_exact']:.1f}")
+
+    claims = {
+        "alpha_nondecreasing_with_tau": all(
+            rows[i]["alpha"] <= rows[i + 1]["alpha"] + 1e-9
+            for i in range(len(rows) - 1)),
+        "tight_tau_higher_quality":
+            rows[0]["psnr_vs_exact"] >= rows[-1]["psnr_vs_exact"] - 1e-6,
+    }
+    print("claims:", claims)
+    save_result("bench_speca", {"rows": rows, "claims": claims})
+    return rows, claims
+
+
+if __name__ == "__main__":
+    run()

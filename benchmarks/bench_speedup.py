@@ -1,0 +1,60 @@
+"""Claim: acceleration factor ~= T/m (survey §III-B complexity analysis).
+
+The survey derives O(m*C1 + (T-m)*C2) total cost when m of T steps compute
+fully and cache retrieval C2 << C1, i.e. speedup ~ T/m = 1/compute_fraction.
+We measure wall-clock per trajectory on a ~5M-param DiT for FORA at several
+intervals and compare with the predicted T/m line.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import make_policy, compute_fraction
+from repro.diffusion import linear_schedule, sample, ddim_step
+from repro.diffusion.pipeline import CachedDenoiser
+
+from .common import save_result, small_dit, timeit
+
+NUM_STEPS = 40
+
+
+def run():
+    cfg, params = small_dit()
+    sched = linear_schedule(1000)
+    ts = sched.spaced(NUM_STEPS)
+    key = jax.random.PRNGKey(0)
+    xT = jax.random.normal(key, (2, cfg.dit_patch_tokens, cfg.dit_in_dim))
+
+    rows = []
+    base_t = None
+    for interval in (1, 2, 4, 8):
+        policy = make_policy("fora", interval=interval)
+        den = CachedDenoiser(params, cfg, policy, granularity="model")
+
+        def traj():
+            x0, _ = sample(den, xT, ts, sched, step_fn=ddim_step,
+                           denoiser_state=den.init_state(2))
+            return x0
+
+        jtraj = jax.jit(traj)
+        t = timeit(jtraj, reps=3)
+        frac = compute_fraction(policy.static_schedule(NUM_STEPS))
+        if interval == 1:
+            base_t = t
+        rows.append({
+            "interval": interval,
+            "compute_fraction": frac,
+            "predicted_speedup": 1.0 / frac,
+            "wall_s": t,
+            "measured_speedup": base_t / t,
+        })
+        print(f"N={interval}: frac={frac:.3f} predicted={1/frac:.2f}x "
+              f"measured={base_t/t:.2f}x ({t*1e3:.0f} ms)")
+
+    save_result("bench_speedup", {"num_steps": NUM_STEPS, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

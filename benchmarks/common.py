@@ -1,0 +1,88 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def small_dit(seed: int = 0, layers: int = 6, d_model: int = 256,
+              tokens: int = 64, in_dim: int = 16):
+    """A ~5M-param DiT used by every cache benchmark: big enough that cache
+    hits matter, small enough for CPU."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    cfg = get_config("dit-xl").reduced(
+        num_layers=layers, d_model=d_model, num_heads=4, num_kv_heads=4,
+        d_ff=d_model * 4, dit_patch_tokens=tokens, dit_in_dim=in_dim,
+        dit_num_classes=10)
+    from repro.models import perturb_zero_init
+    params = perturb_zero_init(init_params(jax.random.PRNGKey(seed), cfg), seed)
+    return cfg, params
+
+
+def trajectory_reference(params, cfg, num_steps: int, batch: int = 2,
+                         seed: int = 0, cfg_scale: float = 0.0):
+    """Exact (uncached) sampling trajectory + per-step model outputs."""
+    from repro.diffusion import linear_schedule, sample, ddim_step
+    from repro.diffusion.pipeline import cfg_denoise_fn
+    sched = linear_schedule(1000)
+    ts = sched.spaced(num_steps)
+    key = jax.random.PRNGKey(seed)
+    xT = jax.random.normal(key, (batch, cfg.dit_patch_tokens, cfg.dit_in_dim))
+    outputs = []
+
+    base = cfg_denoise_fn(params, cfg, cfg_scale)
+
+    def recording(state, i, x, t):
+        eps, state = base(state, i, x, t)
+        outputs.append(np.asarray(eps))
+        return eps, state
+
+    x0, _ = sample(recording, xT, ts, sched, step_fn=ddim_step)
+    return sched, ts, xT, np.asarray(x0), outputs
+
+
+def run_policy(policy, params, cfg, sched, ts, xT, granularity="model",
+               cfg_scale: float = 0.0):
+    """Sample under a cache policy; returns (x0, n_computed_steps)."""
+    from repro.diffusion import sample, ddim_step
+    from repro.diffusion.pipeline import CachedDenoiser
+    den = CachedDenoiser(params, cfg, policy, granularity=granularity,
+                         cfg_scale=cfg_scale)
+    counter = {"n": 0}
+    orig = den._backbone
+
+    def counting(x_lat, t_vec, y, state, step):
+        counter["n"] += 1
+        return orig(x_lat, t_vec, y, state, step)
+
+    # count *full computes* via policy state where available instead
+    x0, state = sample(den, xT, ts, sched, step_fn=ddim_step,
+                       denoiser_state=den.init_state(xT.shape[0]))
+    n_comp = None
+    pol = state.get("policy", {})
+    if isinstance(pol, dict) and "n_compute" in pol:
+        n_comp = int(pol["n_compute"])
+    return np.asarray(x0), n_comp
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps

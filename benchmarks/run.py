@@ -1,0 +1,49 @@
+"""Benchmark aggregator: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs one benchmark per survey claim (DESIGN §7) on CPU-feasible model
+scales; the roofline table is assembled from the dry-run artifacts if they
+exist (run `python -m repro.launch.dryrun --all` to regenerate).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main():
+    from benchmarks import (bench_decode_cache, bench_error, bench_memory,
+                            bench_quality, bench_roofline, bench_speca,
+                            bench_speedup)
+    benches = [
+        ("speedup (T/m claim, §III-B)", bench_speedup.run),
+        ("error-vs-interval (TaylorSeer/HiCache/FoCa, §III-D3)", bench_error.run),
+        ("cache memory (FreqCa CRF, Eq. 52)", bench_memory.run),
+        ("speculative caching (SpeCa Eq. 57)", bench_speca.run),
+        ("adaptive quality + exact cross-KV (§III-D1, §I-C)", bench_quality.run),
+        ("beyond-paper: decode-axis caching", bench_decode_cache.run),
+        ("roofline table (from dry-run artifacts)", bench_roofline.run),
+    ]
+    import gc
+    import jax
+    failures = []
+    for name, fn in benches:
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"----- done in {time.perf_counter()-t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        # compiled eager/jit programs accumulate across benches and can
+        # exhaust host RAM (LLVM "Cannot allocate memory")
+        jax.clear_caches()
+        gc.collect()
+    print("\n==== SUMMARY ====")
+    print("failed:", failures if failures else "none — all benchmarks ran")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Batched LLM serving across the architecture zoo.
+
+    PYTHONPATH=src python examples/serving_llm.py
+
+Runs the ServingEngine (prefill + rolling-KV greedy decode) over one
+architecture from each family — dense GQA, MoE+MLA, pure SSM, hybrid — at
+smoke scale, demonstrating that decode_step/prefill and the cache
+containers work uniformly across families.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving import ServingEngine
+
+ARCHS = ["tinyllama-1.1b", "deepseek-v2-236b", "falcon-mamba-7b",
+         "zamba2-2.7b", "whisper-small"]
+
+rng = np.random.default_rng(0)
+for arch in ARCHS:
+    cfg = get_smoke_config(arch)
+    if cfg.is_encoder_decoder:
+        print(f"{arch:18s}: enc-dec — served via decode_step with exact "
+              f"cross-KV (see tests/test_models.py)")
+        continue
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(params, cfg, slots=4, cache_len=64, max_prompt=16)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=rng.integers(3, 12)))
+               for _ in range(6)]
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=12)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in out)
+    print(f"{arch:18s}: {len(out)} reqs, {toks} tokens, {toks/dt:5.1f} tok/s "
+          f"| e.g. {out[0].tokens[:8]}")
+print("OK")

@@ -1,0 +1,88 @@
+"""End-to-end driver: train a ~100M-param DiT for a few hundred steps, then
+sample from it with and without caching.
+
+    PYTHONPATH=src python examples/train_dit.py [--steps 300] [--small]
+
+The data pipeline is the synthetic class-conditional latent generator from
+repro.data (deterministic, offline).  Training uses the full substrate:
+AdamW + cosine schedule + grad clipping, checkpointing, the train loop.
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.core import make_policy
+from repro.data import latent_batches
+from repro.diffusion import (CachedDenoiser, ddim_step, linear_schedule,
+                             sample)
+from repro.train import train_loop
+from repro.train.steps import init_train_state, make_diffusion_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--small", action="store_true",
+                    help="2-layer debug model instead of ~100M")
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = get_config("dit-xl").reduced(num_layers=2, d_model=128,
+                                           dit_patch_tokens=16)
+    else:
+        # ~100M params: 12 layers x d_model 768 (DiT-B-ish)
+        cfg = get_config("dit-xl").reduced(
+            num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+            d_ff=3072, dit_patch_tokens=64, dit_in_dim=16,
+            dit_num_classes=10, vocab_size=0)
+    from repro.models import param_count
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"({param_count(cfg)/1e6:.0f}M params)")
+
+    sched = linear_schedule(1000)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step_fn = make_diffusion_train_step(cfg, sched, peak_lr=2e-4, warmup=50,
+                                        total_steps=args.steps)
+
+    lat = latent_batches(0, args.batch, cfg.dit_patch_tokens, cfg.dit_in_dim,
+                         cfg.dit_num_classes)
+
+    def batches():
+        key = jax.random.PRNGKey(2)
+        for x, y in lat:
+            key, sub = jax.random.split(key)
+            yield {"latents": jnp.asarray(x), "labels": jnp.asarray(y),
+                   "key": sub}
+
+    with tempfile.TemporaryDirectory() as d:
+        state, hist = train_loop(step_fn, state, batches(), args.steps,
+                                 log_every=max(args.steps // 10, 1),
+                                 ckpt_dir=d, ckpt_every=max(args.steps // 2, 1))
+        restored, at_step, _ = ckpt.restore(d, state)
+        print(f"checkpoint restored from step {at_step}")
+
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss: {first:.4f} -> {last:.4f}")
+    assert last < first, "training should reduce the loss"
+
+    # sample from the trained model, cached vs exact
+    ts = sched.spaced(40)
+    x_T = jax.random.normal(jax.random.PRNGKey(3),
+                            (4, cfg.dit_patch_tokens, cfg.dit_in_dim))
+    den = CachedDenoiser(state.params, cfg,
+                         make_policy("taylorseer", interval=4))
+    x0, _ = sample(den, x_T, ts, sched, step_fn=ddim_step,
+                   denoiser_state=den.init_state(4))
+    print(f"cached sample stats: mean={float(x0.mean()):.3f} "
+          f"std={float(x0.std()):.3f} finite={bool(jnp.all(jnp.isfinite(x0)))}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

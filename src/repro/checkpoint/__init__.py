@@ -1,0 +1,4 @@
+"""Dependency-free pytree checkpointing (no msgpack/orbax installed)."""
+from .store import latest_step, load_pytree, restore, save, save_pytree
+
+__all__ = ["save", "restore", "save_pytree", "load_pytree", "latest_step"]

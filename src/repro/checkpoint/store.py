@@ -1,0 +1,110 @@
+"""Pytree checkpoint store: .npz tensors + JSON treedef sidecar.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json.  Atomic via tmp+rename.
+Works for any pytree of jnp/np arrays and python scalars (kept in meta).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items.append((key, leaf))
+    return items
+
+
+def save_pytree(tree: PyTree, path: str):
+    """Serialize a pytree of arrays to <path>.npz + <path>.json.
+
+    bfloat16 (not a native numpy dtype) is stored as a uint16 bit-view with
+    the true dtype recorded in the sidecar."""
+    items = _flatten_with_paths(tree)
+    arrays, dtypes = {}, {}
+    for k, v in items:
+        arr = np.asarray(v)
+        dtypes[k] = str(arr.dtype)
+        if arr.dtype.name == "bfloat16":
+            arr = arr.view(np.uint16)
+        arrays[k] = arr
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump({"treedef": str(treedef), "keys": [k for k, _ in items],
+                   "dtypes": dtypes}, f)
+
+
+def load_pytree(tree_like: PyTree, path: str) -> PyTree:
+    """Restore into the structure of `tree_like` (shape/dtype donor)."""
+    import jax.numpy as jnp
+    data = np.load(path + ".npz")
+    items = _flatten_with_paths(tree_like)
+    leaves = []
+    for key, ref in items:
+        arr = data[key]
+        assert arr.shape == tuple(ref.shape), (key, arr.shape, ref.shape)
+        if jnp.dtype(ref.dtype).name == "bfloat16" and arr.dtype == np.uint16:
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr).astype(ref.dtype))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, extra: Optional[dict] = None,
+         keep: int = 3):
+    """Save a training checkpoint; prunes to the most recent `keep`."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    save_pytree(tree, os.path.join(tmp, "arrays"))
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "extra": extra or {}}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str):
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = _list_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: PyTree, step: Optional[int] = None):
+    """Returns (tree, step, extra) for `step` (default: latest)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoints under {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tree = load_pytree(tree_like, os.path.join(d, "arrays"))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    return tree, step, meta.get("extra", {})

@@ -1,0 +1,34 @@
+"""Config registry: `--arch <id>` resolution."""
+from .base import ArchConfig, InputShape, INPUT_SHAPES
+from . import (arctic_480b, deepseek_v2_236b, dit_xl, falcon_mamba_7b,
+               minitron_8b, pixtral_12b, qwen2_7b, qwen2p5_14b,
+               tinyllama_1p1b, whisper_small, zamba2_2p7b)
+
+_MODULES = {
+    "zamba2-2.7b": zamba2_2p7b,
+    "qwen2-7b": qwen2_7b,
+    "qwen2.5-14b": qwen2p5_14b,
+    "arctic-480b": arctic_480b,
+    "minitron-8b": minitron_8b,
+    "pixtral-12b": pixtral_12b,
+    "deepseek-v2-236b": deepseek_v2_236b,
+    "falcon-mamba-7b": falcon_mamba_7b,
+    "tinyllama-1.1b": tinyllama_1p1b,
+    "whisper-small": whisper_small,
+    "dit-xl": dit_xl,
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "dit-xl"]  # the 10 assigned
+ALL_ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; available: {ALL_ARCH_IDS}")
+    return _MODULES[arch_id].CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; available: {ALL_ARCH_IDS}")
+    return _MODULES[arch_id].SMOKE

@@ -1,0 +1,12 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000,
+    mamba_version=2, ssm_state=64, ssm_expand=2, ssm_head_dim=64,
+    hybrid_attn_every=6,          # shared attn+MLP block every 6 mamba2 layers
+    source="arXiv:2411.15242",
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,57 @@
+"""repro.core — the survey's Diffusion Caching taxonomy as a JAX library.
+
+Taxonomy map (survey Fig. 2):
+  Static            : FixedIntervalPolicy (FORA), DeltaCachePolicy (Δ-DiT),
+                      PABPolicy, FasterCacheCFG, DeepCache (structural —
+                      see repro.diffusion.pipeline)
+  Timestep-adaptive : TeaCachePolicy, MagCachePolicy, EasyCachePolicy
+  Layer-adaptive    : BlockCachePolicy, ForesightPolicy, DBCacheStack
+  Predictive        : PredictivePolicy (taylor=TaylorSeer, hermite=HiCache,
+                      ab=AB-Cache, foca=FoCa, newton=beyond-paper),
+                      FreqCaPolicy (+ CRF at MODEL granularity)
+  Hybrid            : ClusCaPolicy, SpeCaPolicy
+  Token-wise        : ToCaPolicy (Eq. 19-21)
+  Learned           : LazyDiTPolicy + train_lazy_gate (Eq. 26-27, trained
+                      in-framework on full trajectories, HarmoniCa-style)
+"""
+from .adaptive import (BlockCachePolicy, EasyCachePolicy, ForesightPolicy,
+                       MagCachePolicy, TeaCachePolicy)
+from .engine import (CachedModule, CachedStack, DBCacheStack,
+                     cache_state_bytes, compute_fraction)
+from .hybrid import ClusCaPolicy, SpeCaPolicy, kmeans
+from .metrics import (cosine_sim, mag_ratio, psnr, rel_l1, rel_l1_block,
+                      rel_l2, transform_rate)
+from .learned import (LazyDiTPolicy, gate_score, init_gate,
+                      lazy_trajectory_loss, train_lazy_gate)
+from .policy import CachePolicy, NoCachePolicy, cond_or_static, is_static_step
+from .token import ToCaPolicy
+from .predictive import (BASES, FreqCaPolicy, PredictivePolicy,
+                         forecast_from_diffs, update_diff_stack)
+from .static_policies import (DeltaCachePolicy, FasterCacheCFG,
+                              FixedIntervalPolicy, PABPolicy)
+
+POLICY_REGISTRY = {
+    "none": lambda **kw: NoCachePolicy(),
+    "fora": lambda interval=2, **kw: FixedIntervalPolicy(interval),
+    "delta_dit": lambda interval=2, **kw: DeltaCachePolicy(interval),
+    "teacache": lambda delta=0.1, **kw: TeaCachePolicy(delta),
+    "magcache": lambda delta=0.1, num_steps=50, **kw: MagCachePolicy(delta, num_steps=num_steps),
+    "easycache": lambda tau=5.0, **kw: EasyCachePolicy(tau),
+    "foresight": lambda gamma=1.0, **kw: ForesightPolicy(gamma),
+    "taylorseer": lambda interval=4, order=2, **kw: PredictivePolicy(interval, order, "taylor"),
+    "newtonseer": lambda interval=4, order=2, **kw: PredictivePolicy(interval, order, "newton"),
+    "hicache": lambda interval=4, order=2, sigma=0.5, **kw: PredictivePolicy(interval, order, "hermite", sigma),
+    "abcache": lambda interval=4, **kw: PredictivePolicy(interval, 2, "ab"),
+    "foca": lambda interval=4, **kw: PredictivePolicy(interval, 2, "foca"),
+    "freqca": lambda interval=4, cutoff=0.25, **kw: FreqCaPolicy(interval, cutoff),
+    "toca": lambda interval=4, ratio=0.25, **kw: ToCaPolicy(interval, ratio),
+    "clusca": lambda interval=4, k=16, **kw: ClusCaPolicy(interval, k),
+    "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
+}
+
+
+def make_policy(name: str, **kwargs) -> CachePolicy:
+    if name not in POLICY_REGISTRY:
+        raise KeyError(f"unknown cache policy '{name}'; "
+                       f"available: {sorted(POLICY_REGISTRY)}")
+    return POLICY_REGISTRY[name](**kwargs)

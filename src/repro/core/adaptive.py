@@ -1,0 +1,291 @@
+"""Timestep-adaptive and layer-adaptive caching policies (survey §III-D1/D2).
+
+These introduce the survey's "error checking mechanism": a cheap online
+signal decides, per step, whether to refresh the cache.  All predicates are
+traced (`lax.cond`), so a single compiled program serves every trajectory.
+
+  * TeaCachePolicy   — rel-L1 of the timestep-modulated input, polynomial
+    corrected, accumulated until threshold delta (Eq. 22-24).
+  * MagCachePolicy   — accumulated magnitude-decay error 1 - prod(gamma_i)
+    against a calibrated / analytic gamma curve (Eq. 29-30).
+  * EasyCachePolicy  — online transformation-rate gate (Eq. 31-33), fully
+    self-contained (no calibration).
+  * BlockCachePolicy — "Cache Me if You Can" layer-adaptive scheduling from a
+    calibration profile of per-block rel-L1 changes (Eq. 34-35); produces a
+    *static* per-block schedule, which is also what the roofline dry-runs
+    consume.
+  * ForesightPolicy  — warm-up-estimated per-layer threshold, then online
+    input-change gating (Eq. 40-41).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import rel_l1, rel_l1_block
+from .policy import CachePolicy
+
+
+class TeaCachePolicy(CachePolicy):
+    """TeaCache: accumulate corrected input-side change until it crosses delta.
+
+    `signals["signal"]` must carry the timestep-embedding-modulated input
+    (for DiT: AdaLN(x, t, c) of the first block); we fall back to x itself.
+    `poly` are the correction-polynomial coefficients (Eq. 23), lowest order
+    first; TeaCache fits these offline per model family — identity by
+    default.
+    """
+
+    name = "teacache"
+
+    def __init__(self, delta: float, poly: Sequence[float] = (0.0, 1.0)):
+        self.delta = float(delta)
+        self.poly = tuple(float(p) for p in poly)
+
+    def init_state(self, shape, dtype=jnp.float32, signal_shape=None):
+        return {
+            "cache": jnp.zeros(shape, dtype),
+            "prev_signal": jnp.zeros(signal_shape or shape, jnp.float32),
+            "acc": jnp.zeros((), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "n_compute": jnp.zeros((), jnp.int32),
+        }
+
+    def _correct(self, d):
+        out = jnp.zeros((), jnp.float32)
+        for i, a in enumerate(self.poly):
+            out = out + a * d**i
+        return out
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        sig = signals.get("signal", x).astype(jnp.float32)
+        d = self._correct(rel_l1(sig, state["prev_signal"]))
+        acc = state["acc"] + d
+        first = state["n"] == 0
+        refresh = jnp.logical_or(first, acc >= self.delta)
+
+        def compute(state):
+            y = compute_fn(x)
+            return y, {
+                "cache": y.astype(state["cache"].dtype),
+                "prev_signal": sig,
+                "acc": jnp.zeros((), jnp.float32),
+                "n": state["n"] + 1,
+                "n_compute": state["n_compute"] + 1,
+            }
+
+        def reuse(state):
+            new = dict(state)
+            new["acc"] = acc
+            new["prev_signal"] = sig
+            new["n"] = state["n"] + 1
+            return state["cache"].astype(x.dtype), new
+
+        return jax.lax.cond(refresh, compute, reuse, state)
+
+
+class MagCachePolicy(CachePolicy):
+    """MagCache: accumulated error eps(t) = 1 - prod(gamma_i) since the last
+    refresh (Eq. 30); gamma is the per-step residual-magnitude ratio curve,
+    either calibrated from one profiling run or the analytic default."""
+
+    name = "magcache"
+
+    def __init__(self, delta: float, gammas: Sequence[float] | None = None,
+                 num_steps: int = 50):
+        self.delta = float(delta)
+        if gammas is None:
+            # analytic default: magnitude ratio decays towards 1 late in
+            # sampling (unified amplitude decay law, survey Eq. 29-30)
+            t = np.arange(num_steps)
+            gammas = 1.0 - 0.05 * np.exp(-3.0 * t / max(num_steps - 1, 1))
+        self.gammas = jnp.asarray(np.asarray(gammas, np.float32))
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "cache": jnp.zeros(shape, dtype),
+            "prod": jnp.ones((), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "n_compute": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        step_val = jnp.asarray(step, jnp.int32)
+        g = self.gammas[jnp.clip(step_val, 0, self.gammas.shape[0] - 1)]
+        prod = state["prod"] * g
+        err = 1.0 - prod
+        refresh = jnp.logical_or(state["n"] == 0, err >= self.delta)
+
+        def compute(state):
+            y = compute_fn(x)
+            return y, {"cache": y.astype(state["cache"].dtype),
+                       "prod": jnp.ones((), jnp.float32), "n": state["n"] + 1,
+                       "n_compute": state["n_compute"] + 1}
+
+        def reuse(state):
+            return state["cache"].astype(x.dtype), {
+                "cache": state["cache"], "prod": prod, "n": state["n"] + 1,
+                "n_compute": state["n_compute"]}
+
+        return jax.lax.cond(refresh, compute, reuse, state)
+
+
+class EasyCachePolicy(CachePolicy):
+    """EasyCache: local-linearity gate.  On refresh, store the transformation
+    vector Delta = v - x (Eq. 32) and rate k (Eq. 31); on skipped steps
+    approximate v = x + Delta and accumulate the deviation estimate
+    eps_n = k * ||x_n - x_{n-1}|| / ||v_{n-1}|| (Eq. 33) until tau."""
+
+    name = "easycache"
+
+    def __init__(self, tau: float, warmup: int = 2):
+        self.tau = float(tau)
+        self.warmup = warmup
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "delta": jnp.zeros(shape, jnp.float32),
+            "k": jnp.zeros((), jnp.float32),
+            "prev_x": jnp.zeros(shape, jnp.float32),
+            "prev_v": jnp.zeros(shape, jnp.float32),
+            "acc": jnp.zeros((), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "n_compute": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        xf = x.astype(jnp.float32)
+        dx = jnp.linalg.norm((xf - state["prev_x"]).ravel())
+        v_norm = jnp.linalg.norm(state["prev_v"].ravel()) + 1e-8
+        eps = state["k"] * dx / v_norm * 100.0
+        acc = state["acc"] + eps
+        refresh = jnp.logical_or(state["n"] < self.warmup, acc >= self.tau)
+
+        def compute(state):
+            y = compute_fn(x)
+            yf = y.astype(jnp.float32)
+            dv = jnp.linalg.norm((yf - state["prev_v"]).ravel())
+            k = dv / (dx + 1e-8)
+            return y, {
+                "delta": yf - xf, "k": k, "prev_x": xf, "prev_v": yf,
+                "acc": jnp.zeros((), jnp.float32), "n": state["n"] + 1,
+                "n_compute": state["n_compute"] + 1,
+            }
+
+        def reuse(state):
+            v_hat = xf + state["delta"]
+            new = dict(state)
+            new["prev_x"] = xf
+            new["prev_v"] = v_hat
+            new["acc"] = acc
+            new["n"] = state["n"] + 1
+            return v_hat.astype(x.dtype), new
+
+        return jax.lax.cond(refresh, compute, reuse, state)
+
+
+class BlockCachePolicy(CachePolicy):
+    """Layer-adaptive static scheduling from a calibration profile.
+
+    `profile[t]` is the measured rel-L1 change of this block's output between
+    steps t-1 and t (Eq. 34) from one calibration trajectory.  The schedule
+    recomputes whenever the cumulative change since the last refresh would
+    exceed delta (Eq. 35).  The result is a static per-block compute plan —
+    cheap, robust, and exactly what the compiled roofline graphs consume.
+    """
+
+    name = "blockcache"
+
+    def __init__(self, profile: Sequence[float], delta: float):
+        self.profile = [float(p) for p in profile]
+        self.delta = float(delta)
+        self._schedule = self._build_schedule()
+
+    def _build_schedule(self) -> List[bool]:
+        sched, acc = [], 0.0
+        for t, change in enumerate(self.profile):
+            if t == 0:
+                sched.append(True)
+                acc = 0.0
+                continue
+            acc += change
+            if acc > self.delta:
+                sched.append(True)
+                acc = 0.0
+            else:
+                sched.append(False)
+        return sched
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"cache": jnp.zeros(shape, dtype),
+                "sched": jnp.asarray(self._schedule, jnp.bool_)}
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        if isinstance(step, int):
+            if self._schedule[step]:
+                y = compute_fn(x)
+                return y, {**state, "cache": y.astype(state["cache"].dtype)}
+            return state["cache"].astype(x.dtype), state
+
+        pred = state["sched"][jnp.asarray(step, jnp.int32)]
+
+        def compute(state):
+            y = compute_fn(x)
+            return y, {**state, "cache": y.astype(state["cache"].dtype)}
+
+        def reuse(state):
+            return state["cache"].astype(x.dtype), state
+
+        return jax.lax.cond(pred, compute, reuse, state)
+
+    def static_schedule(self, num_steps: int):
+        assert num_steps <= len(self._schedule)
+        return self._schedule[:num_steps]
+
+
+class ForesightPolicy(CachePolicy):
+    """Foresight: during the first `warmup` steps always compute and estimate
+    the per-layer variation scale lambda_l (Eq. 40); afterwards reuse while
+    the online input-change metric delta_l(t) stays below gamma*lambda_l
+    (Eq. 41)."""
+
+    name = "foresight"
+
+    def __init__(self, gamma: float = 1.0, warmup: int = 3):
+        self.gamma = float(gamma)
+        self.warmup = warmup
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "cache": jnp.zeros(shape, dtype),
+            "prev_in": jnp.zeros(shape, jnp.float32),
+            "lam": jnp.zeros((), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "n_compute": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        xf = x.astype(jnp.float32)
+        delta = rel_l1_block(xf, state["prev_in"])
+        in_warmup = state["n"] < self.warmup
+        refresh = jnp.logical_or(in_warmup, delta > self.gamma * state["lam"])
+
+        def compute(state):
+            y = compute_fn(x)
+            # exponentially-weighted lambda estimate (Eq. 40's decaying sum)
+            lam = jnp.where(state["n"] == 0, delta,
+                            0.9 * state["lam"] + 0.1 * delta)
+            return y, {"cache": y.astype(state["cache"].dtype),
+                       "prev_in": xf, "lam": lam, "n": state["n"] + 1,
+                       "n_compute": state["n_compute"] + 1}
+
+        def reuse(state):
+            new = dict(state)
+            new["prev_in"] = xf
+            new["n"] = state["n"] + 1
+            return state["cache"].astype(x.dtype), new
+
+        return jax.lax.cond(refresh, compute, reuse, state)

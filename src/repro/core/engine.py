@@ -1,0 +1,150 @@
+"""Cache engine: binds policies to modules / layer stacks.
+
+Granularities (survey Fig. 2 "reuse granularity" axis):
+
+  * MODEL  — one policy gates the whole backbone forward (TeaCache,
+    MagCache, EasyCache operate here).  This is also FreqCa's CRF trick
+    (Eq. 52): caching the *cumulative residual* (= final hidden state)
+    costs O(1) memory instead of O(L) per-layer caches.
+  * BLOCK  — one policy instance per transformer block, states stacked on a
+    leading layer axis and threaded through the `lax.scan` over layers
+    (BlockCache, Foresight, FORA-per-block, TaylorSeer-per-block).
+  * MODULE — separate policies for attention vs MLP (PAB's per-type ranges).
+
+`DeepCache` from the survey is a *structural composition* at this level:
+wrap only the deep sub-network (U-Net up-path, DiT mid-blocks) in a
+CachedModule while the shallow path always recomputes — see
+repro/diffusion/pipeline.py and DBCacheStack below.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .metrics import rel_l1_block
+from .policy import CachePolicy, NoCachePolicy
+
+PyTree = Any
+
+
+class CachedModule:
+    """A module fn wrapped with a cache policy.
+
+    fn: (x, *args) -> y with y.shape == policy feature shape.
+    """
+
+    def __init__(self, fn: Callable, policy: CachePolicy):
+        self.fn = fn
+        self.policy = policy
+
+    def init(self, shape, dtype=jnp.float32):
+        return self.policy.init_state(shape, dtype)
+
+    def __call__(self, state, step, x, *args, **signals):
+        return self.policy.apply(state, step, x,
+                                 lambda xx: self.fn(xx, *args), **signals)
+
+
+class CachedStack:
+    """`lax.scan` over L blocks, each block's output gated by `policy`.
+
+    block_fn: (layer_params, x, *args) -> y        (same shape as x)
+    params are stacked on a leading layer axis.
+    """
+
+    def __init__(self, block_fn: Callable, policy: CachePolicy, num_layers: int):
+        self.block_fn = block_fn
+        self.policy = policy
+        self.num_layers = num_layers
+
+    def init(self, shape, dtype=jnp.float32):
+        one = self.policy.init_state(shape, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.num_layers,) + a.shape).copy(),
+            one)
+
+    def __call__(self, states, step, x, stacked_params, *args):
+        def body(carry, inp):
+            x = carry
+            params_l, state_l = inp
+            y, state_l = self.policy.apply(
+                state_l, step, x, lambda xx: self.block_fn(params_l, xx, *args))
+            return y, state_l
+
+        y, new_states = jax.lax.scan(body, x, (stacked_params, states))
+        return y, new_states
+
+
+class DBCacheStack:
+    """DBCache (survey §III-D2): probe -> decide -> correct.
+
+    The first `front_n` blocks always compute and act as the probe: the
+    rel-L1 between the probe output and the previous step's probe output
+    decides whether the middle section reuses its cached output.  The last
+    `back_n` blocks always compute (the corrector)."""
+
+    def __init__(self, block_fn: Callable, num_layers: int, front_n: int = 2,
+                 back_n: int = 2, threshold: float = 0.05):
+        assert front_n + back_n < num_layers
+        self.block_fn = block_fn
+        self.num_layers = num_layers
+        self.front_n = front_n
+        self.back_n = back_n
+        self.threshold = float(threshold)
+
+    def init(self, shape, dtype=jnp.float32):
+        return {
+            "mid_cache": jnp.zeros(shape, dtype),
+            "prev_probe": jnp.zeros(shape, jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+        }
+
+    def _run_range(self, x, stacked_params, lo, hi, *args):
+        section = jax.tree_util.tree_map(lambda p: p[lo:hi], stacked_params)
+
+        def body(carry, params_l):
+            return self.block_fn(params_l, carry, *args), None
+
+        y, _ = jax.lax.scan(body, x, section)
+        return y
+
+    def __call__(self, state, step, x, stacked_params, *args):
+        L, F, B = self.num_layers, self.front_n, self.back_n
+        probe = self._run_range(x, stacked_params, 0, F, *args)
+        change = rel_l1_block(probe.astype(jnp.float32), state["prev_probe"])
+        refresh = jnp.logical_or(state["n"] == 0, change > self.threshold)
+
+        def compute_mid(_):
+            return self._run_range(probe, stacked_params, F, L - B, *args)
+
+        def reuse_mid(_):
+            return state["mid_cache"].astype(probe.dtype)
+
+        mid = jax.lax.cond(refresh, compute_mid, reuse_mid, None)
+        y = self._run_range(mid, stacked_params, L - B, L, *args)
+        new_state = {
+            "mid_cache": jnp.where(refresh, mid, state["mid_cache"]).astype(
+                state["mid_cache"].dtype),
+            "prev_probe": probe.astype(jnp.float32),
+            "n": state["n"] + 1,
+        }
+        return y, new_state
+
+
+# ----------------------------------------------------------------------
+# schedule utilities (used by benchmarks + roofline)
+# ----------------------------------------------------------------------
+
+def compute_fraction(schedule: Sequence[bool]) -> float:
+    """Fraction of steps doing full computation; the survey's acceleration
+    factor is ~ 1/compute_fraction (its O(T/m) claim, §III-B)."""
+    schedule = list(schedule)
+    return sum(map(bool, schedule)) / max(len(schedule), 1)
+
+
+def cache_state_bytes(state: PyTree) -> int:
+    """Total bytes held by a cache state pytree (memory benchmark)."""
+    leaves = jax.tree_util.tree_leaves(state)
+    return int(sum(l.size * l.dtype.itemsize for l in leaves))

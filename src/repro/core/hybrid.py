@@ -1,0 +1,240 @@
+"""Hybrid caching policies (survey §III-D4): multi-dimensional coordination.
+
+  * ClusCaPolicy — spatial token clustering: on refresh steps all tokens are
+    computed and K-means clustered; on cached steps only one representative
+    token per cluster is computed and its fresh value is propagated to its
+    cluster through the gamma-blend of Eq. 53-54.  Propagation uses gathers /
+    one-hot style dense ops, never scatters with dynamic shapes — TPU layout
+    friendly (DESIGN §2.2).
+  * SpeCaPolicy  — speculative Forecast-Then-Verify: a TaylorSeer draft
+    forecast (Eq. 55) is checked by a lightweight verifier that computes the
+    true module output on a small token probe and measures relative error
+    (Eq. 56); rejected drafts roll back to a full computation.  Theoretical
+    speedup S ~= 1/((1-alpha)+gamma_v) (Eq. 57) is measured in
+    benchmarks/bench_speca.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .metrics import rel_l2
+from .policy import CachePolicy
+from .predictive import forecast_from_diffs, update_diff_stack
+
+
+def kmeans(tokens: jnp.ndarray, k: int, iters: int = 5):
+    """Deterministic fixed-iteration K-means over (T, D) tokens.
+
+    Returns (assign (T,), centroids (k, D), reps (k,)) where reps[i] is the
+    token index closest to centroid i.
+    """
+    T = tokens.shape[0]
+    # deterministic init: evenly strided tokens
+    idx0 = jnp.arange(k) * (T // k)
+    cent = tokens[idx0]
+
+    def step(cent, _):
+        d2 = jnp.sum((tokens[:, None, :] - cent[None, :, :]) ** 2, -1)  # (T,k)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=tokens.dtype)  # (T,k)
+        counts = jnp.maximum(onehot.sum(0), 1.0)  # (k,)
+        cent = (onehot.T @ tokens) / counts[:, None]
+        return cent, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d2 = jnp.sum((tokens[:, None, :] - cent[None, :, :]) ** 2, -1)
+    assign = jnp.argmin(d2, axis=1)
+    # representative = closest token to each centroid
+    reps = jnp.argmin(d2, axis=0)  # (k,)
+    return assign, cent, reps
+
+
+class ClusCaPolicy(CachePolicy):
+    """Cluster-driven feature caching over (T, D) token features.
+
+    `signals["subset_fn"]` must map a (k, D) token subset through the module
+    (the engine provides it for token-wise modules such as MLPs; attention
+    modules fall back to full compute on refresh steps only).
+    """
+
+    name = "clusca"
+    is_predictive = True
+
+    def __init__(self, interval: int, k: int = 16, gamma: float = 0.7,
+                 kmeans_iters: int = 5):
+        self.interval = interval
+        self.k = k
+        self.gamma = float(gamma)
+        self.kmeans_iters = kmeans_iters
+
+    def init_state(self, shape, dtype=jnp.float32):
+        T = shape[-2]
+        return {
+            "cache": jnp.zeros(shape, dtype),
+            "assign": jnp.zeros(shape[:-2] + (T,), jnp.int32),
+            "reps": jnp.zeros(shape[:-2] + (self.k,), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, subset_fn: Optional[Callable] = None,
+              **signals):
+        from .policy import cond_or_static, is_static_step
+
+        def compute(state):
+            y = compute_fn(x)
+
+            def cluster_2d(y2):
+                assign, _, reps = kmeans(y2.astype(jnp.float32), self.k,
+                                         self.kmeans_iters)
+                return assign, reps
+
+            if y.ndim == 2:
+                assign, reps = cluster_2d(y)
+            else:  # leading batch dims -> vmap over them (flattened)
+                lead = y.shape[:-2]
+                flat = y.reshape((-1,) + y.shape[-2:])
+                assign, reps = jax.vmap(cluster_2d)(flat)
+                assign = assign.reshape(lead + assign.shape[-1:])
+                reps = reps.reshape(lead + reps.shape[-1:])
+            return y, {"cache": y.astype(state["cache"].dtype),
+                       "assign": assign, "reps": reps}
+
+        def partial(state):
+            if subset_fn is None:
+                # no token-subset path available: plain reuse
+                return state["cache"].astype(x.dtype), state
+
+            def one(x2, cache2, assign, reps):
+                x_reps = jnp.take(x2, reps, axis=0)           # (k, D)
+                y_reps = subset_fn(x_reps)                    # (k, D)
+                mu = jnp.take(y_reps, assign, axis=0)         # (T, D) gather
+                y = self.gamma * mu + (1.0 - self.gamma) * cache2.astype(mu.dtype)
+                # freshly computed representatives are exact (one-hot blend)
+                onehot = jax.nn.one_hot(reps, x2.shape[0], dtype=y.dtype)  # (k,T)
+                is_rep = jnp.clip(onehot.sum(0), 0.0, 1.0)[:, None]        # (T,1)
+                y = y * (1.0 - is_rep) + (onehot.T @ y_reps) * is_rep
+                return y
+
+            if x.ndim == 2:
+                y = one(x, state["cache"], state["assign"], state["reps"])
+            else:
+                lead = x.shape[:-2]
+                y = jax.vmap(one)(
+                    x.reshape((-1,) + x.shape[-2:]),
+                    state["cache"].reshape((-1,) + x.shape[-2:]),
+                    state["assign"].reshape((-1, x.shape[-2])),
+                    state["reps"].reshape((-1, self.k)),
+                )
+                y = y.reshape(lead + y.shape[-2:])
+            new = dict(state)
+            new["cache"] = y.astype(state["cache"].dtype)
+            return y.astype(x.dtype), new
+
+        pred = (step % self.interval == 0) if is_static_step(step) \
+            else (jnp.asarray(step, jnp.int32) % self.interval) == 0
+        return cond_or_static(pred, compute, partial, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]
+
+
+class SpeCaPolicy(CachePolicy):
+    """Speculative feature caching: TaylorSeer draft + probe verification.
+
+    `signals["subset_fn"]` maps a (P, D) probe-token subset through the
+    module; the probe is a fixed stride subset of tokens.  If unavailable,
+    verification degrades to accept-always (pure TaylorSeer).
+    """
+
+    name = "speca"
+    is_predictive = True
+
+    def __init__(self, interval: int, order: int = 2, tau: float = 0.1,
+                 probe: int = 16):
+        self.interval = interval
+        self.order = order
+        self.tau = float(tau)
+        self.probe = probe
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "diffs": jnp.zeros((self.order + 1, *shape), jnp.float32),
+            "n_valid": jnp.zeros((), jnp.int32),
+            "last_step": jnp.zeros((), jnp.int32),
+            "accepts": jnp.zeros((), jnp.int32),
+            "rejects": jnp.zeros((), jnp.int32),
+        }
+
+    def _probe_idx(self, T):
+        stride = max(T // self.probe, 1)
+        return jnp.arange(self.probe) * stride % T
+
+    def apply(self, state, step, x, compute_fn, subset_fn: Optional[Callable] = None,
+              **signals):
+        from .policy import cond_or_static, is_static_step
+        step_val = jnp.asarray(step, jnp.int32)
+
+        def full(state):
+            y = compute_fn(x)
+            return y, {**state,
+                       "diffs": update_diff_stack(state["diffs"], y),
+                       "n_valid": state["n_valid"] + 1,
+                       "last_step": step_val}
+
+        def speculate(state):
+            k = (step_val - state["last_step"]).astype(jnp.float32)
+            u = k / float(self.interval)
+            y_hat = forecast_from_diffs(state["diffs"], u, state["n_valid"],
+                                        "taylor")
+            verify_fn = signals.get("verify_fn")
+            if subset_fn is None and verify_fn is None:
+                return y_hat.astype(x.dtype), state
+
+            def accept_(state):
+                return y_hat.astype(x.dtype), {**state,
+                                               "accepts": state["accepts"] + 1}
+
+            def reject_(state):
+                y, new = full(state)
+                return y, {**new, "rejects": state["rejects"] + 1}
+
+            if verify_fn is not None:
+                # external verifier (benchmarks use the full model as an
+                # oracle; production uses a cheap probe)
+                err = verify_fn(x, y_hat.astype(x.dtype))
+                return jax.lax.cond(err <= self.tau, accept_, reject_, state)
+
+            idx = self._probe_idx(x.shape[-2])
+
+            def probe_one(x2, yh2):
+                xt = jnp.take(x2, idx, axis=0)
+                yt = subset_fn(xt)
+                return rel_l2(jnp.take(yh2, idx, axis=0), yt)
+
+            if x.ndim == 2:
+                err = probe_one(x, y_hat)
+            else:
+                errs = jax.vmap(probe_one)(
+                    x.reshape((-1,) + x.shape[-2:]),
+                    y_hat.reshape((-1,) + x.shape[-2:]))
+                err = jnp.max(errs)
+
+            def accept(state):
+                return y_hat.astype(x.dtype), {**state,
+                                               "accepts": state["accepts"] + 1}
+
+            def reject(state):
+                y, new = full(state)
+                new = {**new, "rejects": state["rejects"] + 1}
+                return y, new
+
+            return jax.lax.cond(err <= self.tau, accept, reject, state)
+
+        pred = (step % self.interval == 0) if is_static_step(step) \
+            else (step_val % self.interval) == 0
+        return cond_or_static(pred, full, speculate, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]

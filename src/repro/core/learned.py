@@ -1,0 +1,110 @@
+"""Learning-based caching (survey §III-D1/D2): LazyDiT + HarmoniCa-style
+stepwise training.
+
+LazyDiT (Eq. 26-27) prepends a linear predictor to each gated module that
+estimates the similarity between this step's output and the cached one from
+a first-order approximation  f(Y_{t-1}, Y_t) ~= <W, Z_t>  of the input
+features; computation is skipped when the predicted similarity clears a
+threshold.  The "lazy loss" (Eq. 27) rewards skipping, balanced against the
+output-distillation MSE.
+
+`train_lazy_gate` implements the HarmoniCa insight (SDT): the gate is
+trained on FULL trajectories — sampling random single steps hides the error
+accumulation the gate will face at inference — against the exact teacher
+trajectory, with the IEPO-style balance between match quality and skip
+reward.  Everything here is self-contained JAX (the published checkpoints
+are irrelevant to the systems contribution; DESIGN §9).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .metrics import cosine_sim
+from .policy import CachePolicy
+
+
+def init_gate(key, feat_dim: int):
+    """Linear similarity predictor params: s = sigmoid(<w, mean_tokens(x)> + b)."""
+    return {"w": jax.random.normal(key, (feat_dim,)) * 0.01,
+            "b": jnp.zeros(())}
+
+
+def gate_score(gate, x) -> jnp.ndarray:
+    """Predicted cross-step similarity in [0, 1].  x: (..., T, D)."""
+    z = jnp.mean(x.astype(jnp.float32), axis=tuple(range(x.ndim - 1)))
+    return jax.nn.sigmoid(jnp.dot(gate["w"], z) + gate["b"])
+
+
+class LazyDiTPolicy(CachePolicy):
+    """Skip the module when the learned gate predicts similarity > threshold."""
+
+    name = "lazydit"
+
+    def __init__(self, gate, threshold: float = 0.5):
+        self.gate = gate
+        self.threshold = float(threshold)
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"cache": jnp.zeros(shape, dtype),
+                "n": jnp.zeros((), jnp.int32),
+                "n_compute": jnp.zeros((), jnp.int32)}
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        sim = gate_score(self.gate, x)
+        refresh = jnp.logical_or(state["n"] == 0, sim <= self.threshold)
+
+        def compute(state):
+            y = compute_fn(x)
+            return y, {"cache": y.astype(state["cache"].dtype),
+                       "n": state["n"] + 1,
+                       "n_compute": state["n_compute"] + 1}
+
+        def reuse(state):
+            return state["cache"].astype(x.dtype), {**state,
+                                                    "n": state["n"] + 1}
+
+        return jax.lax.cond(refresh, compute, reuse, state)
+
+
+def lazy_trajectory_loss(gate, inputs: jnp.ndarray, outputs: jnp.ndarray,
+                         *, rho: float = 0.1, threshold: float = 0.5):
+    """HarmoniCa-style full-trajectory objective.
+
+    inputs/outputs: (T, ..., D) module inputs and exact outputs along one
+    denoising trajectory.  Simulates the gated rollout with a *soft* skip
+    decision (sigmoid relaxation, differentiable), accumulating the cache
+    exactly as inference would, and returns
+        L = mean_t || y_hat_t - y_t ||^2  -  rho * mean_t s_t      (Eq. 27)
+    """
+    T = inputs.shape[0]
+
+    def body(carry, io):
+        cache = carry
+        x_t, y_t = io
+        s = gate_score(gate, x_t)                      # soft skip prob
+        y_hat = s * cache + (1.0 - s) * y_t            # soft mixture
+        new_cache = y_hat                              # carried forward
+        err = jnp.mean((y_hat - y_t) ** 2)
+        return new_cache, (err, s)
+
+    cache0 = outputs[0]
+    _, (errs, skips) = jax.lax.scan(body, cache0, (inputs[1:], outputs[1:]))
+    return jnp.mean(errs) - rho * jnp.mean(skips)
+
+
+def train_lazy_gate(key, inputs, outputs, *, steps: int = 200, lr: float = 0.05,
+                    rho: float = 0.1):
+    """Fit the gate on one (or a batch of) exact trajectories.
+
+    Returns (gate, loss_history)."""
+    gate = init_gate(key, inputs.shape[-1])
+    loss_fn = lambda g: lazy_trajectory_loss(g, inputs, outputs, rho=rho)
+    hist = []
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(loss_fn)(gate)
+        gate = jax.tree_util.tree_map(lambda p, g: p - lr * g, gate, grads)
+        hist.append(float(loss))
+    return gate, hist

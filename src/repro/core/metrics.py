@@ -1,0 +1,53 @@
+"""Similarity / change metrics used by cache gating policies.
+
+These are the signals the surveyed methods threshold on:
+  * rel_l1     — TeaCache Eq. 22, BlockCache Eq. 34
+  * mag_ratio  — MagCache Eq. 29
+  * transform_rate — EasyCache Eq. 31
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def rel_l1(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric relative L1 difference (TeaCache Eq. 22)."""
+    num = jnp.sum(jnp.abs(a - b))
+    den = jnp.sum(jnp.abs(a)) + jnp.sum(jnp.abs(b)) + _EPS
+    return num / den
+
+
+def rel_l1_block(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One-sided relative L1 (BlockCache Eq. 34)."""
+    return jnp.sum(jnp.abs(a - b)) / (jnp.sum(jnp.abs(a)) + _EPS)
+
+
+def rel_l2(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Relative L2 error ||a-b|| / ||b|| (SpeCa verifier, Eq. 56)."""
+    return jnp.linalg.norm((a - b).ravel()) / (jnp.linalg.norm(b.ravel()) + _EPS)
+
+
+def mag_ratio(r_t: jnp.ndarray, r_prev: jnp.ndarray) -> jnp.ndarray:
+    """Magnitude ratio of adjacent residuals (MagCache Eq. 29)."""
+    return jnp.linalg.norm(r_t.ravel()) / (jnp.linalg.norm(r_prev.ravel()) + _EPS)
+
+
+def transform_rate(v_t, v_prev, x_t, x_prev) -> jnp.ndarray:
+    """Relative transformation rate k_t (EasyCache Eq. 31)."""
+    num = jnp.linalg.norm((v_t - v_prev).ravel())
+    den = jnp.linalg.norm((x_t - x_prev).ravel()) + _EPS
+    return num / den
+
+
+def cosine_sim(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.ravel()
+    b = b.ravel()
+    return jnp.dot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + _EPS)
+
+
+def psnr(a: jnp.ndarray, b: jnp.ndarray, data_range: float = 2.0) -> jnp.ndarray:
+    """Peak signal-to-noise ratio, used by the quality benchmarks."""
+    mse = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(data_range**2 / (mse + _EPS))

@@ -1,0 +1,84 @@
+"""Cache policy protocol.
+
+The survey's unified cache operator (Eq. 14-15):
+
+    C_t^l := F^l(x_t)                      (compute & store)
+    F^l(x_{t+k}) ~= A(C, k)                (approximate for k = 1..N-1)
+
+where A is identity reuse for static caching, a gated reuse for
+timestep/layer-adaptive caching, and a polynomial forecast for predictive
+caching ("Cache-Then-Forecast").
+
+Every policy is a stateless object holding static hyper-parameters; the
+mutable cache lives in a pytree `state` threaded through `apply`:
+
+    y, state = policy.apply(state, step, x, compute_fn, **signals)
+
+`compute_fn(x)` performs the real module forward.  `step` may be a Python
+int (static scheduling — the branch is resolved at trace time and XLA sees
+only the computations that actually happen: this is the mode used for the
+roofline dry-runs) or a traced int32 (dynamic scheduling — the decision is
+a `lax.cond` over runtime signals).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+ComputeFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def is_static_step(step) -> bool:
+    """True when `step` is a concrete Python int (trace-time scheduling)."""
+    return isinstance(step, int)
+
+
+def cond_or_static(pred, true_fn, false_fn, *operands):
+    """`lax.cond` that collapses to a Python branch for concrete predicates."""
+    if isinstance(pred, bool):
+        return true_fn(*operands) if pred else false_fn(*operands)
+    return jax.lax.cond(pred, true_fn, false_fn, *operands)
+
+
+class CachePolicy:
+    """Base class; subclasses implement init_state/apply."""
+
+    name: str = "base"
+    #: does approximate() return the cached value verbatim (static reuse)?
+    is_predictive: bool = False
+
+    def init_state(self, shape, dtype=jnp.float32) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def apply(self, state, step, x, compute_fn: ComputeFn, **signals):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # introspection used by benchmarks: how many full computes would a
+    # static variant of this policy issue over T steps?
+    # ------------------------------------------------------------------
+    def static_schedule(self, num_steps: int):
+        """Return list[bool] (compute?) if the policy is statically
+        schedulable, else None."""
+        return None
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"{type(self).__name__}()"
+
+
+class NoCachePolicy(CachePolicy):
+    """Always compute — the exact baseline every benchmark compares against."""
+
+    name = "none"
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {}
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        return compute_fn(x), state
+
+    def static_schedule(self, num_steps: int):
+        return [True] * num_steps

@@ -1,0 +1,237 @@
+"""Predictive ("Cache-Then-Forecast") policies — survey §III-D3.
+
+All of TaylorSeer / HiCache / AB-Cache / FoCa share one state layout: a
+finite-difference stack over the features computed at the last few *full*
+steps, maintained exactly as TaylorSeer does:
+
+    d[0] <- F                    (freshly computed feature)
+    d[i] <- d[i-1] - d_old[i-1]  (Newton forward differences)
+
+plus `n_valid` (how many computes have happened — early forecasts must not
+use unwarmed high orders) and `interval` (spacing, in steps, between the two
+most recent computes, used to normalise the elapsed offset u = k/interval).
+
+The forecast bases:
+
+  * taylor  (TaylorSeer, Eq. 42):      y ~= sum_i d[i] * u^i / i!
+  * newton  (beyond-paper):            y ~= sum_i d[i] * binom(u, i)
+      -- exact for degree-<=m polynomial trajectories sampled on the grid;
+         strictly dominates the Taylor form (see tests/test_predictive.py).
+  * hermite (HiCache, Eq. 47):         y ~= d[0] + sum_{i>=1} d[i]/i! * Ht_i(u),
+      Ht_i(x) = sigma^i * H_i(sigma * x)   (physicists' Hermite, contracted)
+  * ab      (AB-Cache, Eq. 45, 2nd order Adams-Bashforth):
+      y ~= d[0] + u * (d[1] + d[2]/2)
+  * foca    (FoCa, Eq. 48): BDF2 predictor + Heun trapezoidal corrector,
+      iterated k times on the feature ODE.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .policy import CachePolicy, cond_or_static, is_static_step
+
+BASES = ("taylor", "newton", "hermite", "ab", "foca")
+
+
+def _hermite_poly(i: int, x):
+    """Physicists' Hermite H_i(x), small fixed order — unrolled recurrence."""
+    h_prev, h = jnp.ones_like(x), 2.0 * x
+    if i == 0:
+        return h_prev
+    for _ in range(i - 1):
+        h_prev, h = h, 2.0 * x * h - 2.0 * (_ + 1) * h_prev
+    return h
+
+
+def update_diff_stack(diffs: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Shift a (order+1, ...) finite-difference stack with a new sample."""
+    order = diffs.shape[0] - 1
+    new = [y.astype(diffs.dtype)]
+    for i in range(1, order + 1):
+        new.append(new[i - 1] - diffs[i - 1])
+    return jnp.stack(new, axis=0)
+
+
+def forecast_from_diffs(diffs, u, n_valid, basis: str = "taylor", sigma: float = 0.5):
+    """Evaluate the chosen basis at normalised elapsed offset u (scalar)."""
+    order = diffs.shape[0] - 1
+    u = jnp.asarray(u, jnp.float32)
+
+    if basis == "foca":
+        return _foca_forecast(diffs, u, n_valid)
+
+    coeffs = []
+    for i in range(order + 1):
+        if basis == "taylor":
+            c = u**i / math.factorial(i)
+        elif basis == "newton":
+            # backward-difference Newton: the stack holds nabla^i F at the
+            # newest grid point, so F(t0 + u*N) = sum_i nabla^i F * binom(u+i-1, i)
+            c = jnp.ones(())
+            for j in range(i):
+                c = c * (u + j)
+            c = c / math.factorial(i)
+        elif basis == "hermite":
+            if i == 0:
+                c = jnp.ones(())
+            else:
+                c = (sigma**i) * _hermite_poly(i, sigma * u) / math.factorial(i)
+        elif basis == "ab":
+            c = {0: jnp.ones(()), 1: u, 2: 0.5 * u}.get(i, jnp.zeros(()))
+        else:  # pragma: no cover
+            raise ValueError(f"unknown basis {basis}")
+        # orders beyond the number of observed computes are invalid -> mask
+        valid = (jnp.asarray(n_valid) > i).astype(jnp.float32)
+        coeffs.append(c * valid)
+    coeffs = jnp.stack(coeffs)  # (order+1,)
+    flat = diffs.reshape(order + 1, -1).astype(jnp.float32)
+    out = jnp.tensordot(coeffs, flat, axes=1)
+    return out.reshape(diffs.shape[1:])
+
+
+def _foca_forecast(diffs, u, n_valid):
+    """FoCa: BDF2 predict + Heun correct, iterated ceil(u) unit steps.
+
+    f_k   = d[0], f_{k-1} = d[0] - d[1]; derivative estimate f'_k = d[1]
+    (unit grid).  Each unit step:
+        pred  = 4/3 f_k - 1/3 f_{k-1} + 2/3 f'_k          (BDF2, Eq. 48)
+        f'_pred = pred - f_k                               (local slope)
+        next  = f_k + (f'_k + f'_pred)/2                   (Heun corrector)
+    Falls back to reuse until two computes have been seen.
+    """
+    f_k = diffs[0].astype(jnp.float32)
+    f_km1 = (diffs[0] - diffs[1]).astype(jnp.float32)
+    n_steps = jnp.maximum(jnp.ceil(u).astype(jnp.int32), 0)
+
+    def body(_, carry):
+        f_k, f_km1 = carry
+        fp = f_k - f_km1
+        pred = 4.0 / 3.0 * f_k - 1.0 / 3.0 * f_km1 + 2.0 / 3.0 * fp
+        fp_pred = pred - f_k
+        nxt = f_k + 0.5 * (fp + fp_pred)
+        return nxt, f_k
+
+    # u is a traced scalar: bound the loop by a static max and mask.
+    MAX_STEPS = 64
+    def masked_body(i, carry):
+        new = body(i, carry)
+        take = i < n_steps
+        return (jnp.where(take, new[0], carry[0]), jnp.where(take, new[1], carry[1]))
+
+    out, _ = jax.lax.fori_loop(0, MAX_STEPS, masked_body, (f_k, f_km1))
+    # without >=2 computes, fall back to plain reuse
+    return jnp.where(jnp.asarray(n_valid) >= 2, out, f_k)
+
+
+class PredictivePolicy(CachePolicy):
+    """TaylorSeer / HiCache / AB-Cache / FoCa under one roof."""
+
+    is_predictive = True
+
+    def __init__(self, interval: int, order: int = 2, basis: str = "taylor",
+                 sigma: float = 0.5):
+        assert basis in BASES, basis
+        assert order >= 1
+        self.interval = interval
+        self.order = order
+        self.basis = basis
+        self.sigma = sigma
+        self.name = {"taylor": "taylorseer", "newton": "newtonseer",
+                     "hermite": "hicache", "ab": "abcache", "foca": "foca"}[basis]
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "diffs": jnp.zeros((self.order + 1, *shape), dtype),
+            "n_valid": jnp.zeros((), jnp.int32),
+            "last_step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        step_val = jnp.asarray(step, jnp.int32)
+
+        def compute(state):
+            y = compute_fn(x)
+            return y, {
+                "diffs": update_diff_stack(state["diffs"], y),
+                "n_valid": state["n_valid"] + 1,
+                "last_step": step_val,
+            }
+
+        def forecast(state):
+            k = (step_val - state["last_step"]).astype(jnp.float32)
+            u = k / float(self.interval)
+            y = forecast_from_diffs(state["diffs"], u, state["n_valid"],
+                                    self.basis, self.sigma)
+            return y.astype(x.dtype), state
+
+        pred = (step % self.interval == 0) if is_static_step(step) else (step_val % self.interval) == 0
+        return cond_or_static(pred, compute, forecast, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]
+
+
+class FreqCaPolicy(CachePolicy):
+    """FreqCa (Eq. 49-51): split the feature along the token axis into low and
+    high frequency bands; the low band is reused verbatim (high cross-step
+    similarity), the high band is forecast with a 2nd-order Hermite step
+    (smooth temporal evolution)."""
+
+    is_predictive = True
+    name = "freqca"
+
+    def __init__(self, interval: int, cutoff: float = 0.25, sigma: float = 0.5,
+                 axis: int = -2):
+        self.interval = interval
+        self.cutoff = cutoff
+        self.sigma = sigma
+        self.axis = axis
+
+    def _split(self, y):
+        n = y.shape[self.axis]
+        f = jnp.fft.rfft(y.astype(jnp.float32), axis=self.axis)
+        k = jnp.arange(f.shape[self.axis])
+        keep = (k <= max(int(self.cutoff * n // 2), 1)).astype(f.dtype)
+        shape = [1] * y.ndim
+        shape[self.axis] = f.shape[self.axis]
+        keep = keep.reshape(shape)
+        low = jnp.fft.irfft(f * keep, n=n, axis=self.axis)
+        return low, y.astype(jnp.float32) - low
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "low": jnp.zeros(shape, jnp.float32),
+            "high_diffs": jnp.zeros((3, *shape), jnp.float32),
+            "n_valid": jnp.zeros((), jnp.int32),
+            "last_step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        step_val = jnp.asarray(step, jnp.int32)
+
+        def compute(state):
+            y = compute_fn(x)
+            low, high = self._split(y)
+            return y, {
+                "low": low,
+                "high_diffs": update_diff_stack(state["high_diffs"], high),
+                "n_valid": state["n_valid"] + 1,
+                "last_step": step_val,
+            }
+
+        def forecast(state):
+            k = (step_val - state["last_step"]).astype(jnp.float32)
+            u = k / float(self.interval)
+            high = forecast_from_diffs(state["high_diffs"], u, state["n_valid"],
+                                       "hermite", self.sigma)
+            return (state["low"] + high).astype(x.dtype), state
+
+        pred = (step % self.interval == 0) if is_static_step(step) else (step_val % self.interval) == 0
+        return cond_or_static(pred, compute, forecast, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]

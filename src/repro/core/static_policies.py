@@ -1,0 +1,136 @@
+"""Static caching policies (survey §III-C).
+
+Fixed, content-independent schedules:
+
+  * FixedIntervalPolicy  — FORA: full compute every N steps, verbatim reuse
+    in between (Eq. 14-15).
+  * DeltaCachePolicy     — Δ-DiT: cache the residual F(x) - x instead of the
+    absolute feature, so reuse at step t+k incorporates the fresh input:
+    F(x_{t+k}) ~= x_{t+k} + (F(x_t) - x_t).
+  * PABPolicy            — Pyramid Attention Broadcast: per-module-type
+    broadcast ranges (a FixedInterval whose N depends on the module class).
+  * FasterCacheCFG       — reuse of the unconditional CFG branch with a
+    linearly increasing blend weight w(t).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from .policy import CachePolicy, cond_or_static, is_static_step
+
+
+class FixedIntervalPolicy(CachePolicy):
+    """FORA-style: compute at steps {0, N, 2N, ...}, reuse otherwise."""
+
+    name = "fora"
+
+    def __init__(self, interval: int):
+        assert interval >= 1
+        self.interval = interval
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"cache": jnp.zeros(shape, dtype)}
+
+    def _should_compute(self, step):
+        if is_static_step(step):
+            return step % self.interval == 0
+        return (step % self.interval) == 0
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        def compute(state):
+            y = compute_fn(x)
+            return y, {"cache": y.astype(state["cache"].dtype)}
+
+        def reuse(state):
+            return state["cache"].astype(x.dtype), state
+
+        return cond_or_static(self._should_compute(step), compute, reuse, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]
+
+
+class DeltaCachePolicy(CachePolicy):
+    """Δ-DiT residual caching: store F(x)-x, reuse as x' + Δ."""
+
+    name = "delta_dit"
+
+    def __init__(self, interval: int):
+        assert interval >= 1
+        self.interval = interval
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {"delta": jnp.zeros(shape, dtype)}
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        def compute(state):
+            y = compute_fn(x)
+            return y, {"delta": (y - x).astype(state["delta"].dtype)}
+
+        def reuse(state):
+            return x + state["delta"].astype(x.dtype), state
+
+        pred = (step % self.interval == 0) if is_static_step(step) else (step % self.interval) == 0
+        return cond_or_static(pred, compute, reuse, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]
+
+
+class PABPolicy(FixedIntervalPolicy):
+    """Pyramid Attention Broadcast: the broadcast range (=interval) is chosen
+    per module *type*; spatial attention gets the smallest range, cross
+    attention the largest.  Instantiate one PABPolicy per module with the
+    range looked up from `ranges`."""
+
+    name = "pab"
+
+    RANGES = {"spatial_attn": 2, "temporal_attn": 4, "cross_attn": 6, "mlp": 4}
+
+    def __init__(self, module_type: str, ranges: Dict[str, int] | None = None):
+        ranges = dict(self.RANGES if ranges is None else ranges)
+        super().__init__(ranges[module_type])
+        self.module_type = module_type
+
+
+class FasterCacheCFG(CachePolicy):
+    """FasterCache's CFG-branch reuse.
+
+    The unconditional branch output is cached; on reuse steps it is
+    reconstructed as a blend of the two most recent cached outputs with a
+    weight w(t) that increases linearly over the trajectory, preserving the
+    slow drift of the unconditional stream (survey §III-C)."""
+
+    name = "fastercache_cfg"
+
+    def __init__(self, interval: int, num_steps: int):
+        self.interval = interval
+        self.num_steps = num_steps
+
+    def init_state(self, shape, dtype=jnp.float32):
+        return {
+            "prev": jnp.zeros(shape, dtype),
+            "prev2": jnp.zeros(shape, dtype),
+        }
+
+    def apply(self, state, step, x, compute_fn, **signals):
+        def compute(state):
+            y = compute_fn(x)
+            return y, {"prev": y.astype(state["prev"].dtype), "prev2": state["prev"]}
+
+        def reuse(state):
+            if is_static_step(step):
+                w = jnp.asarray(step / max(self.num_steps - 1, 1), x.dtype)
+            else:
+                w = step.astype(x.dtype) / max(self.num_steps - 1, 1)
+            # extrapolated blend: prev + w * (prev - prev2)
+            y = state["prev"] + w * (state["prev"] - state["prev2"])
+            return y.astype(x.dtype), state
+
+        pred = (step % self.interval == 0) if is_static_step(step) else (step % self.interval) == 0
+        return cond_or_static(pred, compute, reuse, state)
+
+    def static_schedule(self, num_steps: int):
+        return [s % self.interval == 0 for s in range(num_steps)]

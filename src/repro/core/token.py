@@ -1,0 +1,112 @@
+"""ToCa — token-wise feature caching (survey §III-C, Eq. 19-21).
+
+Different tokens tolerate caching differently.  ToCa scores every token
+from two perspectives and recomputes only the top-R% most cache-sensitive
+tokens each skipped step, reusing the cached features for the rest:
+
+  s1  temporal redundancy   — |x_t - x_prev| per token (stable tokens cache
+                              well)
+  s2  error propagation     — attention-received weight per token (heavily
+                              attended tokens spread their cache error; we
+                              use the feature norm as the attention-free
+                              proxy the paper's V2 suggests)
+  s3  cache staleness       — steps since this token was last recomputed
+                              (Eq. 21's r_t dimension)
+  s4  spatial prior         — uniform stride so every region refreshes
+
+Score S(x_i) = Σ λ_j s_j(x_i) (Eq. 19); the LOWEST-scoring tokens are the
+cache candidates (Eq. 20), i.e. we recompute the top scores.
+
+TPU adaptation (DESIGN §2.2): the compute-subset is materialized with a
+gather and merged back with a dense one-hot scatter-free `where` on a
+padded token mask — no irregular scatter in the hot path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .policy import CachePolicy, cond_or_static, is_static_step
+
+
+class ToCaPolicy(CachePolicy):
+    """Token-wise caching for (..., T, D) features.
+
+    On refresh steps (every `interval`) the whole module computes and the
+    cache refills.  In between, the `ratio` most cache-sensitive tokens are
+    recomputed through `subset_fn` (falling back to full compute when the
+    module is not token-local) and the rest reuse the cache.
+    """
+
+    name = "toca"
+
+    def __init__(self, interval: int = 4, ratio: float = 0.25,
+                 lambdas: Sequence[float] = (1.0, 0.5, 0.5, 0.25)):
+        assert 0.0 < ratio <= 1.0
+        self.interval = interval
+        self.ratio = ratio
+        self.lambdas = tuple(float(l) for l in lambdas)
+
+    def init_state(self, shape, dtype=jnp.float32):
+        *lead, T, D = shape
+        return {
+            "cache": jnp.zeros(shape, dtype),
+            "prev_in": jnp.zeros(shape, jnp.float32),
+            "stale": jnp.zeros((*lead, T), jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------
+    def scores(self, state, x) -> jnp.ndarray:
+        """(..., T) composite cache-sensitivity score (higher = recompute)."""
+        xf = x.astype(jnp.float32)
+        T = x.shape[-2]
+        s1 = jnp.mean(jnp.abs(xf - state["prev_in"]), -1)     # temporal change
+        s2 = jnp.linalg.norm(xf, axis=-1) / (x.shape[-1] ** 0.5)  # influence
+        s3 = state["stale"]                                   # staleness
+        stride = max(int(1.0 / self.ratio), 1)
+        s4 = (jnp.arange(T) % stride == 0).astype(jnp.float32)
+        s4 = jnp.broadcast_to(s4, s1.shape)
+        l1, l2, l3, l4 = self.lambdas
+        return l1 * s1 + l2 * s2 + l3 * s3 + l4 * s4
+
+    def apply(self, state, step, x, compute_fn,
+              subset_fn: Optional[Callable] = None, **signals):
+        T = x.shape[-2]
+        k = max(int(self.ratio * T), 1)
+        xf = x.astype(jnp.float32)
+
+        def full(state):
+            y = compute_fn(x)
+            return y, {
+                "cache": y.astype(state["cache"].dtype),
+                "prev_in": xf,
+                "stale": jnp.zeros_like(state["stale"]),
+                "n": state["n"] + 1,
+            }
+
+        def partial(state):
+            sc = self.scores(state, x)                        # (..., T)
+            thresh = -jnp.sort(-sc, axis=-1)[..., k - 1:k]
+            recompute = sc >= thresh                          # (..., T) bool
+            y_full = compute_fn(x)  # token-local modules could use subset_fn
+            if subset_fn is not None:
+                y_full = subset_fn(x, recompute)
+            y = jnp.where(recompute[..., None], y_full,
+                          state["cache"].astype(y_full.dtype))
+            return y, {
+                "cache": y.astype(state["cache"].dtype),
+                "prev_in": xf,
+                "stale": jnp.where(recompute, 0.0, state["stale"] + 1.0),
+                "n": state["n"] + 1,
+            }
+
+        pred = (step % self.interval == 0) if is_static_step(step) \
+            else (jnp.asarray(step, jnp.int32) % self.interval) == 0
+        return cond_or_static(pred, full, partial, state)
+
+    def static_schedule(self, num_steps: int):
+        # fraction view: full steps + ratio-weighted partial steps
+        return [s % self.interval == 0 for s in range(num_steps)]

@@ -1,0 +1,23 @@
+"""repro.diffusion — noise schedules, samplers, CFG and the cached pipeline.
+
+This is the survey's home domain: every caching claim in the paper is made
+on an iterative denoising trajectory.  The subpackage provides
+
+  schedules  — DDPM beta schedules (linear/cosine), alpha-bar tables, and
+               the rectified-flow linear path (survey §III-A, Eq. 1-10)
+  samplers   — DDPM ancestral, DDIM, DPM-Solver++(2M), rectified-flow Euler
+  pipeline   — CachedDenoiser: binds a cache policy (repro.core) to a DiT
+               backbone at MODEL / BLOCK / DEEPCACHE granularity, with
+               classifier-free guidance and the FasterCache CFG-delta trick
+"""
+from .schedules import (NoiseSchedule, cosine_schedule, linear_schedule,
+                        rectified_flow_times)
+from .samplers import (ddim_step, ddpm_step, dpmpp_2m_step, rf_euler_step,
+                       sample)
+from .pipeline import CachedDenoiser, cfg_denoise_fn
+
+__all__ = [
+    "NoiseSchedule", "linear_schedule", "cosine_schedule",
+    "rectified_flow_times", "ddpm_step", "ddim_step", "dpmpp_2m_step",
+    "rf_euler_step", "sample", "CachedDenoiser", "cfg_denoise_fn",
+]

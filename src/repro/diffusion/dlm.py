@@ -1,0 +1,91 @@
+"""Discrete diffusion language model (LLaDA-style) with feature caching —
+the survey's §IV-F application (dLLM-Cache) built on the zoo's transformer.
+
+Generation is iterative mask-denoising: start from an all-[MASK] canvas,
+at each of T steps run the (bidirectional) transformer over the full
+canvas, then commit the highest-confidence fraction of still-masked
+positions.  Each step is a full forward pass over the same canvas — exactly
+the iterative-inference redundancy the survey's cache operator (Eq. 14-15)
+exploits: adjacent steps differ in a few committed tokens, so logits evolve
+smoothly and can be reused / forecast between full computations
+(dLLM-Cache reports 8x speedups from this structure).
+
+The mask token id is `vocab_size - 1` by convention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CachePolicy, NoCachePolicy
+from repro.models import transformer
+
+
+def dlm_forward(params, tokens, cfg):
+    """Bidirectional forward (window=0, non-causal) for mask-denoising.
+
+    Reuses the zoo transformer with causal masking disabled by passing
+    positions that make every key visible: we simply run the causal model
+    twice (left-to-right on tokens and on the reversed canvas) and average
+    logits — a cheap bidirectionalization that needs no new weights."""
+    logits_f, _ = transformer.forward(params, tokens, cfg)
+    logits_b, _ = transformer.forward(params, tokens[:, ::-1], cfg)
+    return 0.5 * (logits_f + logits_b[:, ::-1])
+
+
+def dlm_generate(params, cfg, *, batch: int, seq_len: int, num_steps: int = 8,
+                 policy: Optional[CachePolicy] = None, key=None,
+                 temperature: float = 0.0):
+    """Mask-denoising generation under an optional cache policy.
+
+    Returns (tokens (B,S) int32, n_full_computes)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    policy = policy or NoCachePolicy()
+    mask_id = cfg.vocab_size - 1
+    canvas = jnp.full((batch, seq_len), mask_id, jnp.int32)
+    try:   # TeaCache tracks the (B,S) occupancy signal separately
+        state = policy.init_state((batch, seq_len, cfg.vocab_size),
+                                  signal_shape=(batch, seq_len))
+    except TypeError:
+        state = policy.init_state((batch, seq_len, cfg.vocab_size))
+    n_computed = 0
+
+    for step in range(num_steps):
+        computed = {"hit": False}
+
+        def compute_fn(_x, _canvas=canvas):
+            computed["hit"] = True
+            return dlm_forward(params, _canvas, cfg)
+
+        # signal = the canvas embedding occupancy (changes as tokens commit)
+        sig = (canvas != mask_id).astype(jnp.float32)
+        logits, state = policy.apply(
+            state, step, canvas.astype(jnp.float32)[..., None]
+            * jnp.ones((1, 1, cfg.vocab_size)), compute_fn,
+            signal=sig)
+        n_computed += int(computed["hit"])
+
+        # commit the most confident still-masked fraction (cosine schedule)
+        frac_keep = float(jnp.cos((step + 1) / num_steps * jnp.pi / 2))
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        conf = jnp.max(probs, -1)
+        pred = jnp.argmax(probs, -1).astype(jnp.int32)
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            pred = jax.random.categorical(
+                sub, logits.astype(jnp.float32) / temperature, -1).astype(jnp.int32)
+
+        still_masked = canvas == mask_id
+        conf = jnp.where(still_masked, conf, -jnp.inf)
+        n_mask = int(jnp.sum(still_masked[0]))
+        n_commit = max(n_mask - int(frac_keep * seq_len), 1)
+        # per-row top-n_commit confident positions
+        thresh = -jnp.sort(-conf, axis=-1)[:, n_commit - 1:n_commit]
+        commit = still_masked & (conf >= thresh)
+        canvas = jnp.where(commit, pred, canvas)
+
+    # any residual masks: fill greedily
+    canvas = jnp.where(canvas == mask_id, pred, canvas)
+    return canvas, n_computed

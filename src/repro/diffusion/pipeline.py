@@ -1,0 +1,155 @@
+"""CachedDenoiser — binds repro.core cache policies to the DiT backbone.
+
+This is the integration point the whole survey is about: the denoiser is an
+iterative map eps_hat = F(x_t, t, c) and the cache policy decides, per
+(step, module), between COMPUTE / REUSE / FORECAST.
+
+Granularities (survey Fig. 2 reuse-granularity axis):
+
+  MODEL     — one policy gates the full backbone output.  TeaCache's
+              input-side signal (the AdaLN-modulated first-block input,
+              Eq. 22) is wired through automatically.  This granularity is
+              also FreqCa's CRF memory trick: the cache holds one tensor
+              regardless of depth (Eq. 52).
+  BLOCK     — one policy state per DiT block threaded through the layer scan
+              (FORA / Δ-DiT / TaylorSeer per-block operation).
+  DEEPCACHE — structural split: the first `shallow_n` blocks always compute
+              (DeepCache's "downsampling path"), the remaining deep section
+              is gated as one unit (its "upsampling path").  The adaption of
+              DeepCache's U-Net insight to the isotropic DiT stack follows
+              Δ-DiT's front/rear analysis.
+
+Classifier-free guidance (cfg_scale > 0) doubles the compute; the
+`cfg_policy` slot accepts FasterCacheCFG to reuse the unconditional branch
+(survey §III-C).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CachePolicy, CachedStack, NoCachePolicy)
+from repro.models import dit
+
+PyTree = Any
+
+
+class CachedDenoiser:
+    """eps_hat = denoiser(state, i, x, t); state threads the cache pytrees."""
+
+    def __init__(self, params, cfg, policy: Optional[CachePolicy] = None,
+                 granularity: str = "model", shallow_n: int = 4,
+                 cfg_scale: float = 0.0, cfg_policy: Optional[CachePolicy] = None,
+                 class_label: int = 0):
+        assert granularity in ("model", "block", "deepcache")
+        self.params = params
+        self.cfg = cfg
+        self.policy = policy or NoCachePolicy()
+        self.granularity = granularity
+        self.shallow_n = shallow_n
+        self.cfg_scale = float(cfg_scale)
+        self.cfg_policy = cfg_policy
+        self.class_label = class_label
+        if granularity == "block":
+            self._stack = CachedStack(
+                lambda p, x, c: dit.dit_block(p, x, c, cfg),
+                self.policy, cfg.num_layers)
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int) -> PyTree:
+        cfgm = self.cfg
+        feat = (batch, cfgm.dit_patch_tokens, cfgm.d_model)
+        eps_shape = (batch, cfgm.dit_patch_tokens, cfgm.dit_in_dim)
+        if self.granularity == "model":
+            try:  # TeaCache tracks an input-side signal of a different shape
+                state = {"policy": self.policy.init_state(
+                    eps_shape, signal_shape=feat)}
+            except TypeError:
+                state = {"policy": self.policy.init_state(eps_shape)}
+        elif self.granularity == "block":
+            state = {"policy": self._stack.init(feat)}
+        else:  # deepcache: one cache over the deep section's hidden output
+            state = {"policy": self.policy.init_state(feat)}
+        if self.cfg_policy is not None:
+            state["cfg"] = self.cfg_policy.init_state(eps_shape)
+        return state
+
+    # ------------------------------------------------------------------
+    def _backbone(self, x_lat, t_vec, y, state, step):
+        """One conditional forward under the configured granularity.
+
+        Returns (eps_hat, new_policy_state)."""
+        params, cfgm = self.params, self.cfg
+
+        if self.granularity == "model":
+            def compute_fn(lat):
+                return dit.forward(params, lat, t_vec, y, cfgm)
+
+            # TeaCache's signal: timestep-modulated first-block input
+            h, c = dit.embed_patches(params, x_lat, t_vec, y, cfgm)
+            sig = dit.modulated_signal(params, h, c, cfgm)
+            return self.policy.apply(state, step, x_lat, compute_fn,
+                                     signal=sig)
+
+        h, c = dit.embed_patches(params, x_lat, t_vec, y, cfgm)
+        if self.granularity == "block":
+            h, new_state = self._stack(state, step, h, params["blocks"], c)
+            return dit.final_layer(params, h, c, cfgm), new_state
+
+        # deepcache split
+        F = self.shallow_n
+        shallow = jax.tree_util.tree_map(lambda a: a[:F], params["blocks"])
+        deep = jax.tree_util.tree_map(lambda a: a[F:], params["blocks"])
+
+        def run(h, stacked):
+            def body(h, p):
+                return dit.dit_block(p, h, c, cfgm), None
+            h, _ = jax.lax.scan(body, h, stacked)
+            return h
+
+        h = run(h, shallow)
+        h, new_state = self.policy.apply(state, step, h,
+                                         lambda hh: run(hh, deep))
+        return dit.final_layer(params, h, c, cfgm), new_state
+
+    # ------------------------------------------------------------------
+    def __call__(self, state, step, x_lat, t_vec):
+        B = x_lat.shape[0]
+        state = state if state is not None else self.init_state(B)
+        y_cond = jnp.full((B,), self.class_label, jnp.int32)
+        eps_c, pol_state = self._backbone(x_lat, t_vec, y_cond, state["policy"],
+                                          step)
+        new_state = {"policy": pol_state}
+
+        if self.cfg_scale > 0.0:
+            y_null = jnp.full((B,), self.cfg.dit_num_classes, jnp.int32)
+            if self.cfg_policy is not None:
+                # unconditional branch gated by the CFG policy; its compute_fn
+                # runs a fresh (non-caching) backbone pass
+                def plain_uncond(lat):
+                    return dit.forward(self.params, lat, t_vec, y_null, self.cfg)
+
+                eps_u, cstate = self.cfg_policy.apply(state["cfg"], step, x_lat,
+                                                      plain_uncond)
+                new_state["cfg"] = cstate
+            else:
+                eps_u = dit.forward(self.params, x_lat, t_vec, y_null, self.cfg)
+            eps_c = eps_u + self.cfg_scale * (eps_c - eps_u)
+
+        return eps_c, new_state
+
+
+def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0):
+    """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u)."""
+    def fn(state, step, x, t_vec):
+        B = x.shape[0]
+        y_c = jnp.full((B,), class_label, jnp.int32)
+        y_u = jnp.full((B,), cfg.dit_num_classes, jnp.int32)
+        e_c = dit.forward(params, x, t_vec, y_c, cfg)
+        if cfg_scale <= 0.0:
+            return e_c, state
+        e_u = dit.forward(params, x, t_vec, y_u, cfg)
+        return e_u + cfg_scale * (e_c - e_u), state
+    return fn

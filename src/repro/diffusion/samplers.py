@@ -1,0 +1,121 @@
+"""Reverse-process samplers (survey §II-D, §III-A).
+
+Every sampler is a pure single-step function
+
+    x_{t-1}, extra = step(x_t, eps_hat, i, timesteps, sched, key, extra)
+
+driven by the generic `sample()` loop.  The loop is a *Python* loop over the
+step index so that cache policies with static schedules are resolved at
+trace time (XLA sees only the computations that actually run — the property
+the roofline dry-runs measure); wrap `sample` in `jax.jit` for production.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedules import NoiseSchedule
+
+
+def _bshape(x):
+    return (-1,) + (1,) * (x.ndim - 1)
+
+
+# ----------------------------------------------------------------------
+# DDPM ancestral step (Eq. 7/9)
+# ----------------------------------------------------------------------
+
+def ddpm_step(x, eps_hat, i, timesteps, sched: NoiseSchedule, key, extra):
+    t = int(timesteps[i])
+    t_next = int(timesteps[i + 1]) if i + 1 < len(timesteps) else -1
+    ab_t = float(sched.alpha_bars[t])
+    ab_n = float(sched.alpha_bars[t_next]) if t_next >= 0 else 1.0
+    alpha = ab_t / ab_n
+    beta = 1.0 - alpha
+    mean = (x - beta / np.sqrt(1.0 - ab_t) * eps_hat) / np.sqrt(alpha)
+    if t_next >= 0:
+        sigma = np.sqrt(beta * (1.0 - ab_n) / (1.0 - ab_t))
+        noise = jax.random.normal(key, x.shape, x.dtype)
+        return mean + sigma * noise, extra
+    return mean, extra
+
+
+# ----------------------------------------------------------------------
+# DDIM deterministic step (survey ref [54])
+# ----------------------------------------------------------------------
+
+def ddim_step(x, eps_hat, i, timesteps, sched: NoiseSchedule, key, extra):
+    t = int(timesteps[i])
+    t_next = int(timesteps[i + 1]) if i + 1 < len(timesteps) else -1
+    ab_t = float(sched.alpha_bars[t])
+    ab_n = float(sched.alpha_bars[t_next]) if t_next >= 0 else 1.0
+    x0_hat = (x - np.sqrt(1.0 - ab_t) * eps_hat) / np.sqrt(ab_t)
+    return np.sqrt(ab_n) * x0_hat + np.sqrt(1.0 - ab_n) * eps_hat, extra
+
+
+# ----------------------------------------------------------------------
+# DPM-Solver++(2M) (survey ref [58]) — multistep 2nd order, data prediction
+# ----------------------------------------------------------------------
+
+def _lambda(ab):  # log-SNR/2
+    return 0.5 * np.log(ab / (1.0 - ab))
+
+
+def dpmpp_2m_step(x, eps_hat, i, timesteps, sched: NoiseSchedule, key, extra):
+    """extra carries the previous x0 prediction (None on first step)."""
+    t = int(timesteps[i])
+    t_next = int(timesteps[i + 1]) if i + 1 < len(timesteps) else -1
+    ab_t = float(sched.alpha_bars[t])
+    ab_n = float(sched.alpha_bars[t_next]) if t_next >= 0 else 1.0 - 1e-6
+    x0_hat = (x - np.sqrt(1.0 - ab_t) * eps_hat) / np.sqrt(ab_t)
+
+    lam_t, lam_n = _lambda(ab_t), _lambda(ab_n)
+    h = lam_n - lam_t
+    sig_t, sig_n = np.sqrt(1.0 - ab_t), np.sqrt(1.0 - ab_n)
+
+    prev = extra.get("x0_prev") if isinstance(extra, dict) else None
+    if prev is not None and extra.get("h_prev"):
+        r = extra["h_prev"] / h
+        D = (1.0 + 1.0 / (2.0 * r)) * x0_hat - (1.0 / (2.0 * r)) * prev
+    else:
+        D = x0_hat
+    x_next = (sig_n / sig_t) * x - np.sqrt(ab_n) * np.expm1(-h) * D
+    return x_next, {"x0_prev": x0_hat, "h_prev": h}
+
+
+# ----------------------------------------------------------------------
+# Rectified-flow Euler step (survey Eq. 10 / FLUX-style)
+# ----------------------------------------------------------------------
+
+def rf_euler_step(x, v_hat, i, times, sched, key, extra):
+    """times: float grid 1 -> 0 (rectified_flow_times). v_hat = eps - x0."""
+    dt = float(times[i + 1] - times[i])        # negative
+    return x + dt * v_hat, extra
+
+
+# ----------------------------------------------------------------------
+# generic sampling loop
+# ----------------------------------------------------------------------
+
+def sample(denoise_fn: Callable, x_T, timesteps, sched: Optional[NoiseSchedule],
+           step_fn=ddim_step, key=None, denoiser_state=None):
+    """Run the reverse process.
+
+    denoise_fn(state, i, x, t) -> (eps_hat, state)  — `i` is the Python step
+    index (cache policies schedule on it), `t` the model-facing timestep.
+    Returns (x_0, final denoiser state).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x = x_T
+    extra: Any = {}
+    n = len(timesteps) if step_fn is not rf_euler_step else len(timesteps) - 1
+    for i in range(n):
+        key, sub = jax.random.split(key)
+        t = float(timesteps[i])
+        t_vec = jnp.full((x.shape[0],), t, jnp.float32)
+        eps_hat, denoiser_state = denoise_fn(denoiser_state, i, x, t_vec)
+        x, extra = step_fn(x, eps_hat, i, timesteps, sched, sub, extra)
+    return x, denoiser_state

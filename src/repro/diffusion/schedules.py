@@ -1,0 +1,67 @@
+"""Noise schedules (survey §III-A).
+
+Forward process (Eq. 2-4):  q(x_t|x_0) = N(sqrt(abar_t) x0, (1-abar_t) I).
+All tables are precomputed on host as float64-ish float32 numpy and closed
+over by the samplers, so nothing here enters the traced graph except gathers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class NoiseSchedule:
+    """Discrete-time DDPM schedule over T training steps."""
+    betas: np.ndarray          # (T,)
+
+    @property
+    def T(self) -> int:
+        return int(self.betas.shape[0])
+
+    @property
+    def alphas(self) -> np.ndarray:
+        return 1.0 - self.betas
+
+    @property
+    def alpha_bars(self) -> np.ndarray:
+        return np.cumprod(self.alphas)
+
+    def sigma(self, t):
+        """sqrt(1 - abar_t) — noise std at step t."""
+        return np.sqrt(1.0 - self.alpha_bars[t])
+
+    def q_sample(self, x0, t, eps):
+        """Forward diffuse x0 to step t (Eq. 4). t: int array (B,)."""
+        ab = jnp.asarray(self.alpha_bars, jnp.float32)[t]
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        return (jnp.sqrt(ab).reshape(shape) * x0
+                + jnp.sqrt(1.0 - ab).reshape(shape) * eps)
+
+    def spaced(self, num_steps: int) -> np.ndarray:
+        """Evenly spaced sampling timesteps T-1 ... 0 (descending)."""
+        return np.linspace(self.T - 1, 0, num_steps).round().astype(np.int64)
+
+
+def linear_schedule(T: int = 1000, beta_min: float = 1e-4,
+                    beta_max: float = 0.02) -> NoiseSchedule:
+    return NoiseSchedule(np.linspace(beta_min, beta_max, T, dtype=np.float64))
+
+
+def cosine_schedule(T: int = 1000, s: float = 8e-3) -> NoiseSchedule:
+    """IDDPM cosine alpha-bar schedule (survey ref [56])."""
+    steps = np.arange(T + 1, dtype=np.float64) / T
+    abar = np.cos((steps + s) / (1 + s) * np.pi / 2) ** 2
+    abar = abar / abar[0]
+    betas = np.clip(1.0 - abar[1:] / abar[:-1], 0.0, 0.999)
+    return NoiseSchedule(betas)
+
+
+def rectified_flow_times(num_steps: int) -> np.ndarray:
+    """Rectified-flow time grid 1 -> 0 (survey Eq. 10 / ref [65]).
+
+    x_t = (1-t) x0 + t eps; the model regresses velocity v = eps - x0."""
+    return np.linspace(1.0, 0.0, num_steps + 1)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+  flash_attention — tiled online-softmax attention (prefill hot spot)
+  forecast        — fused polynomial feature forecast (predictive caching's
+                    per-skipped-step evaluation, §2.3 of DESIGN.md)
+  ssd             — Mamba2 chunked state-space-dual scan (zamba2 hot spot)
+
+Each module ships `<name>.py` (pl.pallas_call + BlockSpec), `ops.py` (jit'd
+public wrapper choosing kernel vs reference) and `ref.py` (pure-jnp oracle).
+This container is CPU-only: kernels run under interpret=True in tests; on a
+real TPU set REPRO_PALLAS_INTERPRET=0.
+"""
+import os
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+from .flash_attention.ops import flash_attention          # noqa: E402
+from .forecast.ops import forecast                        # noqa: E402
+from .ssd.ops import ssd_scan                             # noqa: E402
+
+__all__ = ["flash_attention", "forecast", "ssd_scan", "INTERPRET"]

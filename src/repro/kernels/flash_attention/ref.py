@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KH, D); KH divides H.
+
+    Assumes q occupies the last Sq positions of the Sk-long key sequence
+    (Sq == Sk for self-attention)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    group = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, group, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import forecast
+
+__all__ = ["forecast"]

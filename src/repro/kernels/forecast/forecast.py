@@ -1,0 +1,56 @@
+"""Fused forecast kernel (Pallas).
+
+Why a kernel: on skipped steps predictive caching evaluates
+out = sum_i c_i * diffs[i] over every cached feature.  Chained XLA ops
+would stream the (m+1)-deep stack through HBM once per term; the fused
+kernel reads each history tile once, accumulates the weighted sum in VREGs
+and performs a single HBM write — the op becomes one-pass bandwidth-bound,
+(m+1)x less traffic than the naive schedule.
+
+Layout: features flattened to (m+1, N) with N padded to the (8,128)=1024
+tile; grid walks N in BN-sized tiles; coefficients ride in as a tiny (m+1,)
+operand broadcast to every program (SMEM-resident on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forecast_kernel(c_ref, d_ref, o_ref, *, order1: int):
+    c = c_ref[...].astype(jnp.float32)        # (m+1,)
+    d = d_ref[...].astype(jnp.float32)        # (m+1, BN)
+    acc = jnp.zeros((d.shape[1],), jnp.float32)
+    for i in range(order1):                   # static unroll, stays in VREGs
+        acc = acc + c[i] * d[i]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def forecast_pallas(diffs, coeffs, *, block_n: int = 4096,
+                    interpret: bool = True):
+    """diffs: (m+1, ...) stack; coeffs: (m+1,). Fused weighted reduction."""
+    m1 = diffs.shape[0]
+    shape = diffs.shape[1:]
+    flat = diffs.reshape(m1, -1)
+    N = flat.shape[1]
+    BN = min(block_n, N)
+    pad = (-N) % BN
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    Np = flat.shape[1]
+
+    out = pl.pallas_call(
+        functools.partial(_forecast_kernel, order1=m1),
+        grid=(Np // BN,),
+        in_specs=[
+            pl.BlockSpec((m1,), lambda i: (0,)),
+            pl.BlockSpec((m1, BN), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((BN,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), diffs.dtype),
+        interpret=interpret,
+    )(coeffs, flat)
+    return out[:N].reshape(shape)

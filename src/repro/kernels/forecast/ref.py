@@ -1,0 +1,47 @@
+"""Oracle for the forecast kernel = repro.core.predictive.forecast_from_diffs.
+
+The kernel computes `out = sum_i coeffs[i] * diffs[i]` — the basis-agnostic
+inner loop of every "Cache-Then-Forecast" method.  The coefficients are the
+(order+1,) basis weights produced by `basis_coeffs` for Taylor (TaylorSeer
+Eq. 42), contracted Hermite (HiCache Eq. 47), Newton and Adams-Bashforth."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core.predictive import _hermite_poly
+
+
+def basis_coeffs(order: int, u, basis: str = "taylor", sigma: float = 0.5,
+                 n_valid=None):
+    """(order+1,) float32 basis weights at normalized offset u."""
+    u = jnp.asarray(u, jnp.float32)
+    cs = []
+    for i in range(order + 1):
+        if basis == "taylor":
+            c = u**i / math.factorial(i)
+        elif basis == "newton":
+            c = jnp.ones(())
+            for j in range(i):
+                c = c * (u + j)
+            c = c / math.factorial(i)
+        elif basis == "hermite":
+            c = (jnp.ones(()) if i == 0 else
+                 (sigma**i) * _hermite_poly(i, sigma * u) / math.factorial(i))
+        elif basis == "ab":
+            c = {0: jnp.ones(()), 1: u, 2: 0.5 * u}.get(i, jnp.zeros(()))
+        else:
+            raise ValueError(basis)
+        if n_valid is not None:
+            c = c * (jnp.asarray(n_valid) > i).astype(jnp.float32)
+        cs.append(c)
+    return jnp.stack(cs).astype(jnp.float32)
+
+
+def forecast_ref(diffs, coeffs):
+    """diffs: (m+1, ...); coeffs: (m+1,). Returns sum_i coeffs[i]*diffs[i]."""
+    m1 = diffs.shape[0]
+    flat = diffs.reshape(m1, -1).astype(jnp.float32)
+    return jnp.tensordot(coeffs.astype(jnp.float32), flat,
+                         axes=1).reshape(diffs.shape[1:]).astype(diffs.dtype)

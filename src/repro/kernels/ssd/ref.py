@@ -1,0 +1,14 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked SSD from repro.models.ssm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B_, C_, chunk: int = 64):
+    """x: (b,s,h,p) f32; dt: (b,s,h) softplus'd; A: (h,) negative;
+    B_, C_: (b,s,n).  Returns (y (b,s,h,p), h_final (b,h,p,n))."""
+    return ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), B_.astype(jnp.float32),
+                       C_.astype(jnp.float32), chunk)

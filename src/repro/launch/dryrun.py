@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, print memory/cost analysis, emit roofline terms.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the dry-run needs 512 placeholder host devices so
+`jax.make_mesh` can build the 16x16 and 2x16x16 production meshes.  Smoke
+tests and benches do NOT import this module and keep seeing 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape decode_32k
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all          # orchestrates subprocesses
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, ALL_ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import attn_shards, make_logical_mesh, make_production_mesh
+from repro.launch.roofline import analyze, model_flops
+from repro.launch.specs import build_case
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results")
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             contract_mesh: bool = False) -> dict:
+    case = build_case(arch, shape_name)
+    cfg = get_config(arch)
+    if contract_mesh:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16(d,m)" if multi_pod else "16x16(d,m)"
+    else:
+        mesh = make_logical_mesh(cfg, multi_pod=multi_pod)
+        a = attn_shards(cfg)
+        mesh_name = (f"2x16x{a}x{16//a}" if multi_pod else f"16x{a}x{16//a}")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": case.kind, "notes": case.notes}
+    if case.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = case.skip
+        return rec
+
+    chips = mesh.devices.size
+    t0 = time.perf_counter()
+    with mesh:
+        in_sh = case.in_shardings(mesh)
+        out_sh = case.out_shardings(mesh) if case.out_shardings else None
+        fn = case.build_fn(mesh)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*case.inputs.values())
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(mem, k, 0)) for k in
+        ("argument_size_in_bytes", "output_size_in_bytes",
+         "temp_size_in_bytes", "generated_code_size_in_bytes")
+    }
+    per_dev = (rec["memory"]["argument_size_in_bytes"]
+               + rec["memory"]["temp_size_in_bytes"])
+    rec["bytes_per_device"] = per_dev
+    rec["fits_16gb_hbm"] = bool(per_dev < 16e9)
+
+    mf = model_flops(cfg, INPUT_SHAPES[shape_name])
+    rl = analyze(compiled, chips, analytic_flops=mf)
+    rec["roofline"] = rl.summary()
+    rec["model_flops_global"] = mf
+    hlo_global = rl.flops * chips
+    rec["useful_flops_ratio"] = (mf / hlo_global) if hlo_global else 0.0
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--contract-mesh", action="store_true",
+                    help="use the flat (data, model) contract mesh instead "
+                         "of the per-arch logical (data, attn, ffn) mesh")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) as subprocesses")
+    ap.add_argument("--also-multi-pod", action="store_true",
+                    help="with --all: additionally run the 2x16x16 mesh")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--jobs", type=int, default=2)
+    args = ap.parse_args()
+
+    os.makedirs(args.out or os.path.abspath(RESULTS_DIR), exist_ok=True)
+    outdir = args.out or os.path.abspath(RESULTS_DIR)
+
+    if args.all:
+        combos = [(a, s, False) for a in ALL_ARCH_IDS for s in INPUT_SHAPES]
+        if args.also_multi_pod:
+            combos += [(a, s, True) for a in ALL_ARCH_IDS for s in INPUT_SHAPES]
+        procs = {}
+        pending = list(combos)
+        failed = []
+        while pending or procs:
+            while pending and len(procs) < args.jobs:
+                a, s, mp = pending.pop(0)
+                tag = f"{a}_{s}_{'mp' if mp else 'sp'}"
+                path = os.path.join(outdir, f"dryrun_{tag}.json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", outdir]
+                if mp:
+                    cmd.append("--multi-pod")
+                procs[tag] = (subprocess.Popen(cmd), time.time())
+                print(f"[start] {tag}")
+            for tag in list(procs):
+                p, t0 = procs[tag]
+                if p.poll() is not None:
+                    dt = time.time() - t0
+                    status = "ok" if p.returncode == 0 else f"FAIL({p.returncode})"
+                    print(f"[done {status}] {tag} in {dt:.0f}s")
+                    if p.returncode != 0:
+                        failed.append(tag)
+                    del procs[tag]
+            time.sleep(2)
+        print("FAILED:", failed if failed else "none")
+        return
+
+    assert args.arch and args.shape
+    tag = (f"{args.arch}_{args.shape}_{'mp' if args.multi_pod else 'sp'}"
+           + ("_contract" if args.contract_mesh else ""))
+    try:
+        rec = run_case(args.arch, args.shape, args.multi_pod,
+                       args.contract_mesh)
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    path = os.path.join(outdir, f"dryrun_{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=1))
+    if rec["status"] == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

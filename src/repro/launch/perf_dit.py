@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf experiment for the paper-representative pair: dit-xl x decode_32k.
+
+Lowers three variants of the diffusion serve step on the production mesh:
+
+  uncached      — full denoiser forward every step (the survey's baseline)
+  refresh       — TaylorSeer cache-refresh step (full forward + diff update)
+  skip (static) — statically-scheduled forecast-only step: the lax.cond is
+                  resolved at trace time, so XLA sees ONLY the polynomial
+                  forecast — this is how diffusion caching turns into
+                  compiled-graph FLOP reduction on TPU (DESIGN §2.1)
+
+and reports per-step and amortized (interval N=4) roofline terms.
+Usage: PYTHONPATH=src python -m repro.launch.perf_dit
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core import make_policy
+from repro.launch.mesh import make_logical_mesh
+from repro.launch.roofline import analyze
+from repro.launch.specs import _sds, BF16
+from repro.models import dit
+from repro import sharding as shd
+from repro.launch.specs import _params_specs
+
+
+def lower_variant(kind: str, interval: int = 4):
+    cfg = get_config("dit-xl")
+    shape = INPUT_SHAPES["decode_32k"]
+    B = shape.global_batch
+    policy = make_policy("taylorseer", interval=interval, order=2)
+    eps_shape = (B, cfg.dit_patch_tokens, cfg.dit_in_dim)
+    pspec = _params_specs(cfg)
+    state_spec = jax.eval_shape(lambda: policy.init_state(eps_shape, BF16))
+    inputs = {
+        "latents": _sds(eps_shape, BF16),
+        "t": _sds((B,), jnp.float32),
+        "labels": _sds((B,), jnp.int32),
+    }
+    mesh = make_logical_mesh(cfg)
+
+    def fn(params, state, batch):
+        def compute(lat):
+            return dit.forward(params, lat, batch["t"], batch["labels"], cfg)
+
+        if kind == "uncached":
+            return compute(batch["latents"]), state
+        step = 0 if kind == "refresh" else 1   # static python int
+        return policy.apply(state, step, batch["latents"], compute)
+
+    with mesh:
+        in_sh = (shd.params_sharding(pspec, mesh),
+                 shd.cache_sharding(state_spec, mesh),
+                 shd.inputs_sharding(inputs, mesh))
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(
+            pspec, state_spec, inputs).compile()
+    rl = analyze(compiled, mesh.devices.size)
+    return {"kind": kind,
+            "compute_s": rl.flops / 197e12,   # raw HLO term (no analytic floor)
+            "memory_s": rl.memory_s, "collective_s": rl.collective_s}
+
+
+def main():
+    rows = [lower_variant(k) for k in ("uncached", "refresh", "skip")]
+    by = {r["kind"]: r for r in rows}
+    N = 4
+    amort = {t: (by["refresh"][t] + (N - 1) * by["skip"][t]) / N
+             for t in ("compute_s", "memory_s", "collective_s")}
+    out = {"variants": rows, "amortized_N4": amort,
+           "speedup_terms": {t: by["uncached"][t] / max(amort[t], 1e-12)
+                             for t in ("compute_s", "memory_s",
+                                       "collective_s")}}
+    print(json.dumps(out, indent=1))
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "results", "perf_dit_decode.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (DESIGN, brief):
+
+  compute    = HLO_FLOPs            / peak_FLOP/s          (per chip)
+  memory     = HLO_bytes            / HBM_bw               (per chip)
+  collective = collective_bytes     / link_bw              (per chip)
+
+`cost_analysis()` of the SPMD-partitioned executable reports *per-partition*
+flops/bytes, so no further division by chip count is needed.  Collective
+bytes are not in cost_analysis: we parse the post-optimization HLO and sum
+the result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (also per-partition shapes after SPMD).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# `%x = f32[8,128]{1,0} all-reduce(...)` or tuple results
+_INSTR = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from post-optimization HLO.
+
+    Two accounting notes (see EXPERIMENTS §Roofline):
+      * XLA-CPU's all-reduce-promotion pass upcasts bf16 reductions to f32
+        (`to_apply=%add..._promoted`); TPU reduces bf16 natively, so
+        promoted ops are counted at their native (half) width.
+      * instructions inside `while` bodies are counted once, not times the
+        trip count — with scanned layer stacks this is a uniform lower
+        bound, consistent across before/after comparisons.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for m in _INSTR.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.groups()
+        # async pairs appear as -start/-done; count once (the -start)
+        span_txt = hlo_text[m.start():m.start() + 40]
+        if "-done(" in span_txt:
+            continue
+        if tuple_part is not None:
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(tuple_part))
+        else:
+            b = _shape_bytes(dtype, dims)
+        line_end = hlo_text.find("\n", m.start())
+        line = hlo_text[m.start():line_end if line_end > 0 else m.start() + 400]
+        if "_promoted" in line and (dtype == "f32" or tuple_part):
+            b //= 2          # bf16 on the TPU target
+        out[kind] += b
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-partition HLO flops
+    hbm_bytes: float             # per-partition bytes accessed
+    coll_bytes: Dict[str, int]   # per kind
+    chips: int
+    #: analytic MODEL_FLOPS-based fallback (XLA's cost_analysis does not
+    #: multiply nested while-loop bodies by their trip counts, so for
+    #: grad-accumulation train steps the HLO term is a known undercount —
+    #: measured ~30x on qwen2-7b train_4k; see EXPERIMENTS §Roofline notes)
+    analytic_flops_per_chip: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return max(self.flops, self.analytic_flops_per_chip) / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.coll_bytes.values()) / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> dict:
+        return {
+            "analytic_flops_per_chip": self.analytic_flops_per_chip,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": dict(self.coll_bytes),
+            "coll_bytes_total": float(sum(self.coll_bytes.values())),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "chips": self.chips,
+        }
+
+
+def analyze(compiled, chips: int, analytic_flops: float = 0.0) -> Roofline:
+    """Build the roofline terms from a compiled executable.
+
+    `analytic_flops` is the global MODEL_FLOPS estimate used as the compute
+    floor (per chip after division)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):             # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll, chips=chips,
+                    analytic_flops_per_chip=analytic_flops / max(chips, 1))
+
+
+def model_flops(cfg, shape) -> float:
+    """Survey-style MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE) for a
+    train step; 2*N*D forward-only for prefill; 2*N_active per decode token."""
+    from repro.models import active_param_count
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_dit:
+            tokens = shape.global_batch * cfg.dit_patch_tokens
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_dit:
+            tokens = shape.global_batch * cfg.dit_patch_tokens
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    if cfg.is_dit:
+        tokens = shape.global_batch * cfg.dit_patch_tokens
+    return 2.0 * n * tokens

@@ -1,0 +1,451 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+`build_case(cfg, shape)` returns a `Case` with:
+  fn            — the pure step function to lower
+  inputs        — dict of ShapeDtypeStructs (no allocation)
+  in_shardings  — matching NamedSharding pytree builder (mesh -> pytree)
+  out_shardings — mesh -> pytree or None (XLA-inferred)
+  notes         — human-readable adaptation notes (window, skip reasons)
+
+Shape semantics (brief):
+  train_4k     -> train_step (fwd+bwd+AdamW)
+  prefill_32k  -> prefill_step (forward, fills KV cache)
+  decode_32k   -> serve_step: ONE token vs a seq_len KV cache
+  long_500k    -> serve_step at 524288; sub-quadratic attention required:
+                  SSM/hybrid run natively, dense/vlm/moe run a sliding-window
+                  (8192) variant, whisper-small is skipped (enc-dec ASR has
+                  no 512k decoder context) — see DESIGN §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models import dit, encdec, transformer
+from repro.models import init_params
+from repro.optim import AdamWState, adamw_update, clip_by_global_norm
+
+PyTree = Any
+
+LONG_WINDOW = 8192          # sliding window used by full-attention archs
+BF16 = jnp.bfloat16
+
+
+@dataclass
+class Case:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable                    # step fn, or None when fn_builder set
+    inputs: Dict[str, Any]
+    in_shardings: Callable          # mesh -> pytree matching inputs
+    out_shardings: Callable         # mesh -> pytree or None
+    notes: str = ""
+    skip: Optional[str] = None      # reason if the combination is skipped
+    fn_builder: Optional[Callable] = None   # mesh -> fn (MoE EP needs mesh)
+
+    def build_fn(self, mesh):
+        return self.fn_builder(mesh) if self.fn_builder is not None else self.fn
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _params_specs(cfg):
+    """ShapeDtypeStruct pytree of params (+ AdamW moments for training)."""
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _moment_dtype(cfg):
+    # giant MoEs keep moments in bf16 to fit HBM (DESIGN §5)
+    from repro.models import param_count
+    return BF16 if param_count(cfg) > 6e10 else jnp.float32
+
+
+def _ep_kwargs(mesh):
+    """moe_forward_ep kwargs for a given mesh (expert-parallel production
+    path; see repro.models.moe)."""
+    return dict(mesh=mesh, batch_ax=shd.batch_axes(mesh), ep_axis="data",
+                inner_axes=("attn", "ffn"))
+
+
+def _use_ep(cfg, batch: int, mesh_batch: int = 16) -> bool:
+    """EP needs the (micro)batch to divide the data axis."""
+    return cfg.is_moe and batch % (2 * mesh_batch) in (0, mesh_batch)
+
+
+def effective_window(cfg, shape_name: str) -> int:
+    """Attention window override for long_500k on full-attention archs."""
+    if shape_name == "long_500k" and cfg.family in ("dense", "vlm", "moe"):
+        return LONG_WINDOW
+    return cfg.sliding_window
+
+
+# ======================================================================
+# train_4k
+# ======================================================================
+
+def _ce_loss(logits, targets, vocab: int):
+    """Cross-entropy with the target logit picked by a one-hot einsum —
+    SPMD-friendly under vocab-sharded logits (partial sum + psum instead of
+    a cross-shard gather that would all-gather the logits)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(targets, vocab, dtype=jnp.float32)
+    tgt = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    return (lse - tgt).mean()
+
+
+def _encdec_loss(params, batch, cfg):
+    logits = encdec.forward(params, batch["frames"], batch["tokens"], cfg,
+                            remat=True)
+    loss = _ce_loss(logits, batch["targets"], cfg.vocab_size)
+    return loss, {"loss": loss}
+
+
+def _dit_loss(params, batch, cfg):
+    eps_hat = dit.forward(params, batch["latents"], batch["t"], batch["labels"],
+                          cfg, remat=True)
+    loss = jnp.mean(jnp.square(eps_hat.astype(jnp.float32) - batch["eps"]))
+    return loss, {"loss": loss}
+
+
+def build_train_case(arch: str, cfg, ishape) -> Case:
+    from repro.models import param_count
+    B, S = ishape.global_batch, ishape.seq_len
+    mdt = _moment_dtype(cfg)
+    n_params = param_count(cfg)
+    # ZeRO-1: moments sharded over data for >10B (elementwise update, no
+    # gather-hoisting risk); full FSDP weights only for the 100B+ MoEs
+    # (their expert weights already carry "data"; this catches attention)
+    FSDP_W = n_params > 60e9
+    FSDP_M = n_params > 10e9
+
+    if cfg.is_dit:
+        inputs = {
+            "latents": _sds((B, cfg.dit_patch_tokens, cfg.dit_in_dim), BF16),
+            "t": _sds((B,), jnp.float32),
+            "labels": _sds((B,), jnp.int32),
+            "eps": _sds((B, cfg.dit_patch_tokens, cfg.dit_in_dim), jnp.float32),
+        }
+        loss_fn = partial(_dit_loss, cfg=cfg)
+        notes = "DiT trains on latent patches; seq_len means patch tokens"
+    elif cfg.is_encoder_decoder:
+        inputs = {
+            "frames": _sds((B, cfg.encoder_seq, cfg.d_model), BF16),
+            "tokens": _sds((B, S), jnp.int32),
+            "targets": _sds((B, S), jnp.int32),
+        }
+        loss_fn = partial(_encdec_loss, cfg=cfg)
+        notes = "stub conv frontend: precomputed frame embeddings"
+    else:
+        inputs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "targets": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            inputs["vision_embeds"] = _sds(
+                (B, cfg.num_vision_tokens, cfg.vision_dim), BF16)
+        notes = "remat per layer; logits sharded (batch, vocab)"
+
+        def loss_fn(params, batch, _cfg=cfg, ep=None):
+            logits, aux = transformer.forward(
+                params, batch["tokens"], _cfg,
+                vision_embeds=batch.get("vision_embeds"), remat=True, ep=ep)
+            if _cfg.family == "vlm":
+                logits = logits[:, _cfg.num_vision_tokens:]
+            loss = _ce_loss(logits, batch["targets"], _cfg.vocab_size)
+            total = (loss + 0.01 * aux["load_balance_loss"]
+                     + 1e-3 * aux["router_z_loss"])
+            return total, {"loss": loss}
+
+    # gradient accumulation: global batch 256 -> ACCUM microbatches, scanned
+    # so activation memory is bounded by one microbatch (DESIGN §5);
+    # >10B models halve the microbatch again
+    ACCUM_TARGET = 16 if n_params > 10e9 else 8
+
+    def _pick_accum(mesh):
+        """Largest accumulation <= target whose microbatch still divides the
+        batch shards (multi-pod shards batch 32-way -> microbatch >= 32)."""
+        shards = 1
+        if mesh is not None:
+            import numpy as _np
+            shards = int(_np.prod([mesh.shape[a] for a in
+                                   shd.batch_axes(mesh)]))
+        for a in (ACCUM_TARGET, 8, 4, 2, 1):
+            if a <= ACCUM_TARGET and B % a == 0 and (B // a) % shards == 0:
+                return a
+        return 1
+
+    ACCUM = _pick_accum(None) if B % 16 == 0 else 1
+
+    def make_train_step(mesh=None):
+      ACCUM = _pick_accum(mesh) if B % 16 == 0 else 1
+      ep = _ep_kwargs(mesh) if (mesh is not None and cfg.is_moe) else None
+      lfn = (partial(loss_fn, ep=ep) if (cfg.is_moe and not cfg.is_dit
+                                         and not cfg.is_encoder_decoder)
+             else loss_fn)
+
+      def train_step(state, batch, loss_fn=lfn):
+        params, opt = state
+        if ACCUM == 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            # strided microbatch split: microbatch m = rows m::ACCUM, so the
+            # per-device row block stays local under the batch sharding (a
+            # contiguous split would leave each microbatch on B/ACCUM/16
+            # devices and XLA falls back to partial replication — measured
+            # 8x activation blow-up, EXPERIMENTS §Perf)
+            micro = jax.tree_util.tree_map(
+                lambda a: a.reshape((a.shape[0] // ACCUM, ACCUM)
+                                    + a.shape[1:]).swapaxes(0, 1),
+                batch)
+            head = jax.tree_util.tree_map(lambda a: a[0], micro)
+            tail = jax.tree_util.tree_map(lambda a: a[1:], micro)
+
+            # init the accumulator from the first microbatch's grads so its
+            # sharding is propagated from the backward pass (an explicit
+            # zeros tree would default to replicated-on-data and blow HBM)
+            (_, m0), g0 = jax.value_and_grad(loss_fn, has_aux=True)(params, head)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + m["loss"]), None
+
+            (grads, lsum), _ = jax.lax.scan(body, (g0, m0["loss"]), tail)
+            inv = 1.0 / ACCUM
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            metrics = {"loss": lsum * inv}
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, opt, params, lr=1e-4)
+        return (params, opt), dict(metrics, grad_norm=gnorm)
+
+      return train_step
+
+    pspec = _params_specs(cfg)
+    mom = jax.tree_util.tree_map(lambda l: _sds(l.shape, mdt), pspec)
+    state_spec = (pspec, AdamWState(step=_sds((), jnp.int32), mu=mom, nu=mom))
+
+    def _state_sharding(mesh):
+        ps = shd.params_sharding(pspec, mesh, fsdp=FSDP_W)
+        mu = shd.params_sharding(mom, mesh, fsdp=FSDP_M)
+        return (ps, AdamWState(step=shd.replicated(mesh), mu=mu, nu=mu))
+
+    def in_shardings(mesh):
+        return (_state_sharding(mesh), shd.inputs_sharding(inputs, mesh))
+
+    def out_shardings(mesh):
+        metr = {"loss": shd.replicated(mesh), "grad_norm": shd.replicated(mesh)}
+        return (_state_sharding(mesh), metr)
+
+    return Case(arch=arch, shape=ishape.name, kind="train", fn=None,
+                fn_builder=make_train_step,
+                inputs={"state": state_spec, "batch": inputs},
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                notes=notes)
+
+
+# ======================================================================
+# prefill_32k
+# ======================================================================
+
+def build_prefill_case(arch: str, cfg, ishape) -> Case:
+    B, S = ishape.global_batch, ishape.seq_len
+    window = effective_window(cfg, ishape.name)
+    cache_len = min(S, window) if window > 0 else S
+    notes = ""
+
+    if cfg.is_dit:
+        # diffusion "prefill" = one full denoiser forward over the batch
+        inputs = {
+            "latents": _sds((B, cfg.dit_patch_tokens, cfg.dit_in_dim), BF16),
+            "t": _sds((B,), jnp.float32),
+            "labels": _sds((B,), jnp.int32),
+        }
+
+        def fn(params, batch):
+            return dit.forward(params, batch["latents"], batch["t"],
+                               batch["labels"], cfg)
+        out_sh = None
+        notes = "DiT: denoiser forward (one diffusion step over the batch)"
+    elif cfg.is_encoder_decoder:
+        inputs = {
+            "frames": _sds((B, cfg.encoder_seq, cfg.d_model), BF16),
+            "tokens": _sds((B, S), jnp.int32),
+        }
+
+        def fn(params, batch):
+            enc_out = encdec.encode(params, batch["frames"], cfg)
+            x = encdec._decoder(params, batch["tokens"], enc_out, cfg)
+            logits = (x @ params["lm_head"])[:, -1]
+            xk, xv = encdec.cross_kv(params, enc_out, cfg)
+            return logits, (xk, xv)
+        out_sh = None
+        notes = "prefill emits decoder self-KV implicitly + exact cross-KV"
+    else:
+        inputs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            inputs["vision_embeds"] = _sds(
+                (B, cfg.num_vision_tokens, cfg.vision_dim), BF16)
+
+        def fn(params, batch, ep=None):
+            logits, aux, cache = transformer.prefill(
+                params, batch["tokens"], cfg, cache_len,
+                vision_embeds=batch.get("vision_embeds"), window=window,
+                ep=ep)
+            return logits[:, -1], cache
+
+        def out_sh(mesh):
+            cache_spec = jax.eval_shape(
+                partial(transformer.init_cache, cfg, B, cache_len))
+            return (shd.logits_sharding(mesh, ndim=2, batch=B,
+                                        vocab=cfg.vocab_size),
+                    shd.cache_sharding(cache_spec, mesh))
+        notes = f"window={window or 'full'}, cache_len={cache_len}"
+
+    pspec = _params_specs(cfg)
+
+    def in_shardings(mesh):
+        return (shd.params_sharding(pspec, mesh),
+                shd.inputs_sharding(inputs, mesh))
+
+    fn_builder = None
+    if cfg.is_moe and B % 16 == 0:
+        def fn_builder(mesh, _fn=fn):
+            return lambda params, batch: _fn(params, batch,
+                                             ep=_ep_kwargs(mesh))
+    return Case(arch=arch, shape=ishape.name, kind="prefill", fn=fn,
+                fn_builder=fn_builder,
+                inputs={"params": pspec, "batch": inputs},
+                in_shardings=in_shardings,
+                out_shardings=out_sh if callable(out_sh) else (lambda m: None),
+                notes=notes)
+
+
+# ======================================================================
+# decode (decode_32k / long_500k)
+# ======================================================================
+
+def build_decode_case(arch: str, cfg, ishape) -> Case:
+    B, S = ishape.global_batch, ishape.seq_len
+    window = effective_window(cfg, ishape.name)
+
+    if cfg.is_dit:
+        # diffusion has no token decode; serve_step = one cached denoise step
+        # (the survey's own inference loop). Cache = TaylorSeer diff stack.
+        from repro.core import make_policy
+        policy = make_policy("taylorseer", interval=4, order=2)
+        eps_shape = (B, cfg.dit_patch_tokens, cfg.dit_in_dim)
+        state_spec = jax.eval_shape(
+            lambda: policy.init_state(eps_shape, BF16))
+        inputs = {
+            "latents": _sds(eps_shape, BF16),
+            "t": _sds((B,), jnp.float32),
+            "labels": _sds((B,), jnp.int32),
+            "step": _sds((), jnp.int32),
+        }
+
+        def fn(params, state, batch):
+            def compute(lat):
+                return dit.forward(params, lat, batch["t"], batch["labels"], cfg)
+            y, state = policy.apply(state, batch["step"], batch["latents"],
+                                    compute)
+            return y, state
+
+        pspec = _params_specs(cfg)
+
+        def in_shardings(mesh):
+            # diff stack (order+1, B, T, D): batch on axis 1 (replicated
+            # when B=1 does not divide — long_500k)
+            st = shd.cache_sharding(state_spec, mesh)
+            return (shd.params_sharding(pspec, mesh), st,
+                    shd.inputs_sharding(inputs, mesh))
+
+        return Case(arch=arch, shape=ishape.name, kind="decode", fn=fn,
+                    inputs={"params": pspec, "state": state_spec,
+                            "batch": inputs},
+                    in_shardings=in_shardings, out_shardings=lambda m: None,
+                    notes="serve_step = cached denoise step (TaylorSeer N=4)")
+
+    if cfg.is_encoder_decoder:
+        if ishape.name == "long_500k":
+            return Case(arch=arch, shape=ishape.name, kind="decode",
+                        fn=None, inputs={}, in_shardings=None,
+                        out_shardings=None,
+                        skip="enc-dec ASR: 512k decoder context is "
+                             "architecturally meaningless (DESIGN §4)")
+        cache_len = S
+        cache_spec = jax.eval_shape(partial(
+            encdec.init_dec_cache, cfg, B, cache_len, cfg.encoder_seq))
+        inputs = {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32)}
+
+        def fn(params, cache, batch):
+            return encdec.decode_step(params, batch["token"], batch["pos"],
+                                      cache, cfg)
+        notes = f"decoder KV {cache_len} + exact cross-KV ({cfg.encoder_seq})"
+    else:
+        if ishape.name == "long_500k" and not (
+                cfg.mamba_version > 0 or window > 0):
+            return Case(arch=arch, shape=ishape.name, kind="decode", fn=None,
+                        inputs={}, in_shardings=None, out_shardings=None,
+                        skip="full attention at 512k is quadratic-prohibitive")
+        cache_len = min(S, window) if window > 0 else S
+        if cfg.family in ("ssm",):
+            cache_len = 1  # state is O(1); no KV buffer
+        cache_spec = jax.eval_shape(partial(
+            transformer.init_cache, cfg, B, max(cache_len, 1)))
+        inputs = {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32)}
+
+        def fn(params, cache, batch, ep=None):
+            return transformer.decode_step(params, batch["token"],
+                                           batch["pos"], cache, cfg,
+                                           window=window, ep=ep)
+        notes = (f"window={window or 'full'}, cache_len={cache_len}, "
+                 f"pos up to {S}")
+
+    pspec = _params_specs(cfg)
+
+    def in_shardings(mesh):
+        return (shd.params_sharding(pspec, mesh),
+                shd.cache_sharding(cache_spec, mesh),
+                shd.inputs_sharding(inputs, mesh))
+
+    def out_shardings(mesh):
+        return (shd.logits_sharding(mesh, ndim=2, batch=B,
+                                    vocab=cfg.vocab_size),
+                shd.cache_sharding(cache_spec, mesh))
+
+    fn_builder = None
+    if cfg.is_moe and not cfg.is_encoder_decoder and B % 16 == 0:
+        def fn_builder(mesh, _fn=fn):
+            return lambda params, cache, batch: _fn(params, cache, batch,
+                                                    ep=_ep_kwargs(mesh))
+    return Case(arch=arch, shape=ishape.name, kind="decode", fn=fn,
+                fn_builder=fn_builder,
+                inputs={"params": pspec, "cache": cache_spec, "batch": inputs},
+                in_shardings=in_shardings, out_shardings=out_shardings,
+                notes=notes)
+
+
+# ======================================================================
+
+def build_case(arch: str, shape_name: str) -> Case:
+    cfg = get_config(arch)
+    ishape = INPUT_SHAPES[shape_name]
+    if ishape.kind == "train":
+        return build_train_case(arch, cfg, ishape)
+    if ishape.kind == "prefill":
+        return build_prefill_case(arch, cfg, ishape)
+    return build_decode_case(arch, cfg, ishape)

@@ -1,0 +1,70 @@
+"""Training launcher: `python -m repro.launch.train --arch tinyllama-1.1b
+--smoke --steps 100`.
+
+On this CPU container use --smoke (reduced config, host mesh).  On a real
+TPU pod the same launcher runs the full config over the production mesh
+(params/opt sharded per repro.sharding).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCH_IDS, get_config, get_smoke_config
+from repro.data import lm_batches, latent_batches
+from repro.diffusion import linear_schedule
+from repro.train import train_loop
+from repro.train.steps import (init_train_state, make_diffusion_train_step,
+                               make_lm_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ALL_ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"training {cfg.name} ({cfg.family}) for {args.steps} steps")
+    state = init_train_state(jax.random.PRNGKey(args.seed), cfg)
+
+    if cfg.is_dit:
+        sched = linear_schedule(1000)
+        step = make_diffusion_train_step(cfg, sched, peak_lr=args.lr,
+                                         total_steps=args.steps,
+                                         accum=args.accum)
+        lat = latent_batches(args.seed, args.batch, cfg.dit_patch_tokens,
+                             cfg.dit_in_dim, cfg.dit_num_classes)
+
+        def batches():
+            key = jax.random.PRNGKey(args.seed + 1)
+            for x, y in lat:
+                key, sub = jax.random.split(key)
+                yield {"latents": jnp.asarray(x), "labels": jnp.asarray(y),
+                       "key": sub}
+        it = batches()
+    else:
+        step = make_lm_train_step(cfg, peak_lr=args.lr,
+                                  total_steps=args.steps, accum=args.accum)
+        lm = lm_batches(args.seed, args.batch, args.seq, cfg.vocab_size)
+        it = ({"tokens": jnp.asarray(t), "targets": jnp.asarray(y)}
+              for t, y in lm)
+
+    state, history = train_loop(step, state, it, args.steps,
+                                ckpt_dir=args.ckpt_dir)
+    if history:
+        print(f"loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

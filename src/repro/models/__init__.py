@@ -1,0 +1,57 @@
+"""Model zoo: unified dispatch over the architecture families."""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from . import dit, encdec, layers, mla, moe, ssm, transformer
+from .transformer import decode_step, forward, init_cache, init_lm, prefill
+
+
+def init_params(key, cfg, dtype=None):
+    """Initialize any architecture in the zoo."""
+    if cfg.is_dit:
+        return dit.init_dit(key, cfg, dtype)
+    if cfg.is_encoder_decoder:
+        return encdec.init_encdec(key, cfg, dtype)
+    return transformer.init_lm(key, cfg, dtype)
+
+
+def params_shape(cfg):
+    """ShapeDtypeStruct pytree of the params — no allocation (eval_shape)."""
+    return jax.eval_shape(partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg) -> int:
+    import math
+    shapes = params_shape(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: only routed-in experts) — the N in
+    the survey-style MODEL_FLOPS = 6*N_active*D."""
+    total = param_count(cfg)
+    if not cfg.is_moe:
+        return total
+    # subtract the inactive routed experts
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert * cfg.num_layers
+    return total - inactive
+
+
+def perturb_zero_init(params, seed: int = 0, scale: float = 0.05):
+    """Replace zero-initialized leaves (AdaLN-zero gates, patch_out) with
+    small random values.  An untrained DiT with the published AdaLN-zero
+    init outputs exactly 0, which makes cache-vs-exact comparisons trivial;
+    examples/benchmarks on untrained weights perturb them first."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.PRNGKey(seed + 1234)
+    out = []
+    for leaf in leaves:
+        key, sub = jax.random.split(key)
+        rnd = jax.random.normal(sub, leaf.shape, leaf.dtype) * scale
+        out.append(jnp.where(jnp.all(leaf == 0), rnd, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)

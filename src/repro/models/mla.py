@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+The KV cache stores only the compressed latent c_kv (rank 512) plus the
+shared RoPE key (64) — 576 floats/token instead of 2*H*128 = 32768: the
+~57x cache compression that makes deepseek-v2 decode_32k / long_500k
+storable (see EXPERIMENTS §Dry-run).
+
+Decode uses the *absorbed* formulation: W_UK is folded into the query and
+W_UV into the output so attention runs directly in the compressed space —
+per-step FLOPs O(H*(nope+rank)) per cached token, never re-expanding K/V.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, blocked_attention, dense_init
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, H * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[1], d, r, dtype),
+        "w_kr": dense_init(ks[2], d, dr, dtype),
+        "w_uk": jax.random.normal(ks[3], (H, r, dn), dtype) / math.sqrt(r),
+        "w_uv": jax.random.normal(ks[4], (H, r, dv), dtype) / math.sqrt(r),
+        "wo": dense_init(ks[5], H * dv, d, dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, x, cfg, *, positions=None, window: int = 0):
+    """Full-sequence MLA (train / prefill). Returns (out, (c_kv, k_rope))."""
+    B, S, _ = x.shape
+    H, dn, dr, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv = x @ p["w_dkv"]                                   # (B,S,r)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]          # (B,S,dr)
+
+    # expand keys/values for the full-sequence pass
+    k_nope = jnp.einsum("bsr,hrd->bshd", c_kv, p["w_uk"])    # (B,S,H,dn)
+    v = jnp.einsum("bsr,hrd->bshd", c_kv, p["w_uv"])         # (B,S,H,dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    o = blocked_attention(q, k, v, causal=True, window=window,
+                          q_positions=positions, k_positions=positions,
+                          scale=scale)
+    out = o.reshape(B, S, H * dv) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, x, cfg, cache_ckv, cache_kr, cache_pos, pos, *, window: int = 0):
+    """Absorbed one-token decode.
+
+    cache_ckv: (B, W, r); cache_kr: (B, W, dr); cache_pos: (B, W); pos: (B,).
+    """
+    B = x.shape[0]
+    W = cache_ckv.shape[1]
+    H, dn, dr, dv = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope = _project_q(p, x, cfg, pos[:, None])     # (B,1,H,dn/dr)
+    c_kv = x @ p["w_dkv"]                                    # (B,1,r)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], pos[:, None],
+                        cfg.rope_theta)[:, :, 0, :]           # (B,1,dr)
+
+    slot = (pos % W).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    cache_ckv = cache_ckv.at[bidx, slot].set(c_kv[:, 0].astype(cache_ckv.dtype))
+    cache_kr = cache_kr.at[bidx, slot].set(k_rope[:, 0].astype(cache_kr.dtype))
+    cache_pos = cache_pos.at[bidx, slot].set(pos.astype(jnp.int32))
+
+    # absorbed scores: q_abs = q_nope @ W_UK^T  -> works on latents directly
+    q_abs = jnp.einsum("bohd,hrd->bohr", q_nope, p["w_uk"])   # (B,1,H,r)
+    q_abs = q_abs[:, 0].astype(jnp.float32)                   # (B,H,r)
+    q_r = q_rope[:, 0].astype(jnp.float32)                    # (B,H,dr)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    # flash-decode style: walk the cache in chunks with an online softmax so
+    # the (B,H,W) score tensor is never materialized (with H=128, W=32k,
+    # B=128 it would be 2 TB global — see EXPERIMENTS §Dry-run)
+    CHUNK = 4096
+    nc = max(W // CHUNK, 1)
+    Wc = W // nc
+    ckv_c = cache_ckv.reshape(B, nc, Wc, -1).swapaxes(0, 1)
+    kr_c = cache_kr.reshape(B, nc, Wc, -1).swapaxes(0, 1)
+    pos_c = cache_pos.reshape(B, nc, Wc).swapaxes(0, 1)
+
+    r = cache_ckv.shape[-1]
+    init = (jnp.full((B, H), -1e30, jnp.float32),      # running max
+            jnp.zeros((B, H), jnp.float32),            # running denom
+            jnp.zeros((B, H, r), jnp.float32))         # running ctx acc
+
+    def chunk_step(carry, inp):
+        m, l, acc = carry
+        ckv, kr, kpos = inp                            # (B,Wc,r/dr/·)
+        # keep the cache in bf16 and accumulate in f32 via the dot's
+        # preferred_element_type: an .astype(f32) here would be hoisted by
+        # XLA into an f32 copy of the ENTIRE stacked cache (measured 2 GB/
+        # device on deepseek decode_32k — EXPERIMENTS §Perf)
+        s = jnp.einsum("bhr,bwr->bhw", q_abs.astype(ckv.dtype), ckv,
+                       preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bhd,bwd->bhw", q_r.astype(kr.dtype), kr,
+                           preferred_element_type=jnp.float32)
+        s = s * scale
+        ok = (kpos[:, None, :] <= pos[:, None, None]) & (kpos[:, None, :] >= 0)
+        if window > 0:
+            ok = ok & (pos[:, None, None] - kpos[:, None, :] < window)
+        s = jnp.where(ok, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        pcs = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(pcs, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhw,bwr->bhr", pcs.astype(ckv.dtype), ckv,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(chunk_step, init, (ckv_c, kr_c, pos_c))
+    ctx = acc / jnp.maximum(l, 1e-30)[..., None]               # (B,H,r)
+    o = jnp.einsum("bhr,hrd->bhd", ctx.astype(p["w_uv"].dtype), p["w_uv"],
+                   preferred_element_type=jnp.float32)
+    out = o.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, cache_ckv, cache_kr, cache_pos

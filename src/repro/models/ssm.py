@@ -1,0 +1,326 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks.
+
+TPU adaptation (DESIGN §2): the CUDA selective-scan kernel becomes
+  * mamba1 — chunked *associative* scan: `lax.associative_scan` inside
+    fixed-size chunks (parallel depth log L), sequential `lax.scan` across
+    chunks carrying the state; working set = chunk * d_inner * state.
+  * mamba2 — the SSD matmul formulation (intra-chunk L-matrix einsums feed
+    the MXU; inter-chunk recurrence is a cheap scan).  The Pallas kernel in
+    repro.kernels.ssd implements the intra-chunk block; this file is the
+    reference path and the oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+
+# ----------------------------------------------------------------------
+# causal depthwise conv (width w, implemented as shifted adds — w is tiny)
+# ----------------------------------------------------------------------
+
+def causal_conv(x, w, b):
+    """x: (B, S, C); w: (W, C); b: (C,).
+
+    One depthwise lax.conv instead of W shifted-pad-multiply-adds: the
+    shifted copies cost (W-1) extra reads+writes of the full activation per
+    layer (measured 3x54 padded f32 copies on zamba2 prefill_32k —
+    EXPERIMENTS §Perf iteration z1)."""
+    W, C = w.shape
+    lhs = x.swapaxes(1, 2)                       # (B, C, S)
+    rhs = w.T[:, None, :]                        # (C, 1, W)  depthwise
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1,), padding=[(W - 1, 0)],
+        feature_group_count=C,
+        dimension_numbers=("NCH", "OIH", "NCH"),
+        preferred_element_type=x.dtype)
+    return out.swapaxes(1, 2) + b
+
+
+def conv_step(buf, x_t, w, b):
+    """Single-token conv against a rolling buffer.
+
+    buf: (B, W, C) holding the last W inputs (oldest first); x_t: (B, C).
+    Returns (y_t, new_buf)."""
+    buf = jnp.concatenate([buf[:, 1:], x_t[:, None]], axis=1)
+    y = jnp.einsum("bwc,wc->bc", buf, w) + b
+    return y, buf
+
+
+# ----------------------------------------------------------------------
+# chunked linear recurrence h_t = a_t * h_{t-1} + u_t
+# ----------------------------------------------------------------------
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan_chunked(a, u, h0, chunk: int):
+    """a, u: (B, S, ...) elementwise recurrence tensors; h0: (B, ...).
+
+    Returns (h_all (B,S,...), h_final)."""
+    B, S = a.shape[:2]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    a_c = a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    u_c = u.reshape(B, nc, chunk, *u.shape[2:]).swapaxes(0, 1)
+
+    def per_chunk(h, au):
+        a_ch, u_ch = au  # (B, chunk, ...)
+        A_cum, U_cum = jax.lax.associative_scan(_assoc_combine, (a_ch, u_ch),
+                                                axis=1)
+        h_all = A_cum * h[:, None] + U_cum
+        return h_all[:, -1], h_all
+
+    h_final, h_chunks = jax.lax.scan(per_chunk, h0, (a_c, u_c))
+    h_all = h_chunks.swapaxes(0, 1).reshape(B, S, *a.shape[2:])
+    return h_all, h_final
+
+
+# ----------------------------------------------------------------------
+# Mamba1
+# ----------------------------------------------------------------------
+
+def init_mamba1(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, din), dtype) * 0.1,
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": dense_init(ks[2], din, dt_rank + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, din, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (din,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))).astype(dtype),
+        "D": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[5], din, d, dtype),
+    }
+
+
+def _conv_tail(raw, width):
+    """Last `width` pre-conv inputs, left-padded with zeros (decode buffer)."""
+    B, S, C = raw.shape
+    if S >= width:
+        return raw[:, S - width:]
+    return jnp.pad(raw, ((0, 0), (width - S, 0), (0, 0)))
+
+
+def mamba1_forward(p, u, cfg, chunk: int = 64):
+    """Full-sequence mamba1. u: (B, S, d).
+
+    Returns (y, cache) with cache = {"state", "conv"} ready for decode."""
+    B, S, d = u.shape
+    din = p["D"].shape[0]
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = u @ p["in_proj"]
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x = jax.nn.silu(causal_conv(x_raw, p["conv_w"], p["conv_b"]))
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    B_ = dbc[..., dt_rank:dt_rank + n]
+    C_ = dbc[..., dt_rank + n:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (din, n)
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)          # (B,S,din,n)
+    dBx = (dt[..., None] * B_[:, :, None, :] * x[..., None]).astype(jnp.float32)
+    h0 = jnp.zeros((B, *dA.shape[2:]), jnp.float32)
+    if S % chunk != 0:
+        chunk = S  # tiny smoke sequences
+    h_all, h_fin = linear_scan_chunked(dA, dBx, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, C_.astype(jnp.float32))
+    y = (y + p["D"] * x).astype(u.dtype) * jax.nn.silu(z)
+    cache = {"state": h_fin, "conv": _conv_tail(x_raw, cfg.ssm_conv)}
+    return y @ p["out_proj"], cache
+
+
+def mamba1_decode(p, u_t, cfg, conv_buf, h):
+    """One-token step. u_t: (B, 1, d); conv_buf: (B, W, din); h: (B, din, n)."""
+    B = u_t.shape[0]
+    din = p["D"].shape[0]
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = u_t[:, 0] @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_buf = conv_step(conv_buf, x, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    B_ = dbc[..., dt_rank:dt_rank + n]
+    C_ = dbc[..., dt_rank + n:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)          # (B,din,n)
+    h = dA * h + (dt[..., None] * B_[:, None, :] * x[..., None]).astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C_.astype(jnp.float32))
+    y = (y + p["D"] * x).astype(u_t.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], conv_buf, h
+
+
+# ----------------------------------------------------------------------
+# Mamba2 (SSD)
+# ----------------------------------------------------------------------
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = din // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z (din), x (din), B (n), C (n), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * n + nh, dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, din + 2 * n), dtype) * 0.1,
+        "conv_b": jnp.zeros((din + 2 * n,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), minval=1.0,
+                                            maxval=16.0)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[3], (nh,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(dtype),
+        "norm_w": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[4], din, d, dtype),
+    }
+
+
+def _segsum(dA):
+    """dA: (..., L) -> (..., L, L) lower-tri S[i,j] = sum_{k=j+1..i} dA[k]."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, h0=None):
+    """Minimal SSD (Mamba2) over chunks.
+
+    x: (b,s,h,p), dt: (b,s,h) (softplus applied), A: (h,) negative,
+    B_, C_: (b,s,n) shared across heads (n_groups=1).
+    Returns (y (b,s,h,p), h_final (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B_.reshape(b, nc, chunk, n)
+    Cc = C_.reshape(b, nc, chunk, n)
+
+    cdt = x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+
+    dA = dtc * A                                             # (b,nc,l,h) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                           # inclusive
+
+    # intra-chunk — operands in the compute dtype (bf16 on TPU), f32
+    # accumulation via preferred_element_type: keeping the L-matrix and
+    # score temporaries f32 doubles HBM traffic for no accuracy benefit
+    # (decay factors are <= 1; EXPERIMENTS §Perf iteration z2)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2))).astype(cdt)  # (b,nc,h,l,l)
+    xdt = (xc * dtc[..., None]).astype(cdt)
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc.astype(cdt), Bc.astype(cdt),
+                    preferred_element_type=jnp.float32).astype(cdt)
+    Y_diag = jnp.einsum("bclm,bchlm,bcmhp->bclhp", CB, L, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)             # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc.astype(cdt),
+                        (decay * dtc).astype(cdt), xc.astype(cdt),
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence with the off-diagonal contribution fused into
+    # the scan body: materializing the full (b,nc,h,p,n) h_prevs stack for
+    # a post-hoc einsum costs an extra state-stack round trip (§Perf z3)
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))               # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    Cd = Cc.astype(cdt).reshape(b, nc, chunk, n)
+    eA = jnp.exp(dA_cs).astype(cdt)                          # (b,nc,l,h)
+
+    def step(hprev, inp):
+        cd, st, c_t, ea_t = inp      # (b,h), (b,h,p,n), (b,l,n), (b,l,h)
+        y_off = jnp.einsum("bln,blh,bhpn->blhp", c_t, ea_t,
+                           hprev.astype(cdt),
+                           preferred_element_type=jnp.float32)
+        hnew = hprev * cd[..., None, None] + st
+        return hnew, y_off
+
+    h_fin, y_offs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1),
+         Cd.swapaxes(0, 1), eA.swapaxes(0, 1)))
+    Y_off = y_offs.swapaxes(0, 1)                            # (b,nc,l,h,p)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, h_fin
+
+
+def _mamba2_inputs(p, u, cfg):
+    din = p["norm_w"].shape[0]
+    n = cfg.ssm_state
+    nh = p["A_log"].shape[0]
+    proj = u @ p["in_proj"]
+    z = proj[..., :din]
+    xBC = proj[..., din:2 * din + 2 * n]
+    dt_raw = proj[..., 2 * din + 2 * n:]
+    return z, xBC, dt_raw, din, n, nh
+
+
+def mamba2_forward(p, u, cfg, chunk: int = 64):
+    """Full-sequence mamba2 (SSD). u: (B,S,d).
+
+    Returns (y, cache) with cache = {"state", "conv"} ready for decode."""
+    B, S, d = u.shape
+    z, xBC, dt_raw, din, n, nh = _mamba2_inputs(p, u, cfg)
+    xBC_raw = xBC
+    xBC = jax.nn.silu(causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :din].reshape(B, S, nh, din // nh)
+    B_ = xBC[..., din:din + n]
+    C_ = xBC[..., din + n:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_fin = ssd_chunked(x.astype(jnp.float32), dt, A,
+                           B_.astype(jnp.float32), C_.astype(jnp.float32),
+                           chunk)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, din).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    cache = {"state": h_fin, "conv": _conv_tail(xBC_raw, cfg.ssm_conv)}
+    return y @ p["out_proj"], cache
+
+
+def mamba2_decode(p, u_t, cfg, conv_buf, h):
+    """One-token step. conv_buf: (B, W, din+2n); h: (B, nh, hd, n)."""
+    B = u_t.shape[0]
+    z, xBC, dt_raw, din, n, nh = _mamba2_inputs(p, u_t[:, 0:1], cfg)
+    z, xBC, dt_raw = z[:, 0], xBC[:, 0], dt_raw[:, 0]
+    xBC, conv_buf = conv_step(conv_buf, xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :din].reshape(B, nh, din // nh)
+    B_ = xBC[..., din:din + n]
+    C_ = xBC[..., din + n:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"]).astype(jnp.float32)  # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                     # (B,nh)
+    h = h * dA[..., None, None] + (dt[..., None, None] *
+                                   x[..., None].astype(jnp.float32) *
+                                   B_[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, C_.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, din).astype(u_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], conv_buf, h

@@ -1,0 +1,415 @@
+"""Decoder LM assembly for the dense / moe / ssm / hybrid / vlm families.
+
+Entry points (all pure functions of (params, inputs, cfg)):
+
+  init_lm(key, cfg)                      -> params
+  forward(params, tokens, cfg, ...)      -> (logits, aux)        train / eval
+  prefill(params, tokens, cfg, cache_len)-> (logits, cache)      fill KV cache
+  decode_step(params, token, pos, cache, cfg) -> (logits, cache) one token
+
+Layer stacks are scanned (`lax.scan` over params stacked on a leading layer
+axis) so compile time is ~constant in depth — required for the 40-combo
+dry-run matrix.  KV caches are rolling buffers of capacity `cache_len`
+(= sliding window when cfg.sliding_window > 0), with absolute positions
+stored alongside so masking is exact even after wrap-around.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention_decode, attention_forward,
+                     dense_init, embed_init, init_attention, init_mlp,
+                     mlp_forward, rms_norm)
+from .mla import init_mla, mla_decode, mla_forward
+from .moe import init_moe, moe_forward, moe_forward_ep
+from .ssm import (init_mamba1, init_mamba2, mamba1_decode, mamba1_forward,
+                  mamba2_decode, mamba2_forward)
+
+# ======================================================================
+# per-family block init
+# ======================================================================
+
+def _init_block(key, cfg, dtype):
+    """One layer's params (unstacked)."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "ln2": jnp.ones((d,), dtype),
+            "mlp": init_mlp(ks[1], d, cfg.d_ff, dtype),
+        }
+    if cfg.family == "moe":
+        attn = init_mla(ks[0], cfg, dtype) if cfg.use_mla else init_attention(ks[0], cfg, dtype)
+        return {
+            "ln1": jnp.ones((d,), dtype),
+            "attn": attn,
+            "ln2": jnp.ones((d,), dtype),
+            "moe": init_moe(ks[1], cfg, dtype),
+        }
+    if cfg.family == "ssm":
+        init = init_mamba1 if cfg.mamba_version == 1 else init_mamba2
+        return {"ln1": jnp.ones((d,), dtype), "mamba": init(ks[0], cfg, dtype)}
+    if cfg.family == "hybrid":
+        return {"ln1": jnp.ones((d,), dtype),
+                "mamba": init_mamba2(ks[0], cfg, dtype)}
+    raise ValueError(cfg.family)
+
+
+def init_lm(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    L = cfg.num_layers
+    block_keys = jax.random.split(ks[0], L)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(block_keys)
+    params = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if cfg.family == "hybrid":
+        # one *shared* attention+MLP block reused at every application point
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": init_attention(ks[3], cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": init_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype),
+        }
+    if cfg.family == "vlm":
+        params["vision_proj"] = dense_init(ks[5], cfg.vision_dim, cfg.d_model, dtype)
+    return params
+
+
+def hybrid_points(cfg) -> int:
+    return cfg.num_layers // cfg.hybrid_attn_every
+
+
+# ======================================================================
+# full-sequence forward (train / prefill body)
+# ======================================================================
+
+def _attn_block_fwd(p, x, cfg, positions, window):
+    h, kv = attention_forward(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                              cfg, positions=positions, window=window)
+    return x + h, kv
+
+
+def _embed_inputs(params, tokens, cfg, vision_embeds=None):
+    x = params["embed"][tokens]
+    if cfg.family == "vlm":
+        assert vision_embeds is not None, "pixtral requires stub patch embeddings"
+        v = vision_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([v, x], axis=1)
+    return x
+
+
+def _moe_layer(p, x, cfg, ep):
+    """Dispatch to the dense or expert-parallel MoE path."""
+    if ep is not None:
+        return moe_forward_ep(p, x, cfg, **ep)
+    return moe_forward(p, x, cfg)
+
+
+def forward(params, tokens, cfg, *, vision_embeds=None, window=None,
+            collect_kv=False, remat=False, ep=None):
+    """Full-sequence forward. tokens: (B, S) int32.
+
+    Returns (logits, aux) where aux carries MoE losses and (optionally) the
+    per-layer KV tensors for prefill.  `remat=True` checkpoints each layer
+    (training memory knob; see EXPERIMENTS §Perf).  `ep` (dict of
+    moe_forward_ep kwargs) selects the expert-parallel production path."""
+    window = cfg.sliding_window if window is None else window
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+    x = _embed_inputs(params, tokens, cfg, vision_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "router_z_loss": jnp.zeros((), jnp.float32)}
+
+    if cfg.family in ("dense", "vlm"):
+        @ckpt
+        def body(x, p):
+            x, kv = _attn_block_fwd(p, x, cfg, positions, window)
+            x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            return x, kv if collect_kv else None
+
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        caches = kvs
+
+    elif cfg.family == "moe":
+        @ckpt
+        def body(carry, p):
+            x, lb, zl = carry
+            xi = rms_norm(x, p["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                h, kv = mla_forward(p["attn"], xi, cfg, positions=positions,
+                                    window=window)
+            else:
+                h, kv = attention_forward(p["attn"], xi, cfg,
+                                          positions=positions, window=window)
+            x = x + h
+            mo, a = _moe_layer(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                               cfg, ep)
+            x = x + mo
+            return ((x, lb + a["load_balance_loss"], zl + a["router_z_loss"]),
+                    kv if collect_kv else None)
+
+        (x, lb, zl), kvs = jax.lax.scan(
+            body, (x, aux["load_balance_loss"], aux["router_z_loss"]),
+            params["blocks"])
+        aux["load_balance_loss"], aux["router_z_loss"] = lb, zl
+        caches = kvs
+
+    elif cfg.family == "ssm":
+        fwd = mamba1_forward if cfg.mamba_version == 1 else mamba2_forward
+
+        @ckpt
+        def body(x, p):
+            h, c = fwd(p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            return x + h, c if collect_kv else None
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        caches = states
+
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        npts = hybrid_points(cfg)
+        sp = params["shared_attn"]
+        caches = [] if collect_kv else None
+
+        @ckpt
+        def body(x, p):
+            h, c = mamba2_forward(p["mamba"],
+                                  rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            return x + h, c if collect_kv else None
+
+        for g in range(npts):
+            seg = jax.tree_util.tree_map(lambda a: a[g * k:(g + 1) * k],
+                                         params["blocks"])
+            x, states = jax.lax.scan(body, x, seg)
+            xh, kv = _attn_block_fwd(sp, x, cfg, positions, window)
+            x = xh + mlp_forward(sp["mlp"], rms_norm(xh, sp["ln2"], cfg.norm_eps))
+            if collect_kv:
+                caches.append((states, kv))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    if collect_kv:
+        return logits, aux, caches
+    return logits, aux
+
+
+# ======================================================================
+# KV cache containers
+# ======================================================================
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    """Empty decode cache with capacity cache_len (rolling when windowed)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L, B, W = cfg.num_layers, batch, cache_len
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "k": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.full((B, W), -1, jnp.int32),
+        }
+    if cfg.family == "moe":
+        if cfg.use_mla:
+            return {
+                "ckv": jnp.zeros((L, B, W, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((L, B, W, cfg.qk_rope_head_dim), dtype),
+                "pos": jnp.full((B, W), -1, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((L, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.full((B, W), -1, jnp.int32),
+        }
+    if cfg.family == "ssm":
+        din = cfg.ssm_expand * cfg.d_model
+        if cfg.mamba_version == 1:
+            return {
+                "conv": jnp.zeros((L, B, cfg.ssm_conv, din), dtype),
+                "state": jnp.zeros((L, B, din, cfg.ssm_state), jnp.float32),
+            }
+        nh = din // cfg.ssm_head_dim
+        return {
+            "conv": jnp.zeros((L, B, cfg.ssm_conv, din + 2 * cfg.ssm_state), dtype),
+            "state": jnp.zeros((L, B, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                               jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        din = cfg.ssm_expand * cfg.d_model
+        nh = din // cfg.ssm_head_dim
+        npts = hybrid_points(cfg)
+        return {
+            "conv": jnp.zeros((L, B, cfg.ssm_conv, din + 2 * cfg.ssm_state), dtype),
+            "state": jnp.zeros((L, B, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                               jnp.float32),
+            "k": jnp.zeros((npts, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((npts, B, W, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.full((B, W), -1, jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# ======================================================================
+# decode step
+# ======================================================================
+
+def decode_step(params, token, pos, cache, cfg, *, window=None, ep=None):
+    """token: (B,) int32; pos: (B,) absolute position. Returns (logits, cache)."""
+    window = cfg.sliding_window if window is None else window
+    x = params["embed"][token][:, None, :]                    # (B,1,d)
+    B = x.shape[0]
+
+    if cfg.family in ("dense", "vlm", "moe") and not cfg.use_mla:
+        pos_buf = cache["pos"]
+
+        def body(carry, inp):
+            x, pos_buf = carry
+            p, ck, cv = inp
+            xi = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, ck, cv, new_pos = attention_decode(p["attn"], xi, cfg, ck, cv,
+                                                  pos_buf, pos, window=window)
+            x = x + h
+            if cfg.family == "moe":
+                mo, _ = _moe_layer(p["moe"],
+                                   rms_norm(x, p["ln2"], cfg.norm_eps), cfg, ep)
+            else:
+                mo = mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+            x = x + mo
+            return (x, new_pos), (ck, cv)
+
+        (x, new_pos), (ks, vs) = jax.lax.scan(
+            body, (x, pos_buf), (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs, "pos": new_pos}
+
+    elif cfg.family == "moe" and cfg.use_mla:
+        pos_buf = cache["pos"]
+
+        def body(carry, inp):
+            x, pos_buf = carry
+            p, ckv, ckr = inp
+            xi = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, ckv, ckr, new_pos = mla_decode(p["attn"], xi, cfg, ckv, ckr,
+                                              pos_buf, pos, window=window)
+            x = x + h
+            mo, _ = _moe_layer(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                               cfg, ep)
+            x = x + mo
+            return (x, new_pos), (ckv, ckr)
+
+        (x, new_pos), (ckvs, ckrs) = jax.lax.scan(
+            body, (x, pos_buf), (params["blocks"], cache["ckv"], cache["kr"]))
+        cache = {"ckv": ckvs, "kr": ckrs, "pos": new_pos}
+
+    elif cfg.family == "ssm":
+        dec = mamba1_decode if cfg.mamba_version == 1 else mamba2_decode
+
+        def body(x, inp):
+            p, conv, state = inp
+            h, conv, state = dec(p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                 cfg, conv, state)
+            return x + h, (conv, state)
+
+        x, (convs, states) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["state"]))
+        cache = {"conv": convs, "state": states}
+
+    elif cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        npts = hybrid_points(cfg)
+        sp = params["shared_attn"]
+        pos_buf = cache["pos"]
+        convs, states, ks, vs = [], [], [], []
+
+        def body(x, inp):
+            p, conv, state = inp
+            h, conv, state = mamba2_decode(
+                p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, conv, state)
+            return x + h, (conv, state)
+
+        new_pos = pos_buf
+        for g in range(npts):
+            sl = slice(g * k, (g + 1) * k)
+            seg = jax.tree_util.tree_map(lambda a: a[sl], params["blocks"])
+            x, (cv, st) = jax.lax.scan(body, x,
+                                       (seg, cache["conv"][sl], cache["state"][sl]))
+            convs.append(cv)
+            states.append(st)
+            xi = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            h, ck, cvv, new_pos = attention_decode(sp["attn"], xi, cfg,
+                                                   cache["k"][g], cache["v"][g],
+                                                   pos_buf, pos, window=window)
+            x = x + h
+            x = x + mlp_forward(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+            ks.append(ck)
+            vs.append(cvv)
+        cache = {
+            "conv": jnp.concatenate(convs, 0), "state": jnp.concatenate(states, 0),
+            "k": jnp.stack(ks, 0), "v": jnp.stack(vs, 0), "pos": new_pos,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, cache
+
+
+# ======================================================================
+# prefill: full-sequence forward that also fills the decode cache
+# ======================================================================
+
+def prefill(params, tokens, cfg, cache_len: int, *, vision_embeds=None,
+            window=None, dtype=None, ep=None):
+    """Returns (last-token logits, cache ready for decode at pos = S)."""
+    window = cfg.sliding_window if window is None else window
+    out = forward(params, tokens, cfg, vision_embeds=vision_embeds,
+                  window=window, collect_kv=True, ep=ep)
+    logits, aux, collected = out
+    B = tokens.shape[0]
+    S = tokens.shape[1] + (cfg.num_vision_tokens if cfg.family == "vlm" else 0)
+    cache = init_cache(cfg, B, cache_len, dtype)
+    W = cache_len
+    keep = min(S, W)
+    src = slice(S - keep, S)
+    slots = (jnp.arange(S - keep, S) % W).astype(jnp.int32)
+
+    if cfg.family in ("dense", "vlm") or (cfg.family == "moe" and not cfg.use_mla):
+        k, v = collected                                   # (L,B,S,KH,hd)
+        cache["k"] = cache["k"].at[:, :, slots].set(k[:, :, src].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, slots].set(v[:, :, src].astype(cache["v"].dtype))
+        cache["pos"] = cache["pos"].at[:, slots].set(
+            jnp.broadcast_to(jnp.arange(S - keep, S)[None], (B, keep)))
+    elif cfg.family == "moe" and cfg.use_mla:
+        ckv, kr = collected
+        cache["ckv"] = cache["ckv"].at[:, :, slots].set(ckv[:, :, src].astype(cache["ckv"].dtype))
+        cache["kr"] = cache["kr"].at[:, :, slots].set(kr[:, :, src].astype(cache["kr"].dtype))
+        cache["pos"] = cache["pos"].at[:, slots].set(
+            jnp.broadcast_to(jnp.arange(S - keep, S)[None], (B, keep)))
+    elif cfg.family == "ssm":
+        cache["state"] = collected["state"].astype(cache["state"].dtype)
+        cache["conv"] = collected["conv"].astype(cache["conv"].dtype)
+    elif cfg.family == "hybrid":
+        cache["state"] = jnp.concatenate(
+            [c[0]["state"] for c in collected], 0).astype(cache["state"].dtype)
+        cache["conv"] = jnp.concatenate(
+            [c[0]["conv"] for c in collected], 0).astype(cache["conv"].dtype)
+        ks = jnp.stack([c[1][0] for c in collected], 0)    # (npts,B,S,KH,hd)
+        vs = jnp.stack([c[1][1] for c in collected], 0)
+        cache["k"] = cache["k"].at[:, :, slots].set(ks[:, :, src].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, slots].set(vs[:, :, src].astype(cache["v"].dtype))
+        cache["pos"] = cache["pos"].at[:, slots].set(
+            jnp.broadcast_to(jnp.arange(S - keep, S)[None], (B, keep)))
+    return logits, aux, cache

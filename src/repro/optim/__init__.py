@@ -1,0 +1,6 @@
+"""Pure-JAX optimizers and LR schedules (no optax dependency)."""
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_warmup_schedule, global_norm)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm", "cosine_warmup_schedule"]

@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay + global-norm clipping + LR schedules.
+
+Optimizer state mirrors the param pytree, so whatever sharding the params
+carry, the moments inherit it (ZeRO-equivalent given fully sharded params).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray        # () int32
+    mu: PyTree               # first moment
+    nu: PyTree               # second moment
+
+
+def adamw_init(params: PyTree, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-8))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree, *,
+                 lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    """One AdamW step. `lr` may be a scalar or a schedule value."""
+    step = state.step + 1
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * gf
+        v = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = treedef.unflatten([o[0] for o in out])
+    nu = treedef.unflatten([o[1] for o in out])
+    new_params = treedef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def cosine_warmup_schedule(step, *, peak_lr: float, warmup_steps: int,
+                           total_steps: int, min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio * peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / max(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)

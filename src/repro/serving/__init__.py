@@ -1,0 +1,4 @@
+"""Batched serving engine with KV caches and decode-side caching."""
+from .engine import ServingEngine, GenerationResult, greedy_generate
+
+__all__ = ["ServingEngine", "GenerationResult", "greedy_generate"]

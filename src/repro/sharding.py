@@ -1,0 +1,272 @@
+"""Sharding rules: param/input/cache PartitionSpecs for the production mesh.
+
+Two mesh layouts are supported transparently:
+
+  contract mesh  ("data", "model")               [+ leading "pod"]
+  logical mesh   ("data", "attn", "ffn")         [+ leading "pod"]
+
+The logical mesh (launch.mesh.make_logical_mesh) factors the 16-chip tensor
+axis per architecture so attention-head sharding stays head-aligned
+(attn | KV-heads); "attn"+"ffn" composed recover the full 16-way tensor
+parallelism for FFN / vocab / expert-inner dims.  On the contract mesh the
+single "model" axis plays both roles (and _sanitize drops it wherever the
+dim is not divisible — the involuntary-remat fallback measured in
+EXPERIMENTS §Perf).
+
+Rules (DESIGN §5):
+  * attention projections: head axis on ATTN
+  * MLP / expert-inner / vocab / mamba-inner dims: on TP (= attn+ffn)
+  * MoE expert axis: on "data" (expert parallelism; also shards optimizer
+    moments 256-way, ZeRO-equivalent — what lets the 236B/480B MoEs fit)
+  * activations: batch on ("pod","data")
+  * KV caches: batch on data, kv-heads on ATTN, head_dim on "ffn"
+  * optimizer moments: same spec as their param
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def batch_axes(mesh: Mesh):
+    """The composed batch axis: ("pod","data") on multi-pod meshes."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def attn_axis(mesh: Mesh) -> str:
+    return "attn" if "attn" in mesh.axis_names else "model"
+
+
+def tp_axes(mesh: Mesh):
+    """Full tensor-parallel axis (attn+ffn composed, or plain model)."""
+    return ("attn", "ffn") if "attn" in mesh.axis_names else ("model",)
+
+
+def ffn_axis(mesh: Mesh) -> str:
+    return "ffn" if "ffn" in mesh.axis_names else "model"
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, axes, dim: int):
+    """axes if dim is divisible by their product, else None (replicate)."""
+    return axes if dim % _axes_size(mesh, axes) == 0 else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# ----------------------------------------------------------------------
+# parameter sharding rules
+# ----------------------------------------------------------------------
+
+def param_spec(path: str, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (unstacked suffix rules; a
+    leading None is prepended for scan-stacked block params)."""
+    ATTN, TP = attn_axis(mesh), tp_axes(mesh)
+    stacked = bool(re.search(r"(^|/)(blocks|enc_blocks|dec_blocks)/", path))
+    ndim = leaf.ndim - (1 if stacked else 0)
+
+    def out(*spec):
+        spec = list(spec)
+        spec = spec[:ndim] + [None] * max(0, ndim - len(spec))
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    # --- embeddings / vocab projections: vocab on the full tensor axis ---
+    if re.search(r"(^|/)embed$", path):
+        return out(TP, None)                 # (vocab, d)
+    if re.search(r"(^|/)lm_head$", path):
+        return out(None, TP)                 # (d, vocab)
+
+    # --- MoE experts: expert axis on data + inner ff on tensor axis ---
+    if re.search(r"/moe/w_(gate|up)$", path):
+        return out("data", None, TP)         # (E, d, ff)
+    if re.search(r"/moe/w_down$", path):
+        return out("data", TP, None)         # (E, ff, d)
+    if re.search(r"/moe/router$", path):
+        return out(None, None)               # small; replicate for routing
+    if re.search(r"/moe/(shared|dense_res)/", path):
+        if re.search(r"w_down$", path):
+            return out(TP, None)
+        return out(None, TP)
+
+    # --- attention projections: whole heads on ATTN ---
+    if re.search(r"(attn|self|cross)/w[qkv]$", path):
+        return out(None, ATTN)               # (d, H*hd), head-aligned
+    if re.search(r"(attn|self|cross)/wo$", path):
+        return out(ATTN, None)               # (H*hd, d)
+    if re.search(r"(attn|self|cross)/b[qkv]$", path):
+        return out(ATTN)
+
+    # --- MLA (deepseek) ---
+    if re.search(r"attn/(w_dkv|w_kr)$", path):
+        return out(None, None)               # small lora-down: replicate
+    if re.search(r"attn/(w_uk|w_uv)$", path):
+        return out(ATTN, None, None)         # (H, r, d): heads on ATTN
+
+    # --- MLP ---
+    if re.search(r"mlp/(w_up|w_gate)$", path):
+        return out(None, TP)
+    if re.search(r"mlp/w_down$", path):
+        return out(TP, None)
+
+    # --- mamba: inner channels on the full tensor axis ---
+    if re.search(r"mamba/in_proj$", path):
+        return out(None, TP)
+    if re.search(r"mamba/out_proj$", path):
+        return out(TP, None)
+    if re.search(r"mamba/(x_proj|dt_proj)$", path):
+        return out(None, None)
+    if re.search(r"mamba/(conv_w|conv_b|A_log|D|dt_bias|norm_w)$", path):
+        return out(None)
+
+    # --- DiT ---
+    if re.search(r"(ada_w|final_ada_w)$", path):
+        return out(None, TP)
+    if re.search(r"patch_out$", path):
+        return out(TP, None)
+    if re.search(r"(patch_in|t_mlp1|t_mlp2|vision_proj|class_embed)$", path):
+        return out(None, None)
+
+    # norms, biases, everything small: replicate
+    return out()
+
+
+def _sanitize(mesh: Mesh, spec: P, shape) -> P:
+    """Drop mesh axes whose size does not divide the dim (whisper's 51865
+    vocab, GQA kv-heads < shards, ...)."""
+    fixed = []
+    for i, axes in enumerate(spec):
+        fixed.append(_fit(mesh, axes, int(shape[i])) if axes else None)
+    return P(*fixed)
+
+
+def _add_fsdp(mesh: Mesh, spec: P, leaf) -> P:
+    """ZeRO/FSDP: additionally shard a large leaf over "data" on its first
+    free divisible dim (weights are all-gathered at use; optimizer moments
+    inherit the spec and shrink 16x)."""
+    if leaf.size < 1 << 20 or any("data" in (ax if isinstance(ax, tuple)
+                                             else (ax,))
+                                  for ax in spec if ax):
+        return spec
+    fixed = list(spec)
+    for i, ax in enumerate(fixed):
+        if ax is None and int(leaf.shape[i]) % mesh.shape["data"] == 0                 and leaf.shape[i] >= 1024:
+            fixed[i] = "data"
+            return P(*fixed)
+    return spec
+
+
+def params_sharding(params: PyTree, mesh: Mesh, fsdp: bool = False) -> PyTree:
+    """NamedSharding pytree matching `params`.
+
+    fsdp=True additionally shards big weights over the data axis (used by
+    the >10B-param train cases so params + AdamW moments fit 16 GB HBM)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for p, l in flat:
+        spec = _sanitize(mesh, param_spec(_path_str(p), l, mesh), l.shape)
+        if fsdp:
+            spec = _add_fsdp(mesh, spec, l)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), out)
+
+
+# ----------------------------------------------------------------------
+# activations / inputs / caches
+# ----------------------------------------------------------------------
+
+def inputs_sharding(inputs: PyTree, mesh: Mesh) -> PyTree:
+    """Batch-shard every input leaf on its leading axis (replicate if the
+    batch does not divide the mesh, e.g. long_500k's global_batch=1)."""
+    ba = batch_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, P(_fit(mesh, ba, leaf.shape[0]), *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(spec, inputs)
+
+
+def cache_spec(path: str, leaf, mesh: Mesh) -> P:
+    """KV/state caches: batch on data, kv-heads on ATTN, head_dim on ffn.
+
+    Layouts: k/v (L,B,W,KH,hd); ckv/kr (L,B,W,r); pos (B,W);
+    conv (L,B,W,C); state (L,B,...,n); encdec xk/xv (L,B,S,H,hd).
+
+    When batch cannot shard (long_500k B=1) the KV *sequence* axis takes
+    the data axis instead — sequence-parallel cache, XLA inserts the
+    softmax-reduction collectives."""
+    ba = batch_axes(mesh)
+    ATTN, FFN, TP = attn_axis(mesh), ffn_axis(mesh), tp_axes(mesh)
+    name = path.split("/")[-1]
+    if name == "pos":
+        b = _fit(mesh, ba, leaf.shape[0])
+        w = ba if b is None and leaf.shape[1] % _axes_size(mesh, ba) == 0 else None
+        return P(b, w)
+    if name in ("k", "v", "xk", "xv", "ckv", "kr"):
+        b = _fit(mesh, ba, leaf.shape[1])
+        w = ba if b is None and leaf.shape[2] % _axes_size(mesh, ba) == 0 else None
+        if name in ("ckv", "kr"):
+            # MLA compressed cache has no head axis: the sequence axis takes
+            # the tensor axis (sequence-parallel; scores psum over shards)
+            wm = _fit(mesh, TP, leaf.shape[2])
+            return P(None, b, wm if w is None else w, None)
+        kh = _fit(mesh, ATTN, leaf.shape[3])
+        hd = _fit(mesh, FFN, leaf.shape[4]) if FFN != ATTN else None
+        return P(None, b, w, kh, hd)
+    if name == "conv":
+        return P(None, _fit(mesh, ba, leaf.shape[1]), None,
+                 _fit(mesh, TP, leaf.shape[3]))
+    if name == "state":
+        spec = [None, _fit(mesh, ba, leaf.shape[1])] + [None] * (leaf.ndim - 2)
+        if leaf.ndim >= 3:
+            spec[2] = _fit(mesh, TP, leaf.shape[2])   # heads/din axis
+        return P(*spec)
+    # predictive-cache diff stacks (order+1, B, ...): batch on axis 1
+    if name == "diffs":
+        spec = [None, _fit(mesh, ba, leaf.shape[1])] + [None] * (leaf.ndim - 2)
+        return P(*spec)
+    return P(*([None] * leaf.ndim))
+
+
+def cache_sharding(cache: PyTree, mesh: Mesh) -> PyTree:
+    flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, cache_spec(_path_str(p), l, mesh)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache), out)
+
+
+def logits_sharding(mesh: Mesh, ndim: int = 3, batch: Optional[int] = None,
+                    vocab: Optional[int] = None) -> NamedSharding:
+    """(B, ..., vocab) -> (batch-axes, ..., tensor-axes)."""
+    ba = batch_axes(mesh)
+    if batch is not None:
+        ba = _fit(mesh, ba, batch)
+    tp = tp_axes(mesh)
+    if vocab is not None:
+        tp = _fit(mesh, tp, vocab)   # whisper's 51865 does not divide 16
+    spec = [ba] + [None] * (ndim - 2) + [tp]
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+"""Training substrate: losses, step functions, the loop."""
+from .steps import (diffusion_loss, lm_loss, make_diffusion_train_step,
+                    make_lm_train_step, TrainState)
+from .loop import train_loop
+
+__all__ = ["lm_loss", "diffusion_loss", "make_lm_train_step",
+           "make_diffusion_train_step", "TrainState", "train_loop"]

@@ -1,0 +1,37 @@
+"""Generic training loop: jit, periodic logging, periodic checkpointing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+
+
+def train_loop(step_fn: Callable, state, batches: Iterator, num_steps: int, *,
+               log_every: int = 10, ckpt_dir: Optional[str] = None,
+               ckpt_every: int = 500, log_fn=print, jit: bool = True,
+               donate: bool = True):
+    """Run `num_steps` of `step_fn(state, batch) -> (state, metrics)`.
+
+    Returns (final state, list of metric dicts)."""
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches):
+        if i >= num_steps:
+            break
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics["steps_per_s"] = (i + 1) / dt
+            history.append({"step": i + 1, **metrics})
+            log_fn(f"step {i+1:5d}  " + "  ".join(
+                f"{k}={v:.4g}" for k, v in metrics.items()))
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            ckpt_lib.save(ckpt_dir, i + 1, state)
+    return state, history

@@ -1,0 +1,145 @@
+"""Loss functions and jit-able train steps for both workload kinds.
+
+`make_*_train_step` returns a pure (state, batch) -> (state, metrics)
+function suitable for `jax.jit` / `pjit` with shardings; gradient
+accumulation splits the batch into microbatches inside one step via
+`lax.scan` (constant memory in accumulation factor).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_params
+from repro.models import transformer, dit
+from repro.optim import (AdamWState, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_warmup_schedule)
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+
+
+def init_train_state(key, cfg, dtype=None) -> TrainState:
+    params = init_params(key, cfg, dtype)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+# ----------------------------------------------------------------------
+# losses
+# ----------------------------------------------------------------------
+
+def lm_loss(params, tokens, targets, cfg, *, vision_embeds=None,
+            aux_weight: float = 0.01, z_weight: float = 1e-3):
+    """Causal-LM cross-entropy (+ MoE aux losses when applicable)."""
+    logits, aux = transformer.forward(params, tokens, cfg,
+                                      vision_embeds=vision_embeds)
+    if cfg.family == "vlm":           # vision tokens carry no LM targets
+        logits = logits[:, cfg.num_vision_tokens:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = (loss + aux_weight * aux["load_balance_loss"]
+             + z_weight * aux["router_z_loss"])
+    return total, {"loss": loss, "lb_loss": aux["load_balance_loss"],
+                   "z_loss": aux["router_z_loss"]}
+
+
+def diffusion_loss(params, latents, labels, cfg, sched, key):
+    """DDPM eps-prediction MSE (survey Eq. 8)."""
+    B = latents.shape[0]
+    kt, ke, kd = jax.random.split(key, 3)
+    t = jax.random.randint(kt, (B,), 0, sched.T)
+    eps = jax.random.normal(ke, latents.shape, latents.dtype)
+    x_t = sched.q_sample(latents, t, eps)
+    # classifier-free guidance training: drop the label 10% of the time
+    drop = jax.random.bernoulli(kd, 0.1, (B,))
+    y = jnp.where(drop, cfg.dit_num_classes, labels)
+    eps_hat = dit.forward(params, x_t.astype(jnp.dtype(cfg.dtype)),
+                          t.astype(jnp.float32), y, cfg)
+    loss = jnp.mean(jnp.square(eps_hat.astype(jnp.float32) - eps))
+    return loss, {"loss": loss}
+
+
+# ----------------------------------------------------------------------
+# train steps (with optional gradient accumulation)
+# ----------------------------------------------------------------------
+
+def _accumulated_grads(loss_fn, params, batch, accum: int):
+    """Mean grads/metrics over `accum` microbatches via lax.scan."""
+    if accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, metrics
+
+    micro = jax.tree_util.tree_map(
+        lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]), batch)
+
+    def body(carry, mb):
+        g_acc, m_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+        m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
+        return (g_acc, m_acc), None
+
+    zeros_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = None
+    # one dry eval_shape to build the metric zeros
+    metric_shape = jax.eval_shape(
+        lambda p, b: loss_fn(p, b)[1], params,
+        jax.tree_util.tree_map(lambda a: a[0], micro))
+    zeros_m = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), metric_shape)
+    (g, m), _ = jax.lax.scan(body, (zeros_g, zeros_m), micro)
+    inv = 1.0 / accum
+    return (jax.tree_util.tree_map(lambda a: a * inv, g),
+            jax.tree_util.tree_map(lambda a: a * inv, m))
+
+
+def make_lm_train_step(cfg, *, peak_lr=3e-4, warmup=100, total_steps=10_000,
+                       accum: int = 1, max_grad_norm: float = 1.0,
+                       weight_decay: float = 0.1):
+    def loss_fn(params, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        return lm_loss(params, tokens, targets, cfg,
+                       vision_embeds=batch.get("vision_embeds"))
+
+    def step(state: TrainState, batch) -> tuple:
+        grads, metrics = _accumulated_grads(loss_fn, state.params, batch, accum)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_warmup_schedule(state.opt.step, peak_lr=peak_lr,
+                                    warmup_steps=warmup, total_steps=total_steps)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr,
+                                   weight_decay=weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def make_diffusion_train_step(cfg, sched, *, peak_lr=1e-4, warmup=100,
+                              total_steps=10_000, accum: int = 1,
+                              max_grad_norm: float = 1.0):
+    def step(state: TrainState, batch):
+        def loss_fn(params, b):
+            return diffusion_loss(params, b["latents"], b["labels"], cfg,
+                                  sched, b["key"])
+
+        grads, metrics = _accumulated_grads(loss_fn, state.params, batch, accum)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_warmup_schedule(state.opt.step, peak_lr=peak_lr,
+                                    warmup_steps=warmup, total_steps=total_steps)
+        params, opt = adamw_update(grads, state.opt, state.params, lr=lr,
+                                   weight_decay=0.0)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params, opt), metrics
+
+    return step

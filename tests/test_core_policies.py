@@ -1,0 +1,249 @@
+"""Unit tests for the cache policy library (survey taxonomy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ClusCaPolicy, DeltaCachePolicy, EasyCachePolicy,
+                        FixedIntervalPolicy, FreqCaPolicy, MagCachePolicy,
+                        NoCachePolicy, PredictivePolicy, SpeCaPolicy,
+                        TeaCachePolicy, BlockCachePolicy, ForesightPolicy,
+                        CachedStack, DBCacheStack, cache_state_bytes,
+                        compute_fraction, make_policy, POLICY_REGISTRY)
+
+SHAPE = (8, 16)
+
+
+def run_policy(policy, fn, xs, dynamic=False, **sig_fn):
+    """Drive a policy over a trajectory xs; returns outputs and # computes."""
+    state = policy.init_state(SHAPE)
+    n_computes = [0]
+
+    def wrapped(x):
+        n_computes[0] += 1
+        return fn(x)
+
+    outs = []
+    for step, x in enumerate(xs):
+        s = jnp.asarray(step) if dynamic else step
+        y, state = policy.apply(state, s, x, wrapped)
+        outs.append(y)
+    return outs, n_computes[0], state
+
+
+def make_traj(T=12, seed=0):
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, SHAPE)
+    drift = jax.random.normal(jax.random.PRNGKey(seed + 1), SHAPE) * 0.01
+    return [base + t * drift for t in range(T)]
+
+
+def test_nocache_always_computes():
+    xs = make_traj()
+    outs, n, _ = run_policy(NoCachePolicy(), lambda x: x * 2, xs)
+    assert n == len(xs)
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(y, x * 2, rtol=1e-6)
+
+
+def test_fixed_interval_schedule_and_reuse():
+    xs = make_traj(T=8)
+    pol = FixedIntervalPolicy(4)
+    outs, n, _ = run_policy(pol, lambda x: x * 3, xs)
+    assert n == 2  # steps 0 and 4
+    np.testing.assert_allclose(outs[1], outs[0], rtol=1e-6)  # verbatim reuse
+    np.testing.assert_allclose(outs[4], xs[4] * 3, rtol=1e-6)
+    assert pol.static_schedule(8) == [True, False, False, False] * 2
+    assert compute_fraction(pol.static_schedule(8)) == 0.25
+
+
+def test_delta_cache_tracks_input():
+    """Δ-DiT: reuse incorporates the fresh input x' + Δ (Eq. residual)."""
+    xs = make_traj(T=4)
+    pol = DeltaCachePolicy(4)
+    outs, n, _ = run_policy(pol, lambda x: x + 1.0, xs)
+    assert n == 1
+    # for f(x)=x+1, delta = 1 exactly -> reuse is EXACT even as x drifts
+    for x, y in zip(xs, outs):
+        np.testing.assert_allclose(y, x + 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("basis,deg", [("newton", 1), ("newton", 2)])
+def test_newton_forecast_exact_on_polynomials(basis, deg):
+    """Newton finite-difference forecasting is exact for polynomial
+    trajectories of degree <= order sampled on the compute grid."""
+    T, N = 13, 4
+    t = np.arange(T, dtype=np.float32)
+    coef = np.random.RandomState(0).randn(deg + 1)
+    vals = sum(c * t**i for i, c in enumerate(coef))  # (T,)
+    xs = [jnp.full(SHAPE, float(v)) for v in vals]
+    pol = PredictivePolicy(N, order=2, basis=basis)
+    # identity module: output == input trajectory value
+    outs, n, _ = run_policy(pol, lambda x: x, xs)
+    assert n == (T + N - 1) // N  # computes at 0, 4, 8, 12
+    # after warm-up (2 computes for deg 1, 3 for deg 2), forecasts are exact
+    warm = (deg + 1 - 1) * N + 1
+    for s in range(warm, T):
+        np.testing.assert_allclose(np.asarray(outs[s]), np.full(SHAPE, vals[s]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_taylor_beats_reuse_on_linear_drift():
+    xs = make_traj(T=12)
+    f = lambda x: x * 1.5
+    ref = [f(x) for x in xs]
+    _, _, _ = run_policy(FixedIntervalPolicy(4), f, xs)
+    outs_reuse, _, _ = run_policy(FixedIntervalPolicy(4), f, xs)
+    outs_taylor, _, _ = run_policy(PredictivePolicy(4, 2, "taylor"), f, xs)
+    err_reuse = sum(float(jnp.mean((a - b) ** 2)) for a, b in zip(outs_reuse, ref))
+    err_taylor = sum(float(jnp.mean((a - b) ** 2)) for a, b in zip(outs_taylor, ref))
+    assert err_taylor < err_reuse
+
+
+def test_hermite_contraction_bounded():
+    """HiCache: contracted Hermite forecasts stay bounded where raw
+    high-order extrapolation may overshoot."""
+    xs = make_traj(T=12)
+    pol = PredictivePolicy(4, order=3, basis="hermite", sigma=0.3)
+    outs, _, _ = run_policy(pol, lambda x: x, xs)
+    for y in outs:
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_teacache_accumulates_and_refreshes():
+    # NB: dynamic policies run under lax.cond, so the number of *executed*
+    # computes is read from the state counter, not a Python-side counter.
+    pol = TeaCachePolicy(delta=0.05)
+    const = [jnp.ones(SHAPE)] * 6
+    _, _, st = run_policy(pol, lambda x: x * 2, const, dynamic=True)
+    assert int(st["n_compute"]) == 1
+    jumpy = make_traj(T=6, seed=3)
+    jumpy = [x * (1 + 0.5 * t) for t, x in enumerate(jumpy)]
+    _, _, st2 = run_policy(TeaCachePolicy(delta=0.05), lambda x: x * 2,
+                           jumpy, dynamic=True)
+    assert int(st2["n_compute"]) > 1
+
+
+def test_magcache_threshold_controls_refresh_rate():
+    xs = make_traj(T=20)
+    _, _, st_tight = run_policy(MagCachePolicy(0.02, num_steps=20),
+                                lambda x: x, xs, dynamic=True)
+    _, _, st_loose = run_policy(MagCachePolicy(0.5, num_steps=20),
+                                lambda x: x, xs, dynamic=True)
+    assert int(st_tight["n_compute"]) > int(st_loose["n_compute"])
+
+
+def test_easycache_linear_trajectory_accepts():
+    # perfectly linear module on linear inputs -> Delta reuse is exact,
+    # so only warmup computes happen for a generous tau
+    xs = make_traj(T=10)
+    pol = EasyCachePolicy(tau=50.0, warmup=2)
+    outs, _, st = run_policy(pol, lambda x: x + 0.5, xs, dynamic=True)
+    assert int(st["n_compute"]) <= 4
+    ref = [x + 0.5 for x in xs]
+    for a, b in zip(outs[2:], ref[2:]):
+        np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+def test_blockcache_schedule_from_profile():
+    profile = [0.0, 0.01, 0.01, 0.5, 0.01, 0.01, 0.6, 0.01]
+    pol = BlockCachePolicy(profile, delta=0.1)
+    sched = pol.static_schedule(8)
+    assert sched[0] is True
+    assert sched[3] is True and sched[6] is True
+    assert sched[1] is False and sched[2] is False
+    xs = make_traj(T=8)
+    outs, n, _ = run_policy(pol, lambda x: x, xs)
+    assert n == sum(sched)
+
+
+def test_foresight_warmup_then_gates():
+    xs = [jnp.ones(SHAPE)] * 8  # static input -> after warmup, reuse
+    pol = ForesightPolicy(gamma=1.0, warmup=3)
+    _, _, st = run_policy(pol, lambda x: x * 2, xs, dynamic=True)
+    assert int(st["n_compute"]) == 3
+
+
+def test_freqca_exact_on_static_features():
+    xs = [jnp.ones(SHAPE)] * 8
+    pol = FreqCaPolicy(4, cutoff=0.25)
+    outs, n, _ = run_policy(pol, lambda x: x * 2 + 1, xs)
+    assert n == 2
+    for y in outs:
+        np.testing.assert_allclose(np.asarray(y), np.full(SHAPE, 3.0), atol=1e-4)
+
+
+def test_clusca_partial_compute():
+    pol = ClusCaPolicy(interval=2, k=4, gamma=1.0)
+    f = lambda x: x * 2.0
+    state = pol.init_state(SHAPE)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), SHAPE)
+    y0, state = pol.apply(state, 0, x0, f, subset_fn=f)
+    np.testing.assert_allclose(y0, x0 * 2, rtol=1e-5)
+    x1 = x0 + 0.01
+    y1, state = pol.apply(state, 1, x1, f, subset_fn=f)
+    # representative tokens are exact
+    reps = np.asarray(state["reps"])
+    np.testing.assert_allclose(np.asarray(y1)[reps], np.asarray(x1 * 2)[reps],
+                               rtol=1e-4)
+
+
+def test_speca_accepts_good_and_rejects_bad():
+    f = lambda x: x  # identity: taylor forecast of linear drift is exact
+    pol = SpeCaPolicy(interval=4, order=2, tau=0.05, probe=4)
+    xs = make_traj(T=12)
+    outs, n, state = run_policy(pol, f, xs, dynamic=True,)
+    # now force rejection with a jumpy trajectory
+    pol2 = SpeCaPolicy(interval=6, order=1, tau=1e-6, probe=4)
+    state2 = pol2.init_state(SHAPE)
+    n2 = [0]
+
+    def g(x):
+        n2[0] += 1
+        return jnp.sin(x * 10)
+
+    for step, x in enumerate(make_traj(T=12, seed=5)):
+        y, state2 = pol2.apply(state2, jnp.asarray(step), x, g,
+                               subset_fn=g)
+    assert int(state2["rejects"]) > 0
+
+
+def test_cached_stack_scan():
+    L, T = 4, 6
+    pol = FixedIntervalPolicy(3)
+    block = lambda p, x: x * p["w"]
+    stack = CachedStack(block, pol, L)
+    params = {"w": jnp.ones((L,)) * 1.1}
+    states = stack.init(SHAPE)
+    x = jnp.ones(SHAPE)
+    for step in range(T):
+        y, states = stack(states, step, x, params)
+    assert y.shape == SHAPE
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_dbcache_stack_probe_gate():
+    L = 6
+    block = lambda p, x: x + p["b"]
+    stack = DBCacheStack(block, L, front_n=2, back_n=2, threshold=0.01)
+    params = {"b": jnp.full((L,), 0.1)}
+    state = stack.init(SHAPE)
+    x = jnp.ones(SHAPE)
+    y1, state = stack(state, 0, x, params)
+    np.testing.assert_allclose(y1, x + 0.6, rtol=1e-5)
+    # same input again -> probe unchanged -> mid reused (still correct here)
+    y2, state = stack(state, 1, x, params)
+    np.testing.assert_allclose(y2, x + 0.6, rtol=1e-5)
+
+
+def test_registry_builds_all():
+    for name in POLICY_REGISTRY:
+        pol = make_policy(name)
+        state = pol.init_state(SHAPE)
+        assert isinstance(state, dict)
+
+
+def test_cache_state_bytes():
+    pol = PredictivePolicy(4, order=2)
+    state = pol.init_state(SHAPE)
+    assert cache_state_bytes(state) >= 3 * 8 * 16 * 4

@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, forecast, ssd_scan
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.forecast.ref import basis_coeffs, forecast_ref
+from repro.kernels.ssd.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KH,D", [
+    (1, 128, 128, 4, 4, 64),    # MHA
+    (2, 256, 256, 8, 2, 64),    # GQA group 4
+    (1, 128, 256, 4, 1, 32),    # MQA, cross-length (decode-tail window)
+    (1, 512, 512, 4, 2, 128),   # MXU-aligned head dim
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KH, D, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KH, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol, rtol=1e-2)
+    assert out.dtype == dtype
+
+
+def test_flash_attention_block_shapes():
+    """Output must be independent of tile sizes."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 256), (256, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# forecast
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+@pytest.mark.parametrize("basis", ["taylor", "newton", "hermite", "ab"])
+def test_forecast_matches_ref(order, basis):
+    d = jax.random.normal(KEY, (order + 1, 3, 130, 17))
+    c = basis_coeffs(order, 1.75, basis)
+    out = forecast(d, c, interpret=True)
+    ref = forecast_ref(d, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 127, 4096, 4097, 10_000])
+def test_forecast_padding_edges(n):
+    """N not divisible by the block must round-trip exactly."""
+    d = jax.random.normal(KEY, (3, n))
+    c = basis_coeffs(2, 0.5, "taylor")
+    out = forecast(d, c, block_n=4096, interpret=True)
+    ref = forecast_ref(d, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forecast_dtypes(dtype):
+    d = jax.random.normal(KEY, (3, 1024)).astype(dtype)
+    c = basis_coeffs(2, 1.0, "taylor")
+    out = forecast(d, c, interpret=True)
+    assert out.dtype == dtype
+    ref = forecast_ref(d, c)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-5 if dtype == jnp.float32 else 5e-2)
+
+
+# ----------------------------------------------------------------------
+# ssd
+# ----------------------------------------------------------------------
+
+def _ssd_inputs(b, s, h, p, n, key=KEY):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (h,), minval=0.0, maxval=1.0))
+    B_ = jax.random.normal(ks[3], (b, s, n))
+    C_ = jax.random.normal(ks[4], (b, s, n))
+    return x, dt, A, B_, C_
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 16, 8, 32),
+    (1, 128, 1, 32, 16, 64),
+    (1, 96, 2, 8, 4, 32),       # nc = 3 (odd chunk count)
+])
+def test_ssd_matches_ref(b, s, h, p, n, chunk):
+    x, dt, A, B_, C_ = _ssd_inputs(b, s, h, p, n)
+    y, hf = ssd_scan(x, dt, A, B_, C_, chunk=chunk, interpret=True)
+    yr, hr = ssd_ref(x, dt, A, B_, C_, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """The scan result must not depend on the chunking."""
+    x, dt, A, B_, C_ = _ssd_inputs(1, 128, 2, 8, 4)
+    y1, h1 = ssd_scan(x, dt, A, B_, C_, chunk=16, interpret=True)
+    y2, h2 = ssd_scan(x, dt, A, B_, C_, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_state_matches_sequential_decode():
+    """Kernel chunk-final state == token-by-token recurrence state."""
+    b, s, h, p, n = 1, 32, 2, 8, 4
+    x, dt, A, B_, C_ = _ssd_inputs(b, s, h, p, n)
+    _, hf = ssd_scan(x, dt, A, B_, C_, chunk=8, interpret=True)
+    hstate = jnp.zeros((b, h, p, n))
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A)                           # (b,h)
+        upd = (dt[:, t, :, None, None] * x[:, t, :, :, None]
+               * B_[:, t, None, None, :])
+        hstate = hstate * dA[..., None, None] + upd
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hstate), atol=2e-4,
+                               rtol=1e-3)

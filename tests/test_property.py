@@ -1,0 +1,169 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_policy, compute_fraction
+from repro.core.predictive import (forecast_from_diffs, update_diff_stack)
+from repro.kernels.forecast.ref import basis_coeffs, forecast_ref
+from repro.diffusion import linear_schedule, cosine_schedule
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ----------------------------------------------------------------------
+# predictive caching: polynomial exactness
+# ----------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(order=st.integers(1, 3),
+       coeffs=st.lists(st.floats(-2, 2), min_size=4, max_size=4),
+       u=st.floats(0.25, 3.0))
+def test_newton_forecast_exact_for_polynomials(order, coeffs, u):
+    """The Newton backward-difference basis must reproduce any polynomial
+    trajectory of degree <= order exactly on the sampling grid."""
+    def traj(t):
+        return sum(c * t**i for i, c in enumerate(coeffs[:order + 1]))
+
+    shape = (3, 5)
+    diffs = jnp.zeros((order + 1, *shape))
+    # observe at t = 0, 1, ..., order (unit grid)
+    for t in range(order + 1):
+        y = jnp.full(shape, traj(float(t)), jnp.float32)
+        diffs = update_diff_stack(diffs, y)
+    pred = forecast_from_diffs(diffs, jnp.asarray(u), order + 1, "newton")
+    expected = traj(order + u)
+    np.testing.assert_allclose(np.asarray(pred),
+                               np.full(shape, expected, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(order=st.integers(1, 4), u=st.floats(0.0, 4.0),
+       basis=st.sampled_from(["taylor", "newton", "hermite", "ab"]))
+def test_forecast_linear_in_history(order, u, basis):
+    """Every polynomial forecast basis is a LINEAR operator on the history
+    stack: F(a*d1 + b*d2) == a*F(d1) + b*F(d2)."""
+    key = jax.random.PRNGKey(order)
+    d1 = jax.random.normal(key, (order + 1, 4, 3))
+    d2 = jax.random.normal(jax.random.PRNGKey(order + 1), (order + 1, 4, 3))
+    a, b = 0.7, -1.3
+    f = lambda d: forecast_from_diffs(d, jnp.asarray(u), order + 1, basis)
+    lhs = f(a * d1 + b * d2)
+    rhs = a * f(d1) + b * f(d2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(order=st.integers(1, 4),
+       basis=st.sampled_from(["taylor", "newton", "ab"]))
+def test_forecast_at_zero_offset_returns_cache(order, basis):
+    """u=0 must return the newest cached feature exactly (consistency of
+    Cache-Then-Forecast with Cache-Then-Reuse at the refresh point).
+
+    Note: the Hermite basis (HiCache Eq. 47) is deliberately excluded —
+    physicists' Hermite polynomials do not vanish at 0 for even orders
+    (H_2(0) = -2), so HiCache's u=0 forecast differs from the cache by
+    O(sigma^2 * d2): a real property of the published method."""
+    d = jax.random.normal(jax.random.PRNGKey(0), (order + 1, 6))
+    out = forecast_from_diffs(d, jnp.asarray(0.0), order + 1, basis)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(d[0]), atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(order=st.integers(1, 3), n=st.integers(1, 6))
+def test_diff_stack_matches_binomial_formula(order, n):
+    """After observing y_0..y_{n-1}, diffs[i] must equal the i-th backward
+    difference sum_j (-1)^j C(i,j) y_{n-1-j}."""
+    import math
+    key = jax.random.PRNGKey(n)
+    ys = jax.random.normal(key, (n, 4))
+    diffs = jnp.zeros((order + 1, 4))
+    for t in range(n):
+        diffs = update_diff_stack(diffs, ys[t])
+    for i in range(min(order, n - 1) + 1):
+        expect = sum((-1) ** j * math.comb(i, j) * np.asarray(ys[n - 1 - j])
+                     for j in range(i + 1))
+        np.testing.assert_allclose(np.asarray(diffs[i]), expect, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# kernels: forecast == tensordot for arbitrary coeffs
+# ----------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(order=st.integers(1, 4), n=st.integers(1, 300),
+       u=st.floats(0.1, 2.0))
+def test_forecast_kernel_arbitrary_shapes(order, n, u):
+    from repro.kernels import forecast
+    d = jax.random.normal(jax.random.PRNGKey(n), (order + 1, n))
+    c = basis_coeffs(order, u, "taylor")
+    np.testing.assert_allclose(np.asarray(forecast(d, c, interpret=True)),
+                               np.asarray(forecast_ref(d, c)), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(T=st.integers(10, 500))
+def test_noise_schedule_monotone(T):
+    for sched in (linear_schedule(T), cosine_schedule(T)):
+        ab = sched.alpha_bars
+        assert np.all(np.diff(ab) <= 1e-12), "alpha_bar must be decreasing"
+        assert 0.0 < ab[-1] < ab[0] <= 1.0
+
+
+@settings(**SETTINGS)
+@given(T=st.integers(20, 300), n=st.integers(2, 20))
+def test_spaced_timesteps_descending_cover(T, n):
+    n = min(n, T)
+    ts = linear_schedule(T).spaced(n)
+    assert ts[0] == T - 1 and ts[-1] == 0
+    assert np.all(np.diff(ts) < 0)
+
+
+# ----------------------------------------------------------------------
+# policy invariants
+# ----------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(interval=st.integers(1, 8), steps=st.integers(1, 50))
+def test_fixed_interval_compute_fraction(interval, steps):
+    pol = make_policy("fora", interval=interval)
+    sched = pol.static_schedule(steps)
+    assert sched[0] is True                      # first step always computes
+    assert abs(compute_fraction(sched) - sum(
+        1 for s in range(steps) if s % interval == 0) / steps) < 1e-9
+
+
+@settings(**SETTINGS)
+@given(name=st.sampled_from(["fora", "delta_dit", "taylorseer", "hicache",
+                             "teacache", "magcache", "easycache", "freqca"]),
+       steps=st.integers(2, 12))
+def test_policy_first_step_is_exact(name, steps):
+    """Every policy must return the exact computation at step 0 (cold
+    cache) — the survey's C_t := F(x_t) base case."""
+    pol = make_policy(name)
+    shape = (2, 8, 4)
+    state = pol.init_state(shape)
+    x = jax.random.normal(jax.random.PRNGKey(steps), shape)
+    fn = lambda v: v * 2.0 + 1.0
+    y, state = pol.apply(state, 0, x, fn)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(fn(x)), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(steps=st.integers(4, 24))
+def test_nocache_policy_is_identity_baseline(steps):
+    pol = make_policy("none")
+    shape = (3, 4)
+    state = pol.init_state(shape)
+    for s in range(steps):
+        x = jax.random.normal(jax.random.PRNGKey(s), shape)
+        y, state = pol.apply(state, s, x, lambda v: v + s)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x) + s, atol=1e-6)

@@ -1,0 +1,106 @@
+"""Unit tests for the rule-based sharding system (repro.sharding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+        self.ndim = len(shape)
+        self.size = int(np.prod(shape))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device meshes preserve the axis names; rules only read names/sizes
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    return jax.sharding.Mesh(dev, ("data", "attn", "ffn"))
+
+
+@pytest.mark.parametrize("path,shape,expect", [
+    ("embed", (32000, 2048), P(("attn", "ffn"), None)),
+    ("lm_head", (2048, 32000), P(None, ("attn", "ffn"))),
+    ("blocks/attn/wq", (28, 3584, 3584), P(None, None, "attn")),
+    ("blocks/attn/wo", (28, 3584, 3584), P(None, "attn", None)),
+    ("blocks/mlp/w_up", (28, 3584, 18944), P(None, None, ("attn", "ffn"))),
+    ("blocks/mlp/w_down", (28, 18944, 3584), P(None, ("attn", "ffn"), None)),
+    ("blocks/moe/w_gate", (60, 160, 5120, 1536),
+     P(None, "data", None, ("attn", "ffn"))),
+    ("blocks/moe/w_down", (60, 160, 1536, 5120),
+     P(None, "data", ("attn", "ffn"), None)),
+    ("blocks/moe/router", (60, 5120, 160), P(None, None, None)),
+    ("blocks/attn/w_uk", (60, 128, 512, 128), P(None, "attn", None, None)),
+    ("blocks/mamba/in_proj", (64, 4096, 16448),
+     P(None, None, ("attn", "ffn"))),
+    ("blocks/ln1", (28, 3584), P(None, None)),
+    ("final_norm", (3584,), P(None)),
+])
+def test_param_spec_rules(mesh, path, shape, expect):
+    got = shd.param_spec(path, FakeLeaf(shape), mesh)
+    assert tuple(got) == tuple(expect), (path, got, expect)
+
+
+def test_sanitize_drops_nondivisible(mesh16=None):
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = jax.sharding.Mesh(dev, ("data", "attn", "ffn"))
+    # fake sizes via a 16x4x4 abstract view is not possible on 1 device;
+    # use _fit directly with a mesh dict stub
+    class M:
+        axis_names = ("data", "attn", "ffn")
+        shape = {"data": 16, "attn": 4, "ffn": 4}
+    assert shd._fit(M, ("attn", "ffn"), 51865) is None   # whisper vocab
+    assert shd._fit(M, ("attn", "ffn"), 51872) == ("attn", "ffn")
+    assert shd._fit(M, "attn", 6) is None
+    assert shd._fit(M, ("data",), 32) == ("data",)
+
+
+def test_add_fsdp_respects_existing_data_axis():
+    class M:
+        axis_names = ("data", "attn", "ffn")
+        shape = {"data": 16, "attn": 4, "ffn": 4}
+    # already expert-sharded on data: unchanged
+    spec = P("data", None, ("attn", "ffn"))
+    leaf = FakeLeaf((160, 5120, 1536))
+    assert shd._add_fsdp(M, spec, leaf) == spec
+    # large free dim picks up data
+    spec2 = P(None, ("attn", "ffn"))
+    leaf2 = FakeLeaf((4096, 16384))
+    got = shd._add_fsdp(M, spec2, leaf2)
+    assert tuple(got) == ("data", ("attn", "ffn"))
+    # small leaves untouched
+    leaf3 = FakeLeaf((1024,))
+    assert shd._add_fsdp(M, P(None), leaf3) == P(None)
+
+
+def test_cache_spec_batch_fallback_to_sequence():
+    """long_500k (B=1): batch axis must drop and the KV sequence axis must
+    pick up the data axis."""
+    class M:
+        axis_names = ("data", "attn", "ffn")
+        shape = {"data": 16, "attn": 4, "ffn": 4}
+    def norm(ax):
+        return (ax,) if isinstance(ax, str) else ax
+
+    kv = FakeLeaf((28, 1, 524288, 4, 128))
+    spec = shd.cache_spec("k", kv, M)
+    assert spec[1] is None                       # batch replicated
+    assert norm(spec[2]) == ("data",)            # sequence-parallel
+    kv2 = FakeLeaf((28, 128, 32768, 4, 128))
+    spec2 = shd.cache_spec("k", kv2, M)
+    assert norm(spec2[1]) == ("data",)           # batch sharded
+    assert spec2[2] is None
+    assert spec2[3] == "attn"                    # kv heads 4 % 4 == 0
+    assert spec2[4] == "ffn"                     # head_dim on ffn
+
+
+def test_attn_shards_per_arch():
+    from repro.configs import get_config
+    from repro.launch.mesh import attn_shards
+    assert attn_shards(get_config("qwen2-7b")) == 4     # KH=4
+    assert attn_shards(get_config("deepseek-v2-236b")) == 16
+    assert attn_shards(get_config("whisper-small")) == 4  # H=12 -> 4
