@@ -1,0 +1,79 @@
+"""Serving throughput/latency vs cache policy at several slot counts.
+
+The survey's speedups are single-trajectory; this benchmark measures what
+they buy at the *serving* level: request throughput and end-to-end latency
+of the continuous-batching engine under a mixed-budget request queue.  With
+phase-aligned admission, an interval-N policy turns (N-1)/N of all engine
+ticks into cheap forecast/reuse programs, so cached policies should beat
+`none` on request throughput at equal slot count — that claim is checked and
+saved in the result payload.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_result, small_dit
+
+NUM_REQUESTS = 18
+BUDGETS = (8, 12, 16)
+POLICIES = [
+    ("none", {}),
+    ("fora", {"interval": 4}),
+    ("taylorseer", {"interval": 4, "order": 2}),
+    ("teacache", {"delta": 0.1}),
+]
+SLOT_COUNTS = (2, 6)
+
+
+def _requests():
+    from repro.serving.diffusion import DiffusionRequest
+    return [DiffusionRequest(i, num_steps=BUDGETS[i % len(BUDGETS)], seed=i)
+            for i in range(NUM_REQUESTS)]
+
+
+def run():
+    from repro.core import make_policy
+    from repro.serving.diffusion import DiffusionRequest, DiffusionServingEngine
+
+    cfg, params = small_dit()   # the shared ~5M-param cache-benchmark DiT
+    rows = []
+    print(f"{'policy':12s} {'slots':>5s} {'req/s':>8s} {'p50 lat':>9s} "
+          f"{'cf':>6s} {'full-tick%':>10s}")
+    for slots in SLOT_COUNTS:
+        for name, kw in POLICIES:
+            policy = make_policy(name, num_steps=max(BUDGETS), **kw)
+            eng = DiffusionServingEngine(params, cfg, policy, slots=slots,
+                                         max_steps=max(BUDGETS))
+            # warm the two compiled tick programs so the timed run measures
+            # steady-state serving, not XLA compilation
+            eng.serve([DiffusionRequest(10_000 + i, num_steps=BUDGETS[0],
+                                        seed=i) for i in range(slots)])
+            res = eng.serve(_requests())
+            s = eng.telemetry.summary()
+            assert len(res) == NUM_REQUESTS
+            assert all(np.isfinite(r.x0).all() for r in res)
+            rows.append({"policy": name, "slots": slots, **s})
+            print(f"{name:12s} {slots:5d} {s['throughput_rps']:8.2f} "
+                  f"{s['latency_p50_s']:8.3f}s {s['compute_fraction_mean']:6.3f} "
+                  f"{100 * s['full_tick_fraction']:9.1f}%")
+
+    # the serving-level claim: caching raises request throughput
+    comparisons = {}
+    for slots in SLOT_COUNTS:
+        base = next(r for r in rows
+                    if r["policy"] == "none" and r["slots"] == slots)
+        for name, _ in POLICIES[1:]:
+            r = next(x for x in rows
+                     if x["policy"] == name and x["slots"] == slots)
+            comparisons[f"{name}@{slots}"] = \
+                r["throughput_rps"] / base["throughput_rps"]
+    best = max(comparisons.values())
+    print(f"best cached-vs-none throughput gain: {best:.2f}x")
+    save_result("serving", {"rows": rows, "throughput_vs_none": comparisons})
+    if best <= 1.0:
+        raise AssertionError(
+            f"no cached policy beat `none` on throughput: {comparisons}")
+
+
+if __name__ == "__main__":
+    run()

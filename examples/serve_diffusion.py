@@ -1,0 +1,74 @@
+"""Cache-aware diffusion serving: continuous batching with per-slot caches.
+
+    PYTHONPATH=src python examples/serve_diffusion.py
+
+A queue of 20 latent-generation requests with mixed step budgets (interactive
+previews at 8 steps, quality renders at 16) flows through 6 slots.  Each slot
+is one in-flight request at its own denoising step; a single pair of compiled
+programs advances all of them per tick, and the SLA autotuner picks the cache
+policy per traffic class before serving.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params, perturb_zero_init
+from repro.diffusion import linear_schedule
+from repro.serving.diffusion import (SLA, DiffusionRequest,
+                                     DiffusionServingEngine,
+                                     autotune_traffic_classes)
+
+# -- a CPU-friendly DiT ----------------------------------------------------
+cfg = get_config("dit-xl").reduced(num_layers=6, d_model=256, num_heads=4,
+                                   num_kv_heads=4, d_ff=1024,
+                                   dit_patch_tokens=64, dit_in_dim=16,
+                                   dit_num_classes=10)
+params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+noise_sched = linear_schedule(1000)
+
+# -- 1. autotune: pick a policy per traffic class against its SLA ----------
+slas = {
+    "interactive": SLA("interactive", min_psnr=-100.0),   # latency over quality
+    "quality": SLA("quality", min_psnr=40.0),             # stay near-exact
+}
+print("== autotuning policies per traffic class ==")
+tuned = autotune_traffic_classes(params, cfg, slas, num_steps=16,
+                                 noise_schedule=noise_sched, verbose=True)
+for tc, t in tuned.items():
+    print(f"  {tc:12s} -> {t.policy_name} {t.kwargs} "
+          f"(psnr={t.psnr:.1f}dB, compute_fraction={t.compute_fraction:.2f})")
+
+# -- 2. serve a mixed-budget queue per traffic class -----------------------
+requests = [DiffusionRequest(i,
+                             num_steps=8 if i % 2 == 0 else 16,
+                             seed=i, class_label=i % cfg.dit_num_classes,
+                             traffic_class="interactive" if i % 2 == 0
+                             else "quality")
+            for i in range(20)]
+
+for tc, t in tuned.items():
+    batch = [r for r in requests if r.traffic_class == tc]
+    eng = DiffusionServingEngine(params, cfg, t.make(), slots=6,
+                                 max_steps=16, noise_schedule=noise_sched,
+                                 align=t.align)
+    results = eng.serve(batch)
+    s = eng.telemetry.summary()
+    assert len(results) == len(batch)
+    assert all(np.isfinite(r.x0).all() for r in results)
+    print(f"\n== {tc}: {len(batch)} requests via {t.policy_name} ==")
+    print(f"  throughput      : {s['throughput_rps']:.2f} req/s")
+    print(f"  latency p50/p95 : {s['latency_p50_s']:.3f}s / "
+          f"{s['latency_p95_s']:.3f}s")
+    print(f"  compute fraction: {s['compute_fraction_mean']:.3f} "
+          f"(cache hit rate {s['cache_hit_rate_mean']:.3f})")
+    print(f"  ticks           : {s['ticks']} "
+          f"({100 * s['full_tick_fraction']:.0f}% ran the backbone; "
+          f"full {s['tick_ms_full_mean']:.1f}ms vs "
+          f"skip {s['tick_ms_skip_mean']:.1f}ms)")
+    print(f"  cache state     : {s['cache_state_bytes_per_slot']} B/slot")
+    for r in results[:4]:
+        rec = r.record
+        print(f"    req {rec.request_id:2d}: {rec.num_steps:2d} steps, "
+              f"latency {rec.latency:.3f}s (queued {rec.queue_wait:.3f}s), "
+              f"computed {rec.computed_steps}/{rec.num_steps}")
+print("\nOK")

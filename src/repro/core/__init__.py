@@ -17,13 +17,14 @@ Taxonomy map (survey Fig. 2):
 from .adaptive import (BlockCachePolicy, EasyCachePolicy, ForesightPolicy,
                        MagCachePolicy, TeaCachePolicy)
 from .engine import (CachedModule, CachedStack, DBCacheStack,
-                     cache_state_bytes, compute_fraction)
+                     SlotBatchedPolicy, cache_state_bytes, compute_fraction)
 from .hybrid import ClusCaPolicy, SpeCaPolicy, kmeans
 from .metrics import (cosine_sim, mag_ratio, psnr, rel_l1, rel_l1_block,
                       rel_l2, transform_rate)
 from .learned import (LazyDiTPolicy, gate_score, init_gate,
                       lazy_trajectory_loss, train_lazy_gate)
-from .policy import CachePolicy, NoCachePolicy, cond_or_static, is_static_step
+from .policy import (CachePolicy, NoCachePolicy, cond_or_static, interval_pred,
+                     is_static_step)
 from .token import ToCaPolicy
 from .predictive import (BASES, FreqCaPolicy, PredictivePolicy,
                          forecast_from_diffs, update_diff_stack)
@@ -49,8 +50,25 @@ POLICY_REGISTRY = {
     "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
 }
 
+# Stack-structural methods complete the taxonomy map but are NOT CachePolicy
+# instances: they own the layer loop itself (probe -> decide -> correct over
+# block ranges) instead of gating one module's output behind the
+# `apply(state, step, x, compute_fn)` protocol, so `make_policy` cannot
+# construct them without a block_fn + layer count.  They are built directly:
+#   dbcache   — DBCacheStack(block_fn, num_layers, front_n, back_n, threshold)
+#   deepcache — CachedDenoiser(..., granularity="deepcache") splits the DiT
+#               stack structurally (repro/diffusion/pipeline.py)
+STRUCTURAL_POLICIES = {
+    "dbcache": DBCacheStack,
+    "deepcache": "repro.diffusion.pipeline.CachedDenoiser(granularity='deepcache')",
+}
+
 
 def make_policy(name: str, **kwargs) -> CachePolicy:
+    if name in STRUCTURAL_POLICIES:
+        raise KeyError(
+            f"'{name}' is a stack-structural method, not a module-level "
+            f"policy; see repro.core.STRUCTURAL_POLICIES for how to build it")
     if name not in POLICY_REGISTRY:
         raise KeyError(f"unknown cache policy '{name}'; "
                        f"available: {sorted(POLICY_REGISTRY)}")

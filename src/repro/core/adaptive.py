@@ -40,6 +40,7 @@ class TeaCachePolicy(CachePolicy):
     """
 
     name = "teacache"
+    uses_signal = True
 
     def __init__(self, delta: float, poly: Sequence[float] = (0.0, 1.0)):
         self.delta = float(delta)
@@ -86,6 +87,11 @@ class TeaCachePolicy(CachePolicy):
 
         return jax.lax.cond(refresh, compute, reuse, state)
 
+    def want_compute(self, state, step, x, **signals):
+        sig = signals.get("signal", x).astype(jnp.float32)
+        d = self._correct(rel_l1(sig, state["prev_signal"]))
+        return jnp.logical_or(state["n"] == 0, state["acc"] + d >= self.delta)
+
 
 class MagCachePolicy(CachePolicy):
     """MagCache: accumulated error eps(t) = 1 - prod(gamma_i) since the last
@@ -131,6 +137,12 @@ class MagCachePolicy(CachePolicy):
                 "n_compute": state["n_compute"]}
 
         return jax.lax.cond(refresh, compute, reuse, state)
+
+    def want_compute(self, state, step, x, **signals):
+        step_val = jnp.asarray(step, jnp.int32)
+        g = self.gammas[jnp.clip(step_val, 0, self.gammas.shape[0] - 1)]
+        err = 1.0 - state["prod"] * g
+        return jnp.logical_or(state["n"] == 0, err >= self.delta)
 
 
 class EasyCachePolicy(CachePolicy):
@@ -186,6 +198,14 @@ class EasyCachePolicy(CachePolicy):
 
         return jax.lax.cond(refresh, compute, reuse, state)
 
+    def want_compute(self, state, step, x, **signals):
+        xf = x.astype(jnp.float32)
+        dx = jnp.linalg.norm((xf - state["prev_x"]).ravel())
+        v_norm = jnp.linalg.norm(state["prev_v"].ravel()) + 1e-8
+        eps = state["k"] * dx / v_norm * 100.0
+        return jnp.logical_or(state["n"] < self.warmup,
+                              state["acc"] + eps >= self.tau)
+
 
 class BlockCachePolicy(CachePolicy):
     """Layer-adaptive static scheduling from a calibration profile.
@@ -230,7 +250,7 @@ class BlockCachePolicy(CachePolicy):
                 return y, {**state, "cache": y.astype(state["cache"].dtype)}
             return state["cache"].astype(x.dtype), state
 
-        pred = state["sched"][jnp.asarray(step, jnp.int32)]
+        pred = self.want_compute(state, step, x)
 
         def compute(state):
             y = compute_fn(x)
@@ -240,6 +260,11 @@ class BlockCachePolicy(CachePolicy):
             return state["cache"].astype(x.dtype), state
 
         return jax.lax.cond(pred, compute, reuse, state)
+
+    def want_compute(self, state, step, x=None, **signals):
+        if isinstance(step, int):
+            return jnp.asarray(self._schedule[step])
+        return state["sched"][jnp.asarray(step, jnp.int32)]
 
     def static_schedule(self, num_steps: int):
         assert num_steps <= len(self._schedule)
@@ -289,3 +314,8 @@ class ForesightPolicy(CachePolicy):
             return state["cache"].astype(x.dtype), new
 
         return jax.lax.cond(refresh, compute, reuse, state)
+
+    def want_compute(self, state, step, x, **signals):
+        delta = rel_l1_block(x.astype(jnp.float32), state["prev_in"])
+        return jnp.logical_or(state["n"] < self.warmup,
+                              delta > self.gamma * state["lam"])

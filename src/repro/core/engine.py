@@ -133,6 +133,76 @@ class DBCacheStack:
         return y, new_state
 
 
+class SlotBatchedPolicy:
+    """A cache policy whose state carries a leading *slot* axis.
+
+    The diffusion serving engine (repro.serving.diffusion) runs many
+    concurrent requests, each at its own denoising step, through one vmapped
+    program.  Each slot therefore needs its own cache state and its own step
+    counter; this wrapper
+
+      * builds the batched state by broadcasting one freshly-initialised
+        per-slot state to `(slots, ...)` leaves,
+      * vmaps `apply` / `want_compute` over (state, step, x, signals),
+      * resets a single slot's state in place when the scheduler refills it
+        with a new request (reset-on-refill — slot reuse must never leak
+        cache state between requests).
+
+    `apply`'s compute_fn runs per slot under vmap; pass per-slot context
+    (e.g. the slot's timestep) via `extra`, a tuple of arrays with a leading
+    slot axis that is forwarded as `compute_fn(x, *extra_slot)`.
+    """
+
+    def __init__(self, policy: CachePolicy, slots: int):
+        self.policy = policy
+        self.slots = slots
+
+    # -- state ----------------------------------------------------------
+    def init_slot_state(self, shape, dtype=jnp.float32, **kw) -> PyTree:
+        """One slot's fresh state (also the reset target)."""
+        try:
+            return self.policy.init_state(shape, dtype, **kw)
+        except TypeError:  # policy without extra kwargs (e.g. signal_shape)
+            return self.policy.init_state(shape, dtype)
+
+    def init_state(self, shape, dtype=jnp.float32, **kw) -> PyTree:
+        one = self.init_slot_state(shape, dtype, **kw)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.slots,) + a.shape).copy(),
+            one)
+
+    @staticmethod
+    def reset_slot(states: PyTree, slot, fresh: PyTree) -> PyTree:
+        """Overwrite slot `slot`'s state with `fresh` (jit-friendly)."""
+        return jax.tree_util.tree_map(lambda b, o: b.at[slot].set(o),
+                                      states, fresh)
+
+    # -- vmapped policy ops ---------------------------------------------
+    def apply(self, states, steps, xs, compute_fn, extra=(), **signals):
+        keys = sorted(signals)
+        vals = tuple(signals[k] for k in keys)
+
+        def one(state, step, x, extra_slot, sig_slot):
+            fn = lambda xx: compute_fn(xx, *extra_slot)
+            return self.policy.apply(state, step, x, fn,
+                                     **dict(zip(keys, sig_slot)))
+
+        return jax.vmap(one)(states, steps, xs, tuple(extra), vals)
+
+    def want_compute(self, states, steps, xs, **signals):
+        keys = sorted(signals)
+        vals = tuple(signals[k] for k in keys)
+
+        def one(state, step, x, sig_slot):
+            w = self.policy.want_compute(state, step, x,
+                                         **dict(zip(keys, sig_slot)))
+            # `& step >= 0` ties constant predicates to the batched step so
+            # vmap always sees a mapped output
+            return jnp.logical_and(jnp.asarray(w), step >= 0)
+
+        return jax.vmap(one)(states, steps, xs, vals)
+
+
 # ----------------------------------------------------------------------
 # schedule utilities (used by benchmarks + roofline)
 # ----------------------------------------------------------------------

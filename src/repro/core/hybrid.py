@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from .metrics import rel_l2
-from .policy import CachePolicy
+from .policy import CachePolicy, cond_or_static, interval_pred
 from .predictive import forecast_from_diffs, update_diff_stack
 
 
@@ -80,8 +80,6 @@ class ClusCaPolicy(CachePolicy):
 
     def apply(self, state, step, x, compute_fn, subset_fn: Optional[Callable] = None,
               **signals):
-        from .policy import cond_or_static, is_static_step
-
         def compute(state):
             y = compute_fn(x)
 
@@ -132,9 +130,13 @@ class ClusCaPolicy(CachePolicy):
             new["cache"] = y.astype(state["cache"].dtype)
             return y.astype(x.dtype), new
 
-        pred = (step % self.interval == 0) if is_static_step(step) \
-            else (jnp.asarray(step, jnp.int32) % self.interval) == 0
+        pred = interval_pred(step, self.interval)
         return cond_or_static(pred, compute, partial, state)
+
+    def want_compute(self, state, step, x, **signals):
+        # the partial branch never calls compute_fn (it uses subset_fn when
+        # available), so the interval predicate is exact for serving
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]
@@ -173,7 +175,6 @@ class SpeCaPolicy(CachePolicy):
 
     def apply(self, state, step, x, compute_fn, subset_fn: Optional[Callable] = None,
               **signals):
-        from .policy import cond_or_static, is_static_step
         step_val = jnp.asarray(step, jnp.int32)
 
         def full(state):
@@ -232,9 +233,16 @@ class SpeCaPolicy(CachePolicy):
 
             return jax.lax.cond(err <= self.tau, accept, reject, state)
 
-        pred = (step % self.interval == 0) if is_static_step(step) \
-            else (step_val % self.interval) == 0
+        pred = interval_pred(step, self.interval)
         return cond_or_static(pred, full, speculate, state)
+
+    def want_compute(self, state, step, x, subset_fn=None, **signals):
+        if subset_fn is None and signals.get("verify_fn") is None:
+            # degraded accept-always mode: speculate never calls compute_fn
+            return jnp.asarray(interval_pred(step, self.interval))
+        # a rejected draft rolls back to a full compute at any step, so the
+        # serving engine must always dispatch the full program
+        return jnp.asarray(True)
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]

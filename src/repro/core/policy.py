@@ -43,18 +43,41 @@ def cond_or_static(pred, true_fn, false_fn, *operands):
     return jax.lax.cond(pred, true_fn, false_fn, *operands)
 
 
+def interval_pred(step, interval: int):
+    """The shared `step % interval == 0` compute predicate, static or traced."""
+    if is_static_step(step):
+        return step % interval == 0
+    return (jnp.asarray(step, jnp.int32) % interval) == 0
+
+
 class CachePolicy:
     """Base class; subclasses implement init_state/apply."""
 
     name: str = "base"
     #: does approximate() return the cached value verbatim (static reuse)?
     is_predictive: bool = False
+    #: does apply() threshold on signals["signal"] (TeaCache's modulated
+    #: input)?  Engines may skip producing the signal when False.
+    uses_signal: bool = False
 
     def init_state(self, shape, dtype=jnp.float32) -> Dict[str, Any]:
         raise NotImplementedError
 
     def apply(self, state, step, x, compute_fn: ComputeFn, **signals):
         raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # serving support: a traced predicate that mirrors the refresh
+    # decision inside `apply` WITHOUT running compute_fn.  The serving
+    # engine reads this back per slot each tick; when no slot wants a
+    # compute it dispatches a cheap program whose compute branch is a
+    # dummy, so the prediction must match `apply` exactly.  The base
+    # implementation is conservative (always compute), which is always
+    # correct but earns no skip ticks.
+    # ------------------------------------------------------------------
+    def want_compute(self, state, step, x, **signals):
+        """Return a bool scalar: would `apply` take its compute branch?"""
+        return jnp.asarray(True)
 
     # ------------------------------------------------------------------
     # introspection used by benchmarks: how many full computes would a

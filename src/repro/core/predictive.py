@@ -32,7 +32,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from .policy import CachePolicy, cond_or_static, is_static_step
+from .policy import CachePolicy, cond_or_static, interval_pred
 
 BASES = ("taylor", "newton", "hermite", "ab", "foca")
 
@@ -168,8 +168,11 @@ class PredictivePolicy(CachePolicy):
                                     self.basis, self.sigma)
             return y.astype(x.dtype), state
 
-        pred = (step % self.interval == 0) if is_static_step(step) else (step_val % self.interval) == 0
-        return cond_or_static(pred, compute, forecast, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              compute, forecast, state)
+
+    def want_compute(self, state, step, x, **signals):
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]
@@ -230,8 +233,11 @@ class FreqCaPolicy(CachePolicy):
                                        "hermite", self.sigma)
             return (state["low"] + high).astype(x.dtype), state
 
-        pred = (step % self.interval == 0) if is_static_step(step) else (step_val % self.interval) == 0
-        return cond_or_static(pred, compute, forecast, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              compute, forecast, state)
+
+    def want_compute(self, state, step, x, **signals):
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]

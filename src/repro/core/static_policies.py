@@ -18,7 +18,7 @@ from typing import Dict
 
 import jax.numpy as jnp
 
-from .policy import CachePolicy, cond_or_static, is_static_step
+from .policy import CachePolicy, cond_or_static, interval_pred, is_static_step
 
 
 class FixedIntervalPolicy(CachePolicy):
@@ -33,11 +33,6 @@ class FixedIntervalPolicy(CachePolicy):
     def init_state(self, shape, dtype=jnp.float32):
         return {"cache": jnp.zeros(shape, dtype)}
 
-    def _should_compute(self, step):
-        if is_static_step(step):
-            return step % self.interval == 0
-        return (step % self.interval) == 0
-
     def apply(self, state, step, x, compute_fn, **signals):
         def compute(state):
             y = compute_fn(x)
@@ -46,7 +41,11 @@ class FixedIntervalPolicy(CachePolicy):
         def reuse(state):
             return state["cache"].astype(x.dtype), state
 
-        return cond_or_static(self._should_compute(step), compute, reuse, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              compute, reuse, state)
+
+    def want_compute(self, state, step, x, **signals):
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]
@@ -72,8 +71,11 @@ class DeltaCachePolicy(CachePolicy):
         def reuse(state):
             return x + state["delta"].astype(x.dtype), state
 
-        pred = (step % self.interval == 0) if is_static_step(step) else (step % self.interval) == 0
-        return cond_or_static(pred, compute, reuse, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              compute, reuse, state)
+
+    def want_compute(self, state, step, x, **signals):
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]
@@ -129,8 +131,11 @@ class FasterCacheCFG(CachePolicy):
             y = state["prev"] + w * (state["prev"] - state["prev2"])
             return y.astype(x.dtype), state
 
-        pred = (step % self.interval == 0) if is_static_step(step) else (step % self.interval) == 0
-        return cond_or_static(pred, compute, reuse, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              compute, reuse, state)
+
+    def want_compute(self, state, step, x, **signals):
+        return jnp.asarray(interval_pred(step, self.interval))
 
     def static_schedule(self, num_steps: int):
         return [s % self.interval == 0 for s in range(num_steps)]

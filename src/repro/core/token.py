@@ -28,7 +28,7 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .policy import CachePolicy, cond_or_static, is_static_step
+from .policy import CachePolicy, cond_or_static, interval_pred
 
 
 class ToCaPolicy(CachePolicy):
@@ -103,9 +103,8 @@ class ToCaPolicy(CachePolicy):
                 "n": state["n"] + 1,
             }
 
-        pred = (step % self.interval == 0) if is_static_step(step) \
-            else (jnp.asarray(step, jnp.int32) % self.interval) == 0
-        return cond_or_static(pred, full, partial, state)
+        return cond_or_static(interval_pred(step, self.interval),
+                              full, partial, state)
 
     def static_schedule(self, num_steps: int):
         # fraction view: full steps + ratio-weighted partial steps

@@ -141,6 +141,64 @@ class CachedDenoiser:
         return eps_c, new_state
 
 
+def slot_denoise_fns(params, cfg, policy: CachePolicy):
+    """Slot-parallel CachedDenoiser entry point (model granularity).
+
+    The serving engine (repro.serving.diffusion) advances many concurrent
+    requests, each at its own denoising step with its own cache state,
+    through one compiled program.  The split that makes this fast:
+
+      backbone_fn(xs, ts, labels) -> eps        plain SLOT-BATCHED forward —
+          the slot axis IS the model's batch axis, so XLA sees the same
+          program as uncached batched inference.  (Running the backbone
+          inside vmap instead would thread a singleton batch dim through
+          every matmul, which knocks XLA CPU off its fast paths.)
+      apply_fn(state, step, x, t, label, y_full) -> (eps, state)   per-slot
+          policy logic, vmapped by the engine.  `y_full` is this slot's row
+          of backbone_fn's output; the compute branch selects it into the
+          cache, other branches reuse/forecast.  Every repro.core policy
+          calls compute_fn on exactly its input x, so precomputing F(x)
+          outside the branch is semantics-preserving.  On skip ticks the
+          engine passes zeros for y_full — ONLY safe when the policy's
+          want_compute is False for every slot (lax.cond vmaps to a select,
+          so the dummy branch's outputs are discarded).
+      want_fn(state, step, x, t, label) -> bool   mirrors the policy's
+          refresh decision without touching the backbone.
+
+    x: (T, in_dim) latent tokens; t: scalar model-facing timestep; label:
+    scalar int32 class conditioning.  TeaCache's input-side signal (the
+    AdaLN-modulated first-block input, Eq. 22) is wired through when the
+    policy declares `uses_signal`.
+    """
+
+    def backbone_fn(xs, ts, labels):
+        return dit.forward(params, xs, ts.astype(jnp.float32),
+                           labels.astype(jnp.int32), cfg)
+
+    def _ctx(x, t, label):
+        xb = x[None]
+        t_vec = jnp.reshape(t, (1,)).astype(jnp.float32)
+        y = jnp.reshape(label, (1,)).astype(jnp.int32)
+        if not policy.uses_signal:       # skip-tick cost: don't embed
+            return xb, {}
+        h, c = dit.embed_patches(params, xb, t_vec, y, cfg)
+        return xb, {"signal": dit.modulated_signal(params, h, c, cfg)}
+
+    def apply_fn(state, step, x, t, label, y_full):
+        xb, sig = _ctx(x, t, label)
+        eps, state = policy.apply(state, step, xb, lambda _: y_full[None],
+                                  **sig)
+        return eps[0], state
+
+    def want_fn(state, step, x, t, label):
+        xb, sig = _ctx(x, t, label)
+        w = policy.want_compute(state, step, xb, **sig)
+        # `& step >= 0` keeps constant predicates mapped under vmap
+        return jnp.logical_and(jnp.asarray(w), step >= 0)
+
+    return backbone_fn, apply_fn, want_fn
+
+
 def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0):
     """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u)."""
     def fn(state, step, x, t_vec):

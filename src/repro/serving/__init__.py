@@ -1,4 +1,12 @@
-"""Batched serving engine with KV caches and decode-side caching."""
+"""Serving engines: batched LLM decode and cache-aware diffusion.
+
+  engine    — ServingEngine: LLM prefill + rolling-KV continuous decode
+  diffusion — DiffusionServingEngine: step-interleaved continuous batching
+              of denoising trajectories with per-slot cache states
+  common    — request-queue machinery shared by both engines
+"""
+from .common import RequestQueue
 from .engine import ServingEngine, GenerationResult, greedy_generate
 
-__all__ = ["ServingEngine", "GenerationResult", "greedy_generate"]
+__all__ = ["RequestQueue", "ServingEngine", "GenerationResult",
+           "greedy_generate"]

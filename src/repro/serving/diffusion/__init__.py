@@ -1,0 +1,28 @@
+"""repro.serving.diffusion — cache-aware continuous-batching diffusion serving.
+
+The survey frames diffusion caching as a training-free path to real-time
+multimodal serving; this package is that serving layer.  Many concurrent
+generation requests, each at its own denoising step with its own step
+budget, advance together through two shared jit'd programs while each slot
+carries its own cache state (repro.core.SlotBatchedPolicy):
+
+  engine     — DiffusionServingEngine: vmapped denoise tick (full/skip
+               program pair), mid-flight slot refill, reset-on-refill
+  scheduler  — SlotScheduler: admission queue, slot lifecycle, per-request
+               step budgets, phase-aligned admission
+  autotune   — SLA-driven sweep of POLICY_REGISTRY: pick policy +
+               hyperparams per traffic class against latency/quality budgets
+  telemetry  — per-request latency / compute_fraction / cache hit rates,
+               fleet throughput, full-vs-skip tick mix, cache bytes per slot
+"""
+from .autotune import SLA, TunedPolicy, autotune, autotune_traffic_classes
+from .engine import DiffusionResult, DiffusionServingEngine
+from .scheduler import DiffusionRequest, Slot, SlotScheduler
+from .telemetry import RequestRecord, ServingTelemetry
+
+__all__ = [
+    "SLA", "TunedPolicy", "autotune", "autotune_traffic_classes",
+    "DiffusionResult", "DiffusionServingEngine",
+    "DiffusionRequest", "Slot", "SlotScheduler",
+    "RequestRecord", "ServingTelemetry",
+]

@@ -1,0 +1,168 @@
+"""SLA-driven cache-policy autotuning for the diffusion serving engine.
+
+The policy zoo (repro.core.POLICY_REGISTRY) trades quality for compute along
+method-specific hyperparameters; which point is right depends on the traffic
+class being served ("interactive" preview traffic tolerates lower PSNR for
+latency; "quality" traffic does not).  The autotuner sweeps candidate
+(policy, hyperparams) pairs on a small calibration batch against the exact
+(uncached) trajectory and picks, per traffic class, the cheapest candidate
+that still meets the SLA:
+
+    minimize   compute_fraction                 (~ 1/speedup, survey §III-B)
+    subject to PSNR(x0_policy, x0_exact) >= sla.min_psnr
+               est_latency <= sla.max_latency_ms     (when step times given)
+
+Falling back to the highest-PSNR candidate when nothing is feasible keeps
+the server serving rather than erroring on an over-tight SLA.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import CachePolicy, make_policy
+from repro.core.metrics import psnr
+from repro.diffusion import ddim_step, linear_schedule, sample
+from repro.diffusion.pipeline import CachedDenoiser, cfg_denoise_fn
+
+
+@dataclass(frozen=True)
+class SLA:
+    """Per-traffic-class serving objective."""
+    name: str = "default"
+    min_psnr: float = 20.0           # quality floor vs the exact trajectory
+    max_latency_ms: Optional[float] = None  # per-request budget (optional)
+
+
+@dataclass
+class TunedPolicy:
+    """Autotuner output: a constructible policy choice + its measurements."""
+    policy_name: str
+    kwargs: Dict = field(default_factory=dict)
+    psnr: float = 0.0
+    compute_fraction: float = 1.0
+    est_latency_ms: Optional[float] = None
+    feasible: bool = True
+
+    def make(self) -> CachePolicy:
+        return make_policy(self.policy_name, **self.kwargs)
+
+    @property
+    def align(self) -> int:
+        """Phase-alignment interval for the serving scheduler."""
+        return max(int(self.kwargs.get("interval", 1)), 1)
+
+
+#: default sweep: one representative per taxonomy branch, two operating
+#: points for the interval-scheduled families
+DEFAULT_CANDIDATES: List[Tuple[str, Dict]] = [
+    ("none", {}),
+    ("fora", {"interval": 2}),
+    ("fora", {"interval": 4}),
+    ("taylorseer", {"interval": 2, "order": 1}),
+    ("taylorseer", {"interval": 4, "order": 2}),
+    ("teacache", {"delta": 0.1}),
+    ("teacache", {"delta": 0.3}),
+    ("magcache", {"delta": 0.1}),
+    ("freqca", {"interval": 4}),
+]
+
+
+def _measured_compute_fraction(policy: CachePolicy, state, num_steps: int) -> float:
+    """Computes issued / steps, from whichever counter the policy keeps."""
+    pol = state.get("policy", {}) if isinstance(state, dict) else {}
+    if isinstance(pol, dict):
+        for key in ("n_compute", "n_valid"):
+            if key in pol:
+                return float(np.asarray(pol[key])) / max(num_steps, 1)
+    sched = policy.static_schedule(num_steps)
+    if sched is not None:
+        return sum(map(bool, sched)) / max(num_steps, 1)
+    return 1.0
+
+
+def calibration_reference(params, cfg, num_steps: int, batch: int = 1,
+                          seed: int = 0, noise_schedule=None):
+    """Exact (uncached) calibration trajectory shared by all candidates."""
+    sched = noise_schedule or linear_schedule(1000)
+    ts = sched.spaced(num_steps)
+    xT = jax.random.normal(jax.random.PRNGKey(seed),
+                           (batch, cfg.dit_patch_tokens, cfg.dit_in_dim))
+    exact, _ = sample(cfg_denoise_fn(params, cfg, 0.0), xT, ts, sched,
+                      step_fn=ddim_step)
+    return sched, ts, xT, np.asarray(exact)
+
+
+def evaluate_candidate(name: str, kwargs: Dict, params, cfg, sched, ts, xT,
+                       exact: np.ndarray) -> Tuple[float, float]:
+    """Run one candidate on the calibration trajectory.
+
+    Returns (psnr_db, compute_fraction)."""
+    policy = make_policy(name, **kwargs)
+    den = CachedDenoiser(params, cfg, policy)
+    x0, state = sample(den, xT, ts, sched, step_fn=ddim_step,
+                       denoiser_state=den.init_state(xT.shape[0]))
+    q = float(psnr(np.asarray(x0), exact))
+    cf = _measured_compute_fraction(policy, state, len(ts))
+    return q, cf
+
+
+def autotune(params, cfg, sla: SLA,
+             candidates: Optional[Sequence[Tuple[str, Dict]]] = None,
+             num_steps: int = 16, batch: int = 1, seed: int = 0,
+             noise_schedule=None,
+             step_time_ms: Optional[Tuple[float, float]] = None,
+             verbose: bool = False) -> TunedPolicy:
+    """Sweep candidates against `sla` on a calibration batch.
+
+    step_time_ms: measured (full_tick_ms, skip_tick_ms) from a prior serving
+    run (ServingTelemetry summary) — enables the latency constraint; without
+    it only the PSNR floor is enforced.
+    """
+    candidates = list(candidates if candidates is not None
+                      else DEFAULT_CANDIDATES)
+    sched, ts, xT, exact = calibration_reference(
+        params, cfg, num_steps, batch, seed, noise_schedule)
+
+    evaluated: List[TunedPolicy] = []
+    for name, kwargs in candidates:
+        # resolve the full hyperparameters here so TunedPolicy.make()
+        # reconstructs exactly what was calibrated (magcache sizes its
+        # gamma curve from num_steps)
+        kwargs = dict(kwargs)
+        kwargs.setdefault("num_steps", num_steps)
+        q, cf = evaluate_candidate(name, kwargs, params, cfg, sched, ts, xT,
+                                   exact)
+        lat = None
+        if step_time_ms is not None:
+            t_full, t_skip = step_time_ms
+            lat = num_steps * (cf * t_full + (1.0 - cf) * t_skip)
+        ok = q >= sla.min_psnr and (
+            lat is None or sla.max_latency_ms is None
+            or lat <= sla.max_latency_ms)
+        evaluated.append(TunedPolicy(name, dict(kwargs), psnr=q,
+                                     compute_fraction=cf, est_latency_ms=lat,
+                                     feasible=ok))
+        if verbose:
+            print(f"  [{sla.name}] {name:12s} {kwargs} "
+                  f"psnr={q:6.2f}dB cf={cf:.3f} "
+                  f"{'ok' if ok else 'infeasible'}")
+
+    feasible = [t for t in evaluated if t.feasible]
+    if feasible:
+        # cheapest feasible; quality breaks ties
+        return min(feasible, key=lambda t: (t.compute_fraction, -t.psnr))
+    # nothing meets the SLA: serve the closest-to-exact candidate
+    best = max(evaluated, key=lambda t: t.psnr)
+    best.feasible = False
+    return best
+
+
+def autotune_traffic_classes(params, cfg, slas: Mapping[str, SLA],
+                             **kw) -> Dict[str, TunedPolicy]:
+    """One tuned policy per traffic class (e.g. interactive vs quality)."""
+    return {name: autotune(params, cfg, sla, **kw)
+            for name, sla in slas.items()}

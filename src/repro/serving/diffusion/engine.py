@@ -1,0 +1,228 @@
+"""DiffusionServingEngine — step-interleaved continuous batching for
+latent generation with per-slot cache states.
+
+Device side, every tick is one of exactly two jit'd programs over the whole
+slot pool (no per-request compilation, arbitrary request mixes):
+
+  * tick_full — vmapped CachedDenoiser step: each slot's policy takes its
+    own COMPUTE / REUSE / FORECAST branch (lax.cond vmaps to a select); the
+    backbone runs batched over all slots.
+  * tick_skip — identical shape but the compute branch is a cheap dummy;
+    dispatched only on ticks where *no* slot's `want_compute` is true, so
+    the dummy branch's outputs are never selected.  These ticks cost only
+    the forecast/reuse arithmetic — this is where serving-level speedup
+    comes from.
+
+Host side, the SlotScheduler refills finished slots from the admission
+queue mid-flight.  Refill resets the slot's cache state to a fresh
+`init_state` (reset-on-refill) — slot reuse must never leak cache state
+between requests.  With phase-aligned admission (scheduler docstring),
+interval policies make (N-1)/N of all ticks skip ticks.
+
+The DDIM update is re-derived here in traced per-slot form (gathered
+alpha-bar tables instead of Python-float arithmetic) because slots sit at
+different timesteps of *different* step-budget grids within one program.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
+                        make_policy)
+from repro.diffusion import NoiseSchedule, linear_schedule
+from repro.diffusion.pipeline import slot_denoise_fns
+
+from .scheduler import DiffusionRequest, SlotScheduler
+from .telemetry import RequestRecord, ServingTelemetry
+
+
+@dataclass
+class DiffusionResult:
+    """One served request: final latent sample + its telemetry record."""
+    request_id: int
+    x0: np.ndarray
+    record: RequestRecord
+
+
+class DiffusionServingEngine:
+    """Fixed-slot continuous-batching server over one DiT backbone."""
+
+    def __init__(self, params, cfg, policy: Union[CachePolicy, str, None] = None,
+                 *, slots: int = 8, max_steps: int = 64,
+                 noise_schedule: Optional[NoiseSchedule] = None,
+                 align: Optional[int] = None):
+        self.params, self.cfg = params, cfg
+        self.slots = slots
+        self.max_steps = max_steps
+        self.sched = noise_schedule or linear_schedule(1000)
+        if isinstance(policy, str):
+            policy = make_policy(policy)
+        self.policy = policy if policy is not None else make_policy("none")
+        # phase-aligned admission: default to the policy's compute interval
+        self.align = align if align is not None else \
+            max(int(getattr(self.policy, "interval", 1)), 1)
+
+        T, D = cfg.dit_patch_tokens, cfg.dit_in_dim
+        self._feat = (1, T, D)                      # per-slot policy feature
+        self._sig_shape = (1, T, cfg.d_model)       # TeaCache signal shape
+        self.batched = SlotBatchedPolicy(self.policy, slots)
+        self._fresh = self.batched.init_slot_state(
+            self._feat, signal_shape=self._sig_shape)
+
+        backbone_fn, apply_fn, want_fn = slot_denoise_fns(params, cfg,
+                                                          self.policy)
+
+        def make_tick(full: bool):
+            def tick(states, steps, xs, tvals, labels, ab_t, ab_n):
+                # the backbone runs OUTSIDE vmap: slot axis == batch axis
+                y_full = (backbone_fn(xs, tvals, labels) if full
+                          else jnp.zeros_like(xs))
+                eps, states = jax.vmap(apply_fn)(states, steps, xs, tvals,
+                                                 labels, y_full)
+                a_t = ab_t[:, None, None]
+                a_n = ab_n[:, None, None]
+                x0_hat = (xs - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+                x_next = jnp.sqrt(a_n) * x0_hat + jnp.sqrt(1.0 - a_n) * eps
+                return x_next, states
+            return jax.jit(tick)
+
+        self._tick_full = make_tick(full=True)
+        self._tick_skip = make_tick(full=False)
+        self._want = jax.jit(lambda states, steps, xs, tvals, labels:
+                             jax.vmap(want_fn)(states, steps, xs, tvals,
+                                               labels))
+
+        def refill(xs, states, slot, noise, fresh):
+            return (xs.at[slot].set(noise),
+                    SlotBatchedPolicy.reset_slot(states, slot, fresh))
+
+        self._refill = jax.jit(refill)
+
+        # Policies whose want_compute depends only on the step (interval
+        # schedules, or the conservative always-True default) admit a
+        # host-side compute plan with no device round trip.  Deriving it
+        # from want_compute itself — NOT static_schedule — keeps the plan
+        # sound for policies like ToCa whose off-schedule branch still
+        # calls compute_fn: their base want_compute is True everywhere, so
+        # they simply never get skip ticks.  State-dependent predicates
+        # (TeaCache & co) raise on the None state and take the device path.
+        try:
+            self._static_plan = np.asarray(
+                [bool(self.policy.want_compute(None, s, None))
+                 for s in range(max_steps)], bool)
+        except Exception:
+            self._static_plan = None
+
+        # host-side per-slot timestep tables, padded to max_steps (+1 for the
+        # terminal alpha-bar = 1.0 that closes the DDIM update)
+        self._ab = np.ones((slots, max_steps + 1), np.float32)
+        self._tv = np.zeros((slots, max_steps), np.float32)
+        self._labels = np.zeros((slots,), np.int32)
+        #: ServingTelemetry of the most recent serve() call
+        self.telemetry: Optional[ServingTelemetry] = None
+
+    # ------------------------------------------------------------------
+    def _install_request(self, slot: int, req: DiffusionRequest) -> None:
+        ts = self.sched.spaced(req.num_steps)
+        abar = self.sched.alpha_bars[ts].astype(np.float32)
+        self._ab[slot, :] = 1.0
+        self._ab[slot, :req.num_steps] = abar
+        self._tv[slot, :] = 0.0
+        self._tv[slot, :req.num_steps] = ts.astype(np.float32)
+        self._labels[slot] = req.class_label
+
+    def _plan(self, states, steps, xs, tvals) -> np.ndarray:
+        """Per-slot compute decision for this tick (before masking)."""
+        if self._static_plan is not None:
+            return self._static_plan[steps]
+        labels = jnp.asarray(self._labels)
+        return np.asarray(self._want(states, jnp.asarray(steps), xs,
+                                     jnp.asarray(tvals), labels))
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[DiffusionRequest],
+              telemetry: Optional[ServingTelemetry] = None,
+              max_ticks: Optional[int] = None) -> List[DiffusionResult]:
+        """Run every request through the slot pool; returns results in
+        request order."""
+        for r in requests:
+            if r.num_steps > self.max_steps:
+                raise ValueError(f"request {r.request_id}: num_steps="
+                                 f"{r.num_steps} > max_steps={self.max_steps}")
+        tele = telemetry if telemetry is not None else ServingTelemetry()
+        tele.cache_state_bytes_per_slot = cache_state_bytes(self._fresh)
+        tele.start()
+
+        sched = SlotScheduler(self.slots, self.align)
+        now = time.perf_counter
+        recs: Dict[int, RequestRecord] = {
+            r.request_id: RequestRecord(r.request_id, r.num_steps,
+                                        r.traffic_class, enqueue_time=now())
+            for r in requests}
+        sched.submit_all(requests)
+
+        T, D = self.cfg.dit_patch_tokens, self.cfg.dit_in_dim
+        xs = jnp.zeros((self.slots, T, D), jnp.float32)
+        states = self.batched.init_state(self._feat,
+                                         signal_shape=self._sig_shape)
+
+        results: Dict[int, DiffusionResult] = {}
+        tick = 0
+        while not sched.idle():
+            # -- refill free slots from the queue (phase-aligned) -------
+            for slot, req in sched.admit(tick):
+                noise = jax.random.normal(jax.random.PRNGKey(req.seed), (T, D))
+                xs, states = self._refill(xs, states, slot.index, noise,
+                                          self._fresh)
+                self._install_request(slot.index, req)
+                rec = recs[req.request_id]
+                rec.admit_time = now()
+                rec.admit_tick = tick
+                rec.slot = slot.index
+
+            active = np.asarray(sched.active_mask())
+            steps = np.asarray(sched.steps(), np.int32)
+            idx = np.minimum(steps, self.max_steps - 1)
+            rows = np.arange(self.slots)
+            tvals = self._tv[rows, idx]
+            ab_t = self._ab[rows, idx]
+            ab_n = self._ab[rows, idx + 1]
+
+            want = self._plan(states, idx, xs, tvals) & active
+            full = bool(want.any())
+            program = self._tick_full if full else self._tick_skip
+            t0 = now()
+            xs, states = program(states, jnp.asarray(idx), xs,
+                                 jnp.asarray(tvals), jnp.asarray(self._labels),
+                                 jnp.asarray(ab_t), jnp.asarray(ab_n))
+            xs.block_until_ready()
+            tele.record_tick(full, now() - t0)
+
+            for slot in sched.slots:
+                if slot.busy and want[slot.index]:
+                    recs[slot.request.request_id].computed_steps += 1
+
+            # -- advance + harvest finished slots -----------------------
+            sched.advance()
+            for slot, req in sched.harvest():
+                rec = recs[req.request_id]
+                rec.finish_time = now()
+                rec.finish_tick = tick + 1
+                tele.finish_request(rec)
+                results[req.request_id] = DiffusionResult(
+                    req.request_id, np.asarray(xs[slot.index]), rec)
+
+            tick += 1
+            if max_ticks is not None and tick >= max_ticks:
+                break
+
+        tele.stop()
+        self.telemetry = tele
+        return [results[r.request_id] for r in requests
+                if r.request_id in results]

@@ -1,0 +1,128 @@
+"""Step-interleaved continuous-batching scheduler (host side).
+
+A fixed pool of slots; each slot holds one request at its own denoising
+step.  All slots advance together by one vmapped device program per tick;
+slots whose request has exhausted its step budget are harvested and refilled
+from the admission queue *mid-flight* — the other slots never stall.
+
+Phase-aligned admission: interval-scheduled policies (FORA, TaylorSeer,
+FreqCa, ...) compute at per-request steps {0, N, 2N, ...}.  If requests are
+admitted only at global ticks that are multiples of N, every slot's compute
+steps land on the same ticks, so (N-1)/N of all ticks need no backbone at
+all and the engine dispatches the cheap forecast/reuse program.  Admission
+of a freed slot waits at most N-1 ticks; with the batch still advancing this
+costs far less than it saves (see benchmarks/bench_serving.py).
+
+This module is pure host-side bookkeeping — no jax — so the lifecycle is
+unit-testable in microseconds (tests/test_serving_diffusion.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.serving.common import RequestQueue
+
+
+@dataclass(frozen=True)
+class DiffusionRequest:
+    """One latent-generation request.
+
+    num_steps is the request's denoising step budget — requests with
+    different budgets share slots (mixed-budget continuous batching)."""
+    request_id: int
+    num_steps: int
+    seed: int = 0
+    class_label: int = 0
+    traffic_class: str = "default"
+
+
+@dataclass
+class Slot:
+    """One slot's lifecycle state."""
+    index: int
+    request: Optional[DiffusionRequest] = None
+    step: int = 0
+    admit_tick: int = -1
+
+    @property
+    def busy(self) -> bool:
+        return self.request is not None
+
+    @property
+    def done(self) -> bool:
+        return self.busy and self.step >= self.request.num_steps
+
+
+class SlotScheduler:
+    """Admission queue + slot pool + per-request step budgets.
+
+    The engine drives it as:
+        admitted = sched.admit(tick)        # refill free slots (aligned)
+        ...run one device tick...
+        sched.advance()                     # step += 1 on busy slots
+        for slot, req in sched.harvest():   # budget exhausted -> free slot
+    """
+
+    def __init__(self, num_slots: int, align: int = 1):
+        assert num_slots >= 1 and align >= 1
+        self.slots: List[Slot] = [Slot(i) for i in range(num_slots)]
+        self.align = align
+        self.queue: RequestQueue = RequestQueue()
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, request: DiffusionRequest) -> None:
+        self.queue.push(request)
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    # -- lifecycle ------------------------------------------------------
+    def admit(self, tick: int) -> List[Tuple[Slot, DiffusionRequest]]:
+        """Fill free slots from the queue; respects phase alignment."""
+        if tick % self.align != 0:
+            return []
+        admitted = []
+        for slot in self.slots:
+            if slot.busy or not self.queue:
+                continue
+            req = self.queue.pop()
+            slot.request = req
+            slot.step = 0
+            slot.admit_tick = tick
+            admitted.append((slot, req))
+        return admitted
+
+    def advance(self) -> None:
+        for slot in self.slots:
+            if slot.busy:
+                slot.step += 1
+
+    def harvest(self) -> List[Tuple[Slot, DiffusionRequest]]:
+        """Pop (slot, request) pairs whose budget is exhausted; frees slots."""
+        out = []
+        for slot in self.slots:
+            if slot.done:
+                out.append((slot, slot.request))
+                slot.request = None
+                slot.step = 0
+                slot.admit_tick = -1
+        return out
+
+    # -- views ----------------------------------------------------------
+    @property
+    def num_slots(self) -> int:
+        return len(self.slots)
+
+    def active_mask(self) -> List[bool]:
+        return [s.busy for s in self.slots]
+
+    def steps(self) -> List[int]:
+        return [s.step for s in self.slots]
+
+    def any_busy(self) -> bool:
+        return any(s.busy for s in self.slots)
+
+    def idle(self) -> bool:
+        return not self.any_busy() and not self.queue

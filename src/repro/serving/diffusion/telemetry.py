@@ -1,0 +1,135 @@
+"""Serving telemetry: per-request and fleet-level metrics.
+
+The survey's acceleration claims are single-trajectory (compute_fraction,
+PSNR); a serving system additionally cares about queue wait, end-to-end
+latency, request throughput, and how often the batch-level scheduler managed
+to dispatch the cheap all-reuse program instead of the full backbone.  This
+module collects both views:
+
+  * RequestRecord — one request's lifecycle timestamps + cache counters
+  * ServingTelemetry — fleet aggregation: throughput, latency percentiles,
+    full/skip tick mix, cache hit + forecast rates, cache_state_bytes/slot
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(q * (len(xs) - 1)), len(xs) - 1)
+    return xs[i]
+
+
+@dataclass
+class RequestRecord:
+    """Lifecycle + cache telemetry for one request."""
+    request_id: int
+    num_steps: int
+    traffic_class: str = "default"
+    enqueue_time: float = 0.0
+    admit_time: float = 0.0
+    finish_time: float = 0.0
+    admit_tick: int = -1
+    finish_tick: int = -1
+    slot: int = -1
+    computed_steps: int = 0          # ticks where this slot ran a full compute
+
+    @property
+    def latency(self) -> float:
+        """End-to-end seconds from enqueue to completion."""
+        return self.finish_time - self.enqueue_time
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit_time - self.enqueue_time
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of denoise steps that ran the backbone for this request;
+        the survey's acceleration factor is ~ 1/compute_fraction (§III-B)."""
+        return self.computed_steps / max(self.num_steps, 1)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Steps served from cache (verbatim reuse or forecast)."""
+        return 1.0 - self.compute_fraction
+
+
+@dataclass
+class ServingTelemetry:
+    """Aggregates RequestRecords plus per-tick engine counters."""
+    cache_state_bytes_per_slot: int = 0
+    records: List[RequestRecord] = field(default_factory=list)
+    ticks_full: int = 0
+    ticks_skip: int = 0
+    tick_seconds_full: float = 0.0
+    tick_seconds_skip: float = 0.0
+    _t0: Optional[float] = None
+    _t1: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> None:
+        self._t1 = time.perf_counter()
+
+    def record_tick(self, full: bool, seconds: float) -> None:
+        if full:
+            self.ticks_full += 1
+            self.tick_seconds_full += seconds
+        else:
+            self.ticks_skip += 1
+            self.tick_seconds_skip += seconds
+
+    def finish_request(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    # ------------------------------------------------------------------
+    @property
+    def elapsed(self) -> float:
+        t1 = self._t1 if self._t1 is not None else time.perf_counter()
+        return (t1 - self._t0) if self._t0 is not None else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        lat = [r.latency for r in self.records]
+        cf = [r.compute_fraction for r in self.records]
+        ticks = self.ticks_full + self.ticks_skip
+        n = len(self.records)
+        return {
+            "requests": n,
+            "elapsed_s": self.elapsed,
+            "throughput_rps": n / self.elapsed if self.elapsed > 0 else 0.0,
+            "latency_p50_s": _pct(lat, 0.50),
+            "latency_p95_s": _pct(lat, 0.95),
+            "queue_wait_mean_s": (sum(r.queue_wait for r in self.records) / n
+                                  if n else 0.0),
+            "compute_fraction_mean": sum(cf) / n if n else 1.0,
+            "cache_hit_rate_mean": 1.0 - (sum(cf) / n if n else 1.0),
+            "ticks": ticks,
+            "full_tick_fraction": self.ticks_full / ticks if ticks else 0.0,
+            "tick_ms_full_mean": (1e3 * self.tick_seconds_full /
+                                  self.ticks_full if self.ticks_full else 0.0),
+            "tick_ms_skip_mean": (1e3 * self.tick_seconds_skip /
+                                  self.ticks_skip if self.ticks_skip else 0.0),
+            "cache_state_bytes_per_slot": self.cache_state_bytes_per_slot,
+        }
+
+    def by_traffic_class(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for tc in sorted({r.traffic_class for r in self.records}):
+            recs = [r for r in self.records if r.traffic_class == tc]
+            lat = [r.latency for r in recs]
+            out[tc] = {
+                "requests": len(recs),
+                "latency_p50_s": _pct(lat, 0.50),
+                "latency_p95_s": _pct(lat, 0.95),
+                "compute_fraction_mean":
+                    sum(r.compute_fraction for r in recs) / len(recs),
+            }
+        return out

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode_step, init_cache, prefill
+from repro.serving.common import RequestQueue
 
 PyTree = Any
 
@@ -72,9 +73,9 @@ class ServingEngine:
         compiled prefill serves every request."""
         results = [GenerationResult(i, p) for i, p in enumerate(prompts)]
         key = jax.random.PRNGKey(seed)
-        for lo in range(0, len(prompts), self.slots):
-            chunk = list(range(lo, min(lo + self.slots, len(prompts))))
-            pad = self.slots - len(chunk)
+        queue = RequestQueue(range(len(prompts)))
+        while queue:
+            chunk = queue.pop_many(self.slots)
             toks = np.zeros((self.slots, self.max_prompt), np.int32)
             for row, ridx in enumerate(chunk):
                 p = prompts[ridx][-self.max_prompt:]

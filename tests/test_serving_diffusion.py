@@ -1,0 +1,266 @@
+"""Diffusion serving subsystem: scheduler lifecycle, batched cache states,
+reset-on-refill isolation, serving-vs-reference fidelity, autotuning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import POLICY_REGISTRY, SlotBatchedPolicy, make_policy
+from repro.diffusion import (CachedDenoiser, ddim_step, linear_schedule,
+                             sample)
+from repro.models import init_params, perturb_zero_init
+from repro.serving import RequestQueue
+from repro.serving.diffusion import (SLA, DiffusionRequest,
+                                     DiffusionServingEngine, SlotScheduler,
+                                     autotune)
+
+NUM_STEPS = 12
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("dit-xl").reduced(num_layers=3, d_model=128,
+                                       num_heads=4, num_kv_heads=4,
+                                       d_ff=256, dit_patch_tokens=16,
+                                       dit_in_dim=8, dit_num_classes=10)
+    params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _reference(cfg, params, policy_name, num_steps, seed, **kw):
+    sched = linear_schedule(1000)
+    ts = sched.spaced(num_steps)
+    xT = jax.random.normal(jax.random.PRNGKey(seed),
+                           (1, cfg.dit_patch_tokens, cfg.dit_in_dim))
+    pol = make_policy(policy_name, num_steps=num_steps, **kw)
+    den = CachedDenoiser(params, cfg, pol)
+    x0, _ = sample(den, xT, ts, sched, step_fn=ddim_step,
+                   denoiser_state=den.init_state(1))
+    return np.asarray(x0[0])
+
+
+# ----------------------------------------------------------------------
+# host-side machinery (no model, no jit)
+# ----------------------------------------------------------------------
+
+def test_request_queue_fifo():
+    q = RequestQueue([1, 2, 3])
+    q.push(4)
+    assert len(q) == 4 and q.submitted == 4
+    assert q.pop() == 1
+    assert q.pop_many(2) == [2, 3]
+    assert q.peek() == 4 and q.pop() == 4
+    assert not q and q.pop() is None and q.pop_many(5) == []
+
+
+def test_scheduler_lifecycle():
+    sched = SlotScheduler(num_slots=2)
+    reqs = [DiffusionRequest(i, num_steps=2 + i) for i in range(3)]
+    sched.submit_all(reqs)
+
+    admitted = sched.admit(tick=0)
+    assert [r.request_id for _, r in admitted] == [0, 1]
+    assert sched.active_mask() == [True, True]
+    assert sched.admit(tick=1) == []          # pool full, req 2 queued
+    assert len(sched.queue) == 1
+
+    sched.advance(); sched.advance()          # req 0 (budget 2) finishes
+    done = sched.harvest()
+    assert [(s.index, r.request_id) for s, r in done] == [(0, 0)]
+    assert sched.active_mask() == [False, True]
+
+    # mid-flight refill into the freed slot while slot 1 keeps running
+    admitted = sched.admit(tick=2)
+    assert [(s.index, r.request_id) for s, r in admitted] == [(0, 2)]
+    assert sched.steps() == [0, 2]
+
+    sched.advance()                           # req 1 (budget 3) finishes
+    assert [r.request_id for _, r in sched.harvest()] == [1]
+    for _ in range(3):
+        sched.advance()
+    assert [r.request_id for _, r in sched.harvest()] == [2]
+    assert sched.idle()
+
+
+def test_scheduler_phase_aligned_admission():
+    sched = SlotScheduler(num_slots=2, align=4)
+    sched.submit_all([DiffusionRequest(i, num_steps=4) for i in range(4)])
+    assert sched.admit(tick=0) != []          # aligned tick: admits
+    for _, r in sched.harvest():
+        pass
+    for tick in range(1, 4):
+        sched.advance()
+        sched.harvest()
+        assert sched.admit(tick) == []        # off-phase: queue waits
+    sched.advance()
+    sched.harvest()                           # budgets exhausted at tick 4
+    admitted = sched.admit(tick=4)
+    assert [r.request_id for _, r in admitted] == [2, 3]
+
+
+# ----------------------------------------------------------------------
+# batched cache states (SlotBatchedPolicy)
+# ----------------------------------------------------------------------
+
+def test_slot_batched_policy_reset_on_refill():
+    """Resetting one slot restores its fresh state and leaves others alone."""
+    pol = make_policy("taylorseer", interval=2)
+    batched = SlotBatchedPolicy(pol, slots=3)
+    shape = (4, 8)
+    states = batched.init_state(shape)
+    fresh = batched.init_slot_state(shape)
+
+    xs = jax.random.normal(jax.random.PRNGKey(0), (3, *shape))
+    steps = jnp.zeros((3,), jnp.int32)
+    _, states = batched.apply(states, steps, xs, lambda x: x * 2.0)
+    assert float(jnp.abs(states["diffs"]).max()) > 0.0  # all slots dirty
+
+    states2 = SlotBatchedPolicy.reset_slot(states, 1, fresh)
+    for leaf, fresh_leaf, orig in zip(
+            jax.tree_util.tree_leaves(states2),
+            jax.tree_util.tree_leaves(fresh),
+            jax.tree_util.tree_leaves(states)):
+        np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                      np.asarray(fresh_leaf))
+        np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                      np.asarray(orig[0]))
+        np.testing.assert_array_equal(np.asarray(leaf[2]),
+                                      np.asarray(orig[2]))
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fora", {"interval": 3}),
+    ("taylorseer", {"interval": 3}),
+    ("teacache", {"delta": 0.15}),
+    ("magcache", {"delta": 0.1, "num_steps": 10}),
+    ("easycache", {"tau": 3.0}),
+    ("foresight", {}),
+])
+def test_want_compute_mirrors_apply(name, kw):
+    """The serving engine dispatches the dummy-compute program whenever
+    want_compute is all-False, so the prediction must match the branch
+    `apply` actually takes (counted via the policy's compute counters)."""
+    pol = make_policy(name, **kw)
+    shape = (1, 6, 4)
+    state = pol.init_state(shape)
+    key = jax.random.PRNGKey(0)
+    predicted = actual = 0
+    for step in range(10):
+        key, sub = jax.random.split(key)
+        x = jax.random.normal(sub, shape)
+        w = bool(pol.want_compute(state, jnp.asarray(step), x))
+        y, state = pol.apply(state, jnp.asarray(step), x,
+                             lambda xx: jnp.tanh(xx) * 3.0)
+        predicted += int(w)
+    for counter in ("n_compute", "n_valid"):
+        if counter in state:
+            actual = int(state[counter])
+            break
+    else:
+        sched = pol.static_schedule(10)
+        actual = sum(map(bool, sched))
+    assert predicted == actual, (name, predicted, actual)
+
+
+# ----------------------------------------------------------------------
+# end-to-end serving
+# ----------------------------------------------------------------------
+
+def test_refill_resets_cache_state(setup):
+    """Slot reuse must not leak cache state: request B served after A
+    through the same slot must equal B served alone (bitwise)."""
+    cfg, params = setup
+    a = DiffusionRequest(0, NUM_STEPS, seed=1)
+    b = DiffusionRequest(1, NUM_STEPS, seed=2)
+
+    eng = DiffusionServingEngine(params, cfg, "taylorseer", slots=1,
+                                 max_steps=16)
+    both = eng.serve([a, b])
+    eng2 = DiffusionServingEngine(params, cfg, "taylorseer", slots=1,
+                                  max_steps=16)
+    alone = eng2.serve([b])
+    np.testing.assert_array_equal(both[1].x0, alone[0].x0)
+
+
+@pytest.mark.parametrize("name", ["none", "fora", "taylorseer", "teacache",
+                                  "toca"])
+def test_serving_matches_cached_denoiser(setup, name):
+    """One request through the slot machinery must match the single-
+    trajectory CachedDenoiser path (same policy, same grid).  `toca` guards
+    the plan-derivation rule: its partial branch calls compute_fn, so the
+    engine must never hand it a skip tick despite its interval
+    static_schedule."""
+    cfg, params = setup
+    pol = make_policy(name, num_steps=NUM_STEPS)
+    eng = DiffusionServingEngine(params, cfg, pol, slots=2, max_steps=16)
+    res = eng.serve([DiffusionRequest(0, NUM_STEPS, seed=7)])
+    ref = _reference(cfg, params, name, NUM_STEPS, seed=7)
+    np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
+
+
+def test_e2e_mixed_budget_serving_smoke(setup):
+    """16 mixed-budget requests through 4 slots: all complete, telemetry is
+    populated, and interval caching actually skips backbone ticks."""
+    cfg, params = setup
+    reqs = [DiffusionRequest(i, num_steps=(8, 12, 16)[i % 3], seed=i,
+                             traffic_class=("interactive", "quality")[i % 2])
+            for i in range(16)]
+    eng = DiffusionServingEngine(params, cfg, "taylorseer", slots=4,
+                                 max_steps=16)
+    res = eng.serve(reqs)
+    assert len(res) == 16
+    assert all(np.isfinite(r.x0).all() for r in res)
+    assert [r.request_id for r in res] == list(range(16))
+
+    s = eng.telemetry.summary()
+    assert s["requests"] == 16
+    assert s["throughput_rps"] > 0
+    assert 0.0 < s["compute_fraction_mean"] < 1.0
+    assert eng.telemetry.ticks_skip > eng.telemetry.ticks_full  # interval=4
+    assert s["cache_state_bytes_per_slot"] > 0
+    for r in res:
+        assert r.record.latency > 0
+        assert r.record.queue_wait >= 0
+        assert 0.0 < r.record.compute_fraction <= 1.0
+    by_class = eng.telemetry.by_traffic_class()
+    assert set(by_class) == {"interactive", "quality"}
+
+
+def test_serving_rejects_over_budget_request(setup):
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "none", slots=1, max_steps=8)
+    with pytest.raises(ValueError):
+        eng.serve([DiffusionRequest(0, num_steps=9)])
+
+
+# ----------------------------------------------------------------------
+# autotuning
+# ----------------------------------------------------------------------
+
+def test_autotune_respects_sla(setup):
+    cfg, params = setup
+    cands = [("none", {}), ("fora", {"interval": 4}),
+             ("taylorseer", {"interval": 4, "order": 2})]
+    strict = autotune(params, cfg, SLA("strict", min_psnr=50.0),
+                      candidates=cands, num_steps=NUM_STEPS)
+    loose = autotune(params, cfg, SLA("loose", min_psnr=-100.0),
+                     candidates=cands, num_steps=NUM_STEPS)
+    assert strict.policy_name == "none" and strict.feasible
+    # everything is feasible under the loose SLA: cheapest candidate wins
+    assert loose.compute_fraction <= strict.compute_fraction
+    assert loose.policy_name in ("fora", "taylorseer")
+    assert loose.align == 4
+    assert loose.make() is not None
+
+
+def test_policy_registry_covers_taxonomy():
+    """dbcache is deliberately structural (not in make_policy); the registry
+    plus STRUCTURAL_POLICIES must cover it with a pointed error."""
+    from repro.core import STRUCTURAL_POLICIES
+    assert "dbcache" in STRUCTURAL_POLICIES
+    with pytest.raises(KeyError, match="structural"):
+        make_policy("dbcache")
+    # every registry entry constructs
+    for name in POLICY_REGISTRY:
+        assert make_policy(name) is not None
