@@ -4,14 +4,21 @@
 
 A queue of 20 latent-generation requests with mixed step budgets (interactive
 previews at 8 steps, quality renders at 16) flows through 6 slots.  Each slot
-is one in-flight request at its own denoising step; a single pair of compiled
-programs advances all of them per tick, and the SLA autotuner picks the cache
-policy per traffic class before serving.
+is one in-flight request at its own denoising step; a single triple of
+compiled programs advances all of them per tick, and the SLA autotuner picks
+the cache policy per traffic class before serving.
+
+Part 2 serves *guided* traffic: classifier-free guidance doubles backbone
+cost, so each slot additionally carries a FasterCacheCFG state that reuses
+the unconditional branch — on reuse ticks the engine drops the uncond rows
+from the backbone batch entirely (the cond-only tick program).  Guided and
+unguided requests share one slot pool.
 """
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import FasterCacheCFG
 from repro.models import init_params, perturb_zero_init
 from repro.diffusion import linear_schedule
 from repro.serving.diffusion import (SLA, DiffusionRequest,
@@ -63,7 +70,7 @@ for tc, t in tuned.items():
           f"(cache hit rate {s['cache_hit_rate_mean']:.3f})")
     print(f"  ticks           : {s['ticks']} "
           f"({100 * s['full_tick_fraction']:.0f}% ran the backbone; "
-          f"full {s['tick_ms_full_mean']:.1f}ms vs "
+          f"backbone {s['tick_ms_cond_mean']:.1f}ms vs "
           f"skip {s['tick_ms_skip_mean']:.1f}ms)")
     print(f"  cache state     : {s['cache_state_bytes_per_slot']} B/slot")
     for r in results[:4]:
@@ -71,4 +78,40 @@ for tc, t in tuned.items():
         print(f"    req {rec.request_id:2d}: {rec.num_steps:2d} steps, "
               f"latency {rec.latency:.3f}s (queued {rec.queue_wait:.3f}s), "
               f"computed {rec.computed_steps}/{rec.num_steps}")
+
+# -- 3. guided + unguided requests through one CFG-aware slot pool ---------
+# cfg_scale > 0 makes a request guided: the engine runs a second
+# (unconditional) backbone branch and blends eps = e_u + s (e_c - e_u).
+# FasterCacheCFG per slot reuses the uncond branch between refreshes, so
+# most backbone ticks drop the uncond rows (cond-only program).
+guided_requests = [
+    DiffusionRequest(100 + i, num_steps=16, seed=i,
+                     class_label=i % cfg.dit_num_classes,
+                     cfg_scale=4.0 if i % 2 == 0 else 0.0)
+    for i in range(12)]
+
+eng = DiffusionServingEngine(params, cfg, "fora", slots=6, max_steps=16,
+                             noise_schedule=noise_sched,
+                             cfg_policy=FasterCacheCFG(interval=4,
+                                                       num_steps=16))
+results = eng.serve(guided_requests)
+s = eng.telemetry.summary()
+assert len(results) == len(guided_requests)
+assert all(np.isfinite(r.x0).all() for r in results)
+print(f"\n== mixed guided/unguided: {len(guided_requests)} requests "
+      f"({s['guided_requests']} guided @ cfg_scale=4.0) ==")
+print(f"  throughput      : {s['throughput_rps']:.2f} req/s")
+print(f"  tick mix        : {eng.telemetry.ticks_full} both-branch / "
+      f"{eng.telemetry.ticks_cond} cond-only / "
+      f"{eng.telemetry.ticks_skip} skip")
+print(f"  uncond rows     : {s['uncond_rows_computed']} dispatched, "
+      f"{s['uncond_rows_saved']} saved by CFG reuse "
+      f"({s['uncond_saved_steps_total']} uncond computes saved "
+      f"across guided requests)")
+for r in results[:4]:
+    rec = r.record
+    tag = (f"guided, uncond {rec.uncond_computed_steps}/{rec.num_steps}"
+           if rec.guided else "unguided")
+    print(f"    req {rec.request_id:3d}: computed "
+          f"{rec.computed_steps}/{rec.num_steps} cond ({tag})")
 print("\nOK")

@@ -48,6 +48,11 @@ POLICY_REGISTRY = {
     "toca": lambda interval=4, ratio=0.25, **kw: ToCaPolicy(interval, ratio),
     "clusca": lambda interval=4, k=16, **kw: ClusCaPolicy(interval, k),
     "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
+    # CFG-branch reuse (survey §III-C).  Not a backbone gate: it caches the
+    # *unconditional* stream and belongs in CachedDenoiser's `cfg_policy`
+    # slot or DiffusionServingEngine's `cfg_policy` argument.
+    "fastercache_cfg": lambda interval=4, num_steps=50, **kw:
+        FasterCacheCFG(interval, num_steps),
 }
 
 # Stack-structural methods complete the taxonomy map but are NOT CachePolicy

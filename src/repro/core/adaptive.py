@@ -215,6 +215,11 @@ class BlockCachePolicy(CachePolicy):
     recomputes whenever the cumulative change since the last refresh would
     exceed delta (Eq. 35).  The result is a static per-block compute plan —
     cheap, robust, and exactly what the compiled roofline graphs consume.
+
+    Steps beyond the calibration profile recompute (recompute-on-overflow):
+    a trajectory longer than the profile has no measured change data, and
+    silently clamping to the last scheduled decision (what an out-of-range
+    gather would do) can extend a reuse run indefinitely.
     """
 
     name = "blockcache"
@@ -239,13 +244,17 @@ class BlockCachePolicy(CachePolicy):
                 sched.append(False)
         return sched
 
+    def _sched_at(self, step: int) -> bool:
+        """Concrete-step lookup with recompute-on-overflow."""
+        return self._schedule[step] if step < len(self._schedule) else True
+
     def init_state(self, shape, dtype=jnp.float32):
         return {"cache": jnp.zeros(shape, dtype),
                 "sched": jnp.asarray(self._schedule, jnp.bool_)}
 
     def apply(self, state, step, x, compute_fn, **signals):
         if isinstance(step, int):
-            if self._schedule[step]:
+            if self._sched_at(step):
                 y = compute_fn(x)
                 return y, {**state, "cache": y.astype(state["cache"].dtype)}
             return state["cache"].astype(x.dtype), state
@@ -263,12 +272,17 @@ class BlockCachePolicy(CachePolicy):
 
     def want_compute(self, state, step, x=None, **signals):
         if isinstance(step, int):
-            return jnp.asarray(self._schedule[step])
-        return state["sched"][jnp.asarray(step, jnp.int32)]
+            return jnp.asarray(self._sched_at(step))
+        step = jnp.asarray(step, jnp.int32)
+        n = state["sched"].shape[0]
+        in_range = step < n
+        return jnp.where(in_range, state["sched"][jnp.clip(step, 0, n - 1)],
+                         True)
 
     def static_schedule(self, num_steps: int):
-        assert num_steps <= len(self._schedule)
-        return self._schedule[:num_steps]
+        if num_steps <= len(self._schedule):
+            return self._schedule[:num_steps]
+        return self._schedule + [True] * (num_steps - len(self._schedule))
 
 
 class ForesightPolicy(CachePolicy):

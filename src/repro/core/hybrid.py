@@ -29,11 +29,14 @@ def kmeans(tokens: jnp.ndarray, k: int, iters: int = 5):
     """Deterministic fixed-iteration K-means over (T, D) tokens.
 
     Returns (assign (T,), centroids (k, D), reps (k,)) where reps[i] is the
-    token index closest to centroid i.
+    token index closest to centroid i.  `k` is clamped to the token count —
+    there can be no more clusters than tokens, and an unclamped `k > T`
+    would stride the init by zero (every centroid seeded from token 0).
     """
     T = tokens.shape[0]
+    k = min(k, T)
     # deterministic init: evenly strided tokens
-    idx0 = jnp.arange(k) * (T // k)
+    idx0 = (jnp.arange(k) * max(T // k, 1)) % T
     cent = tokens[idx0]
 
     def step(cent, _):
@@ -70,12 +73,16 @@ class ClusCaPolicy(CachePolicy):
         self.gamma = float(gamma)
         self.kmeans_iters = kmeans_iters
 
+    def _k(self, T: int) -> int:
+        """Effective cluster count: never more clusters than tokens."""
+        return min(self.k, T)
+
     def init_state(self, shape, dtype=jnp.float32):
         T = shape[-2]
         return {
             "cache": jnp.zeros(shape, dtype),
             "assign": jnp.zeros(shape[:-2] + (T,), jnp.int32),
-            "reps": jnp.zeros(shape[:-2] + (self.k,), jnp.int32),
+            "reps": jnp.zeros(shape[:-2] + (self._k(T),), jnp.int32),
         }
 
     def apply(self, state, step, x, compute_fn, subset_fn: Optional[Callable] = None,
@@ -84,7 +91,8 @@ class ClusCaPolicy(CachePolicy):
             y = compute_fn(x)
 
             def cluster_2d(y2):
-                assign, _, reps = kmeans(y2.astype(jnp.float32), self.k,
+                assign, _, reps = kmeans(y2.astype(jnp.float32),
+                                         self._k(y2.shape[0]),
                                          self.kmeans_iters)
                 return assign, reps
 
@@ -123,7 +131,7 @@ class ClusCaPolicy(CachePolicy):
                     x.reshape((-1,) + x.shape[-2:]),
                     state["cache"].reshape((-1,) + x.shape[-2:]),
                     state["assign"].reshape((-1, x.shape[-2])),
-                    state["reps"].reshape((-1, self.k)),
+                    state["reps"].reshape((-1, state["reps"].shape[-1])),
                 )
                 y = y.reshape(lead + y.shape[-2:])
             new = dict(state)

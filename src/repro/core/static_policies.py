@@ -108,6 +108,7 @@ class FasterCacheCFG(CachePolicy):
     name = "fastercache_cfg"
 
     def __init__(self, interval: int, num_steps: int):
+        assert interval >= 1
         self.interval = interval
         self.num_steps = num_steps
 
@@ -123,7 +124,12 @@ class FasterCacheCFG(CachePolicy):
             return y, {"prev": y.astype(state["prev"].dtype), "prev2": state["prev"]}
 
         def reuse(state):
-            if is_static_step(step):
+            # the trajectory-progress weight: serving passes it explicitly as
+            # `cfg_w = step / (request.num_steps - 1)` because slots run
+            # different step budgets against one shared policy instance
+            if signals.get("cfg_w") is not None:
+                w = jnp.asarray(signals["cfg_w"], x.dtype)
+            elif is_static_step(step):
                 w = jnp.asarray(step / max(self.num_steps - 1, 1), x.dtype)
             else:
                 w = step.astype(x.dtype) / max(self.num_steps - 1, 1)

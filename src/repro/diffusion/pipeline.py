@@ -199,6 +199,73 @@ def slot_denoise_fns(params, cfg, policy: CachePolicy):
     return backbone_fn, apply_fn, want_fn
 
 
+def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
+                         cfg_policy: Optional[CachePolicy] = None):
+    """CFG-aware slot-parallel entry point for the serving engine.
+
+    Extends `slot_denoise_fns` to guided requests: each slot carries a
+    conditional cache state (the main `policy`) *and* an unconditional-branch
+    state (`cfg_policy`, typically FasterCacheCFG; None means the uncond
+    branch recomputes every step — naive two-branch serving).  The backbone
+    still runs OUTSIDE vmap; on both-branch ticks the engine stacks cond and
+    uncond rows into one 2S-row batch (slot axis == batch axis), so XLA sees
+    a plain batched forward either way.
+
+      backbone2_fn(xs, ts, labels, null_labels) -> (eps_c, eps_u)
+          one 2S-row backbone pass over [cond rows; uncond rows], split back
+          into the two S-row branch outputs.
+      backbone_fn(xs, ts, labels) -> eps_c
+          the S-row cond-only pass (from slot_denoise_fns), dispatched on
+          ticks where every active slot reuses its cached uncond branch —
+          this is where FasterCacheCFG's serving-level saving comes from.
+      apply_fn(state, step, x, t, label, scale, cfg_w, y_c, y_u)
+          per-slot (vmapped) policy logic over the combined state
+          {"policy": ..., "cfg": ...}.  `scale` is the slot's cfg_scale
+          (<= 0 means unguided: the uncond branch output is discarded via a
+          select, never blended).  `cfg_w` is the slot's trajectory-progress
+          weight step/(num_steps-1) — passed from the host because slots run
+          different step budgets against one shared FasterCacheCFG instance.
+          On cond-only / skip ticks the engine passes zeros for the missing
+          y_u / y_c rows — safe under the same rule as slot_denoise_fns:
+          a dummy row may only reach a branch that the per-slot lax.cond
+          (vmapped to a select) discards.
+      want_cond_fn / want_uncond_fn
+          traced mirrors of the two refresh decisions; `want_uncond_fn`
+          additionally masks by the slot's `guided` flag so pure-unguided
+          pools never dispatch the 2S-row program.
+    """
+    uncond_policy = cfg_policy if cfg_policy is not None else NoCachePolicy()
+    backbone_fn, base_apply, base_want = slot_denoise_fns(params, cfg, policy)
+
+    def backbone2_fn(xs, ts, labels, null_labels):
+        S = xs.shape[0]
+        x2 = jnp.concatenate([xs, xs], axis=0)
+        t2 = jnp.concatenate([ts, ts], axis=0).astype(jnp.float32)
+        y2 = jnp.concatenate([labels, null_labels], axis=0).astype(jnp.int32)
+        eps = dit.forward(params, x2, t2, y2, cfg)
+        return eps[:S], eps[S:]
+
+    def apply_fn(state, step, x, t, label, scale, cfg_w, y_c, y_u):
+        eps_c, pol_state = base_apply(state["policy"], step, x, t, label, y_c)
+        eps_u, cfg_state = uncond_policy.apply(state["cfg"], step, x[None],
+                                               lambda _: y_u[None],
+                                               cfg_w=cfg_w)
+        eps_u = eps_u[0]
+        eps = jnp.where(scale > 0.0, eps_u + scale * (eps_c - eps_u), eps_c)
+        return eps, {"policy": pol_state, "cfg": cfg_state}
+
+    def want_cond_fn(state, step, x, t, label):
+        return base_want(state["policy"], step, x, t, label)
+
+    def want_uncond_fn(state, step, x, guided):
+        w = uncond_policy.want_compute(state["cfg"], step, x[None])
+        w = jnp.logical_and(jnp.asarray(w), guided)
+        # `& step >= 0` keeps constant predicates mapped under vmap
+        return jnp.logical_and(w, step >= 0)
+
+    return backbone2_fn, backbone_fn, apply_fn, want_cond_fn, want_uncond_fn
+
+
 def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0):
     """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u)."""
     def fn(state, step, x, t_vec):

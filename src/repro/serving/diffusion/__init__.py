@@ -6,23 +6,29 @@ generation requests, each at its own denoising step with its own step
 budget, advance together through two shared jit'd programs while each slot
 carries its own cache state (repro.core.SlotBatchedPolicy):
 
-  engine     — DiffusionServingEngine: vmapped denoise tick (full/skip
-               program pair), mid-flight slot refill, reset-on-refill
+  engine     — DiffusionServingEngine: vmapped denoise tick (full /
+               cond-only / skip program triple), classifier-free guidance
+               with per-slot FasterCacheCFG uncond-branch reuse, mid-flight
+               slot refill, reset-on-refill
   scheduler  — SlotScheduler: admission queue, slot lifecycle, per-request
-               step budgets, phase-aligned admission
-  autotune   — SLA-driven sweep of POLICY_REGISTRY: pick policy +
-               hyperparams per traffic class against latency/quality budgets
-  telemetry  — per-request latency / compute_fraction / cache hit rates,
-               fleet throughput, full-vs-skip tick mix, cache bytes per slot
+               step budgets (+ cfg_scale / null_label), phase-aligned
+               admission
+  autotune   — SLA-driven sweep of POLICY_REGISTRY (optionally × CFG reuse
+               intervals): pick policy + hyperparams per traffic class
+               against latency/quality budgets
+  telemetry  — per-request latency / compute_fraction / cache hit rates +
+               uncond computes saved, fleet throughput, full/cond/skip tick
+               mix, preempted-request accounting, cache bytes per slot
 """
 from .autotune import SLA, TunedPolicy, autotune, autotune_traffic_classes
-from .engine import DiffusionResult, DiffusionServingEngine
+from .engine import (DiffusionResult, DiffusionServingEngine,
+                     request_noise_key)
 from .scheduler import DiffusionRequest, Slot, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
 
 __all__ = [
     "SLA", "TunedPolicy", "autotune", "autotune_traffic_classes",
-    "DiffusionResult", "DiffusionServingEngine",
+    "DiffusionResult", "DiffusionServingEngine", "request_noise_key",
     "DiffusionRequest", "Slot", "SlotScheduler",
     "RequestRecord", "ServingTelemetry",
 ]

@@ -14,16 +14,24 @@ that still meets the SLA:
 
 Falling back to the highest-PSNR candidate when nothing is feasible keeps
 the server serving rather than erroring on an over-tight SLA.
+
+CFG-aware tuning: with `cfg_scale > 0` the calibration reference is the
+exact two-branch guided trajectory and each candidate is additionally swept
+over `cfg_intervals` — unconditional-branch reuse intervals (None = naive
+two-branch; N = FasterCacheCFG(interval=N)).  The minimized cost becomes the
+*row-weighted* compute fraction (cond computes + uncond computes) / (2 T),
+i.e. the fraction of backbone rows a guided request actually dispatches.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.core import CachePolicy, make_policy
+from repro.core import CachePolicy, FasterCacheCFG, make_policy
 from repro.core.metrics import psnr
 from repro.diffusion import ddim_step, linear_schedule, sample
 from repro.diffusion.pipeline import CachedDenoiser, cfg_denoise_fn
@@ -43,17 +51,33 @@ class TunedPolicy:
     policy_name: str
     kwargs: Dict = field(default_factory=dict)
     psnr: float = 0.0
+    #: minimized cost: cond compute fraction for unguided tuning, the
+    #: row-weighted (cond + uncond) / 2 fraction for guided tuning
     compute_fraction: float = 1.0
     est_latency_ms: Optional[float] = None
     feasible: bool = True
+    #: guided tuning only: FasterCacheCFG reuse interval (None = naive
+    #: two-branch) and the resulting uncond-branch compute fraction
+    cfg_interval: Optional[int] = None
+    uncond_compute_fraction: float = 0.0
 
     def make(self) -> CachePolicy:
         return make_policy(self.policy_name, **self.kwargs)
 
+    def make_cfg_policy(self, num_steps: int) -> Optional[CachePolicy]:
+        """The tuned uncond-branch gate for DiffusionServingEngine /
+        CachedDenoiser, or None for naive two-branch guidance."""
+        if self.cfg_interval is None:
+            return None
+        return FasterCacheCFG(self.cfg_interval, num_steps)
+
     @property
     def align(self) -> int:
-        """Phase-alignment interval for the serving scheduler."""
-        return max(int(self.kwargs.get("interval", 1)), 1)
+        """Phase-alignment interval for the serving scheduler: the lcm of
+        the two branch intervals so their refreshes land on shared ticks."""
+        a = max(int(self.kwargs.get("interval", 1)), 1)
+        b = max(int(self.cfg_interval or 1), 1)
+        return a * b // math.gcd(a, b)
 
 
 #: default sweep: one representative per taxonomy branch, two operating
@@ -85,29 +109,45 @@ def _measured_compute_fraction(policy: CachePolicy, state, num_steps: int) -> fl
 
 
 def calibration_reference(params, cfg, num_steps: int, batch: int = 1,
-                          seed: int = 0, noise_schedule=None):
-    """Exact (uncached) calibration trajectory shared by all candidates."""
+                          seed: int = 0, noise_schedule=None,
+                          cfg_scale: float = 0.0, class_label: int = 0):
+    """Exact (uncached) calibration trajectory shared by all candidates.
+
+    With cfg_scale > 0 the reference is the exact two-branch guided
+    trajectory, so candidate PSNR measures guided-output fidelity."""
     sched = noise_schedule or linear_schedule(1000)
     ts = sched.spaced(num_steps)
     xT = jax.random.normal(jax.random.PRNGKey(seed),
                            (batch, cfg.dit_patch_tokens, cfg.dit_in_dim))
-    exact, _ = sample(cfg_denoise_fn(params, cfg, 0.0), xT, ts, sched,
-                      step_fn=ddim_step)
+    exact, _ = sample(cfg_denoise_fn(params, cfg, cfg_scale, class_label),
+                      xT, ts, sched, step_fn=ddim_step)
     return sched, ts, xT, np.asarray(exact)
 
 
 def evaluate_candidate(name: str, kwargs: Dict, params, cfg, sched, ts, xT,
-                       exact: np.ndarray) -> Tuple[float, float]:
+                       exact: np.ndarray, cfg_scale: float = 0.0,
+                       cfg_interval: Optional[int] = None,
+                       class_label: int = 0) -> Tuple[float, float, float]:
     """Run one candidate on the calibration trajectory.
 
-    Returns (psnr_db, compute_fraction)."""
+    Returns (psnr_db, cond_compute_fraction, uncond_compute_fraction)."""
     policy = make_policy(name, **kwargs)
-    den = CachedDenoiser(params, cfg, policy)
+    cfg_pol = (FasterCacheCFG(cfg_interval, len(ts))
+               if (cfg_scale > 0.0 and cfg_interval is not None) else None)
+    den = CachedDenoiser(params, cfg, policy, cfg_scale=cfg_scale,
+                         cfg_policy=cfg_pol, class_label=class_label)
     x0, state = sample(den, xT, ts, sched, step_fn=ddim_step,
                        denoiser_state=den.init_state(xT.shape[0]))
     q = float(psnr(np.asarray(x0), exact))
     cf = _measured_compute_fraction(policy, state, len(ts))
-    return q, cf
+    if cfg_scale <= 0.0:
+        cf_u = 0.0
+    elif cfg_pol is None:
+        cf_u = 1.0                      # naive: uncond recomputes every step
+    else:
+        sched_u = cfg_pol.static_schedule(len(ts))
+        cf_u = sum(map(bool, sched_u)) / max(len(ts), 1)
+    return q, cf, cf_u
 
 
 def autotune(params, cfg, sla: SLA,
@@ -115,17 +155,28 @@ def autotune(params, cfg, sla: SLA,
              num_steps: int = 16, batch: int = 1, seed: int = 0,
              noise_schedule=None,
              step_time_ms: Optional[Tuple[float, float]] = None,
+             cfg_scale: float = 0.0,
+             cfg_intervals: Sequence[Optional[int]] = (None,),
              verbose: bool = False) -> TunedPolicy:
     """Sweep candidates against `sla` on a calibration batch.
 
-    step_time_ms: measured (full_tick_ms, skip_tick_ms) from a prior serving
-    run (ServingTelemetry summary) — enables the latency constraint; without
-    it only the PSNR floor is enforced.
+    step_time_ms: measured (backbone_tick_ms, skip_tick_ms) from a prior
+    serving run — `ServingTelemetry.step_time_ms()`, which averages over
+    full and cond-only ticks (an unguided run records only the latter) —
+    enables the latency constraint; without it only the PSNR floor is
+    enforced.
+
+    cfg_scale > 0 tunes for *guided* traffic: every (policy, hyperparams)
+    candidate is crossed with `cfg_intervals` (uncond-branch reuse intervals;
+    None = naive two-branch) and the minimized compute fraction weights both
+    branches' backbone rows.
     """
     candidates = list(candidates if candidates is not None
                       else DEFAULT_CANDIDATES)
+    cfg_ivs = list(cfg_intervals) if cfg_scale > 0.0 else [None]
     sched, ts, xT, exact = calibration_reference(
-        params, cfg, num_steps, batch, seed, noise_schedule)
+        params, cfg, num_steps, batch, seed, noise_schedule,
+        cfg_scale=cfg_scale)
 
     evaluated: List[TunedPolicy] = []
     for name, kwargs in candidates:
@@ -134,22 +185,29 @@ def autotune(params, cfg, sla: SLA,
         # gamma curve from num_steps)
         kwargs = dict(kwargs)
         kwargs.setdefault("num_steps", num_steps)
-        q, cf = evaluate_candidate(name, kwargs, params, cfg, sched, ts, xT,
-                                   exact)
-        lat = None
-        if step_time_ms is not None:
-            t_full, t_skip = step_time_ms
-            lat = num_steps * (cf * t_full + (1.0 - cf) * t_skip)
-        ok = q >= sla.min_psnr and (
-            lat is None or sla.max_latency_ms is None
-            or lat <= sla.max_latency_ms)
-        evaluated.append(TunedPolicy(name, dict(kwargs), psnr=q,
-                                     compute_fraction=cf, est_latency_ms=lat,
-                                     feasible=ok))
-        if verbose:
-            print(f"  [{sla.name}] {name:12s} {kwargs} "
-                  f"psnr={q:6.2f}dB cf={cf:.3f} "
-                  f"{'ok' if ok else 'infeasible'}")
+        for ci in cfg_ivs:
+            q, cf, cf_u = evaluate_candidate(
+                name, kwargs, params, cfg, sched, ts, xT, exact,
+                cfg_scale=cfg_scale, cfg_interval=ci)
+            # guided cost = fraction of backbone rows dispatched per step
+            cost = (cf + cf_u) / 2.0 if cfg_scale > 0.0 else cf
+            lat = None
+            if step_time_ms is not None:
+                t_full, t_skip = step_time_ms
+                lat = num_steps * (cost * t_full + (1.0 - cost) * t_skip)
+            ok = q >= sla.min_psnr and (
+                lat is None or sla.max_latency_ms is None
+                or lat <= sla.max_latency_ms)
+            evaluated.append(TunedPolicy(name, dict(kwargs), psnr=q,
+                                         compute_fraction=cost,
+                                         est_latency_ms=lat, feasible=ok,
+                                         cfg_interval=ci,
+                                         uncond_compute_fraction=cf_u))
+            if verbose:
+                tag = f" cfg_iv={ci}" if cfg_scale > 0.0 else ""
+                print(f"  [{sla.name}] {name:12s} {kwargs}{tag} "
+                      f"psnr={q:6.2f}dB cf={cost:.3f} "
+                      f"{'ok' if ok else 'infeasible'}")
 
     feasible = [t for t in evaluated if t.feasible]
     if feasible:

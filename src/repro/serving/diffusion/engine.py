@@ -1,23 +1,35 @@
 """DiffusionServingEngine — step-interleaved continuous batching for
-latent generation with per-slot cache states.
+latent generation with per-slot cache states, including classifier-free
+guidance with per-slot CFG-branch reuse (FasterCacheCFG, survey §III-C).
 
-Device side, every tick is one of exactly two jit'd programs over the whole
-slot pool (no per-request compilation, arbitrary request mixes):
+Device side, every tick is one of exactly three jit'd programs over the
+whole slot pool (no per-request compilation, arbitrary request mixes):
 
-  * tick_full — vmapped CachedDenoiser step: each slot's policy takes its
-    own COMPUTE / REUSE / FORECAST branch (lax.cond vmaps to a select); the
-    backbone runs batched over all slots.
-  * tick_skip — identical shape but the compute branch is a cheap dummy;
-    dispatched only on ticks where *no* slot's `want_compute` is true, so
-    the dummy branch's outputs are never selected.  These ticks cost only
-    the forecast/reuse arithmetic — this is where serving-level speedup
-    comes from.
+  * tick_full — both-branch backbone: cond and uncond rows stacked into one
+    2S-row batch (slot axis == batch axis, backbone outside vmap), then the
+    vmapped per-slot policy step: each slot's main policy takes its own
+    COMPUTE / REUSE / FORECAST branch and its FasterCacheCFG state gates the
+    uncond row the same way (lax.cond vmaps to a select).  Dispatched only
+    when some active guided slot's CFG policy wants a fresh uncond compute.
+  * tick_cond_only — backbone over the S cond rows only; every active slot
+    reuses (blend-extrapolates) its cached uncond branch, so the uncond rows
+    are dropped from the backbone batch entirely.  For unguided pools this
+    is the only backbone program — it is PR 2's tick_full.
+  * tick_skip — no backbone at all; dispatched when no slot wants any
+    compute.  These ticks cost only forecast/reuse arithmetic.
+
+CFG doubles backbone cost; FasterCacheCFG(interval=N) makes (N-1)/N of
+backbone ticks cond-only, recovering most of the doubled cost — serving
+throughput lands between 1x and 2x of naive two-branch serving
+(benchmarks/bench_serving.py --cfg).
 
 Host side, the SlotScheduler refills finished slots from the admission
-queue mid-flight.  Refill resets the slot's cache state to a fresh
-`init_state` (reset-on-refill) — slot reuse must never leak cache state
-between requests.  With phase-aligned admission (scheduler docstring),
-interval policies make (N-1)/N of all ticks skip ticks.
+queue mid-flight.  Refill resets the slot's combined cache state — main
+policy AND CFG branch — to a fresh `init_state` (reset-on-refill): slot
+reuse must never leak either cache between requests.  Guided and unguided
+requests share one pool; an unguided slot's uncond output is discarded by a
+select (never blended), and its `want_uncond` is masked off so pure-unguided
+pools never pay for the 2S-row program.
 
 The DDIM update is re-derived here in traced per-slot form (gathered
 alpha-bar tables instead of Python-float arithmetic) because slots sit at
@@ -25,6 +37,7 @@ different timesteps of *different* step-budget grids within one program.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
@@ -36,10 +49,19 @@ import numpy as np
 from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
                         make_policy)
 from repro.diffusion import NoiseSchedule, linear_schedule
-from repro.diffusion.pipeline import slot_denoise_fns
+from repro.diffusion.pipeline import slot_cfg_denoise_fns
 
 from .scheduler import DiffusionRequest, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
+
+
+def request_noise_key(req: DiffusionRequest):
+    """Per-request PRNG key for the initial latent noise.
+
+    Folds the request id into the user seed: requests left at the default
+    `seed=0` must still draw *distinct* initial noise (identical seeds once
+    made every default request produce the identical sample)."""
+    return jax.random.fold_in(jax.random.PRNGKey(req.seed), req.request_id)
 
 
 @dataclass
@@ -56,7 +78,8 @@ class DiffusionServingEngine:
     def __init__(self, params, cfg, policy: Union[CachePolicy, str, None] = None,
                  *, slots: int = 8, max_steps: int = 64,
                  noise_schedule: Optional[NoiseSchedule] = None,
-                 align: Optional[int] = None):
+                 align: Optional[int] = None,
+                 cfg_policy: Union[CachePolicy, str, None] = None):
         self.params, self.cfg = params, cfg
         self.slots = slots
         self.max_steps = max_steps
@@ -64,27 +87,51 @@ class DiffusionServingEngine:
         if isinstance(policy, str):
             policy = make_policy(policy)
         self.policy = policy if policy is not None else make_policy("none")
-        # phase-aligned admission: default to the policy's compute interval
-        self.align = align if align is not None else \
-            max(int(getattr(self.policy, "interval", 1)), 1)
+        # uncond-branch gate for guided requests; None = naive two-branch
+        # serving (every guided slot recomputes its uncond row each step)
+        if isinstance(cfg_policy, str):
+            cfg_policy = make_policy(cfg_policy, num_steps=max_steps)
+        self.cfg_policy = cfg_policy
+        # phase-aligned admission: default to the lcm of the two compute
+        # intervals so both branches' refreshes land on shared ticks
+        if align is not None:
+            self.align = align
+        else:
+            a = max(int(getattr(self.policy, "interval", 1)), 1)
+            b = max(int(getattr(cfg_policy, "interval", 1)), 1) \
+                if cfg_policy is not None else 1
+            self.align = a * b // math.gcd(a, b)
 
         T, D = cfg.dit_patch_tokens, cfg.dit_in_dim
         self._feat = (1, T, D)                      # per-slot policy feature
         self._sig_shape = (1, T, cfg.d_model)       # TeaCache signal shape
         self.batched = SlotBatchedPolicy(self.policy, slots)
-        self._fresh = self.batched.init_slot_state(
-            self._feat, signal_shape=self._sig_shape)
+        (backbone2_fn, backbone_fn, apply_fn, want_cond_fn,
+         want_uncond_fn) = slot_cfg_denoise_fns(params, cfg, self.policy,
+                                                cfg_policy)
+        # combined per-slot state: main policy branch + uncond CFG branch
+        # (an empty dict when cfg_policy is None — NoCachePolicy is stateless)
+        uncond_pol = self.cfg_policy
+        self._fresh = {
+            "policy": self.batched.init_slot_state(
+                self._feat, signal_shape=self._sig_shape),
+            "cfg": (uncond_pol.init_state(self._feat)
+                    if uncond_pol is not None else {}),
+        }
 
-        backbone_fn, apply_fn, want_fn = slot_denoise_fns(params, cfg,
-                                                          self.policy)
-
-        def make_tick(full: bool):
-            def tick(states, steps, xs, tvals, labels, ab_t, ab_n):
+        def make_tick(mode: str):
+            def tick(states, steps, xs, tvals, labels, nulls, scales, cfg_ws,
+                     ab_t, ab_n):
                 # the backbone runs OUTSIDE vmap: slot axis == batch axis
-                y_full = (backbone_fn(xs, tvals, labels) if full
-                          else jnp.zeros_like(xs))
+                if mode == "full":
+                    y_c, y_u = backbone2_fn(xs, tvals, labels, nulls)
+                elif mode == "cond":
+                    y_c, y_u = backbone_fn(xs, tvals, labels), jnp.zeros_like(xs)
+                else:
+                    y_c = y_u = jnp.zeros_like(xs)
                 eps, states = jax.vmap(apply_fn)(states, steps, xs, tvals,
-                                                 labels, y_full)
+                                                 labels, scales, cfg_ws,
+                                                 y_c, y_u)
                 a_t = ab_t[:, None, None]
                 a_n = ab_n[:, None, None]
                 x0_hat = (xs - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
@@ -92,11 +139,14 @@ class DiffusionServingEngine:
                 return x_next, states
             return jax.jit(tick)
 
-        self._tick_full = make_tick(full=True)
-        self._tick_skip = make_tick(full=False)
-        self._want = jax.jit(lambda states, steps, xs, tvals, labels:
-                             jax.vmap(want_fn)(states, steps, xs, tvals,
-                                               labels))
+        self._ticks = {kind: make_tick(kind)
+                       for kind in ("full", "cond", "skip")}
+        self._want_cond = jax.jit(
+            lambda states, steps, xs, tvals, labels:
+            jax.vmap(want_cond_fn)(states, steps, xs, tvals, labels))
+        self._want_uncond = jax.jit(
+            lambda states, steps, xs, guided:
+            jax.vmap(want_uncond_fn)(states, steps, xs, guided))
 
         def refill(xs, states, slot, noise, fresh):
             return (xs.at[slot].set(noise),
@@ -112,20 +162,31 @@ class DiffusionServingEngine:
         # calls compute_fn: their base want_compute is True everywhere, so
         # they simply never get skip ticks.  State-dependent predicates
         # (TeaCache & co) raise on the None state and take the device path.
-        try:
-            self._static_plan = np.asarray(
-                [bool(self.policy.want_compute(None, s, None))
-                 for s in range(max_steps)], bool)
-        except Exception:
-            self._static_plan = None
+        self._static_plan = self._probe_static_plan(self.policy)
+        # the uncond mirror: all-True when cfg_policy is None (naive mode)
+        self._static_cfg_plan = (
+            self._probe_static_plan(uncond_pol) if uncond_pol is not None
+            else np.ones((max_steps,), bool))
 
         # host-side per-slot timestep tables, padded to max_steps (+1 for the
         # terminal alpha-bar = 1.0 that closes the DDIM update)
         self._ab = np.ones((slots, max_steps + 1), np.float32)
         self._tv = np.zeros((slots, max_steps), np.float32)
         self._labels = np.zeros((slots,), np.int32)
+        self._nulls = np.full((slots,), cfg.dit_num_classes, np.int32)
+        self._scales = np.zeros((slots,), np.float32)
+        self._nsteps = np.ones((slots,), np.int32)
+        self._guided = np.zeros((slots,), bool)
         #: ServingTelemetry of the most recent serve() call
         self.telemetry: Optional[ServingTelemetry] = None
+
+    def _probe_static_plan(self, policy: CachePolicy) -> Optional[np.ndarray]:
+        try:
+            return np.asarray(
+                [bool(policy.want_compute(None, s, None))
+                 for s in range(self.max_steps)], bool)
+        except Exception:
+            return None
 
     # ------------------------------------------------------------------
     def _install_request(self, slot: int, req: DiffusionRequest) -> None:
@@ -136,21 +197,37 @@ class DiffusionServingEngine:
         self._tv[slot, :] = 0.0
         self._tv[slot, :req.num_steps] = ts.astype(np.float32)
         self._labels[slot] = req.class_label
+        self._nulls[slot] = (req.null_label if req.null_label is not None
+                             else self.cfg.dit_num_classes)
+        self._scales[slot] = req.cfg_scale
+        self._nsteps[slot] = req.num_steps
+        self._guided[slot] = req.guided
 
     def _plan(self, states, steps, xs, tvals) -> np.ndarray:
-        """Per-slot compute decision for this tick (before masking)."""
+        """Per-slot cond-branch compute decision (before masking)."""
         if self._static_plan is not None:
             return self._static_plan[steps]
         labels = jnp.asarray(self._labels)
-        return np.asarray(self._want(states, jnp.asarray(steps), xs,
-                                     jnp.asarray(tvals), labels))
+        return np.asarray(self._want_cond(states, jnp.asarray(steps), xs,
+                                          jnp.asarray(tvals), labels))
+
+    def _plan_uncond(self, states, steps, xs) -> np.ndarray:
+        """Per-slot uncond-branch compute decision (before active masking).
+
+        Already masked by the per-slot guided flag — unguided slots never
+        request an uncond compute."""
+        if self._static_cfg_plan is not None:
+            return self._static_cfg_plan[steps] & self._guided
+        return np.asarray(self._want_uncond(states, jnp.asarray(steps), xs,
+                                            jnp.asarray(self._guided)))
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[DiffusionRequest],
               telemetry: Optional[ServingTelemetry] = None,
               max_ticks: Optional[int] = None) -> List[DiffusionResult]:
         """Run every request through the slot pool; returns results in
-        request order."""
+        request order.  With max_ticks, unfinished requests are recorded as
+        preempted in telemetry (never silently dropped)."""
         for r in requests:
             if r.num_steps > self.max_steps:
                 raise ValueError(f"request {r.request_id}: num_steps="
@@ -163,21 +240,24 @@ class DiffusionServingEngine:
         now = time.perf_counter
         recs: Dict[int, RequestRecord] = {
             r.request_id: RequestRecord(r.request_id, r.num_steps,
-                                        r.traffic_class, enqueue_time=now())
+                                        r.traffic_class,
+                                        cfg_scale=r.cfg_scale,
+                                        enqueue_time=now())
             for r in requests}
         sched.submit_all(requests)
 
         T, D = self.cfg.dit_patch_tokens, self.cfg.dit_in_dim
         xs = jnp.zeros((self.slots, T, D), jnp.float32)
-        states = self.batched.init_state(self._feat,
-                                         signal_shape=self._sig_shape)
+        states = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.slots,) + a.shape).copy(),
+            self._fresh)
 
         results: Dict[int, DiffusionResult] = {}
         tick = 0
         while not sched.idle():
             # -- refill free slots from the queue (phase-aligned) -------
             for slot, req in sched.admit(tick):
-                noise = jax.random.normal(jax.random.PRNGKey(req.seed), (T, D))
+                noise = jax.random.normal(request_noise_key(req), (T, D))
                 xs, states = self._refill(xs, states, slot.index, noise,
                                           self._fresh)
                 self._install_request(slot.index, req)
@@ -193,20 +273,35 @@ class DiffusionServingEngine:
             tvals = self._tv[rows, idx]
             ab_t = self._ab[rows, idx]
             ab_n = self._ab[rows, idx + 1]
+            # per-slot trajectory-progress weight for FasterCacheCFG's blend
+            cfg_ws = idx.astype(np.float32) / np.maximum(self._nsteps - 1, 1)
 
-            want = self._plan(states, idx, xs, tvals) & active
-            full = bool(want.any())
-            program = self._tick_full if full else self._tick_skip
+            want_c = self._plan(states, idx, xs, tvals) & active
+            want_u = self._plan_uncond(states, idx, xs) & active
+            if want_u.any():
+                kind = "full"          # some slot refreshes its uncond cache
+            elif want_c.any():
+                kind = "cond"          # uncond rows dropped from the batch
+            else:
+                kind = "skip"
             t0 = now()
-            xs, states = program(states, jnp.asarray(idx), xs,
-                                 jnp.asarray(tvals), jnp.asarray(self._labels),
-                                 jnp.asarray(ab_t), jnp.asarray(ab_n))
+            xs, states = self._ticks[kind](
+                states, jnp.asarray(idx), xs, jnp.asarray(tvals),
+                jnp.asarray(self._labels), jnp.asarray(self._nulls),
+                jnp.asarray(self._scales), jnp.asarray(cfg_ws),
+                jnp.asarray(ab_t), jnp.asarray(ab_n))
             xs.block_until_ready()
-            tele.record_tick(full, now() - t0)
+            tele.record_tick(kind, now() - t0)
+            if kind == "full":
+                tele.uncond_rows_computed += self.slots
+            else:
+                tele.uncond_rows_saved += int((active & self._guided).sum())
 
             for slot in sched.slots:
-                if slot.busy and want[slot.index]:
+                if slot.busy and want_c[slot.index]:
                     recs[slot.request.request_id].computed_steps += 1
+                if slot.busy and want_u[slot.index]:
+                    recs[slot.request.request_id].uncond_computed_steps += 1
 
             # -- advance + harvest finished slots -----------------------
             sched.advance()
@@ -221,6 +316,13 @@ class DiffusionServingEngine:
             tick += 1
             if max_ticks is not None and tick >= max_ticks:
                 break
+
+        # requests cut off by max_ticks (mid-flight or still queued) are
+        # reported as preempted, never silently dropped with half-filled
+        # records poisoning the latency aggregates
+        for r in requests:
+            if r.request_id not in results:
+                tele.preempt_request(recs[r.request_id])
 
         tele.stop()
         self.telemetry = tele

@@ -29,12 +29,23 @@ class DiffusionRequest:
     """One latent-generation request.
 
     num_steps is the request's denoising step budget — requests with
-    different budgets share slots (mixed-budget continuous batching)."""
+    different budgets share slots (mixed-budget continuous batching).
+
+    cfg_scale > 0 makes the request *guided*: the engine runs a second,
+    unconditional backbone branch (label = null_label, defaulting to the
+    model's null-class embedding) and blends eps = e_u + s (e_c - e_u).
+    Guided and unguided requests share one slot pool."""
     request_id: int
     num_steps: int
     seed: int = 0
     class_label: int = 0
     traffic_class: str = "default"
+    cfg_scale: float = 0.0
+    null_label: Optional[int] = None
+
+    @property
+    def guided(self) -> bool:
+        return self.cfg_scale > 0.0
 
 
 @dataclass

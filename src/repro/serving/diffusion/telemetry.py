@@ -3,18 +3,31 @@
 The survey's acceleration claims are single-trajectory (compute_fraction,
 PSNR); a serving system additionally cares about queue wait, end-to-end
 latency, request throughput, and how often the batch-level scheduler managed
-to dispatch the cheap all-reuse program instead of the full backbone.  This
-module collects both views:
+to dispatch a cheap program instead of the full backbone.  This module
+collects both views:
 
-  * RequestRecord — one request's lifecycle timestamps + cache counters
+  * RequestRecord — one request's lifecycle timestamps + cache counters,
+    including CFG accounting (how many unconditional-branch computes the
+    per-slot FasterCacheCFG state saved) and an explicit `preempted` flag
+    for requests cut off by `serve(max_ticks=...)`.
   * ServingTelemetry — fleet aggregation: throughput, latency percentiles,
-    full/skip tick mix, cache hit + forecast rates, cache_state_bytes/slot
+    the full / cond-only / skip tick mix, uncond backbone rows dispatched
+    vs saved, cache hit + forecast rates, cache_state_bytes/slot.
+
+Tick kinds (engine docstring):
+  "full" — backbone over 2S rows (cond + uncond branches)
+  "cond" — backbone over S cond rows only (every active slot reuses its
+           cached uncond branch; also the only backbone tick kind for
+           unguided pools)
+  "skip" — no backbone at all (forecast/reuse arithmetic only)
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+TICK_KINDS = ("full", "cond", "skip")
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -31,6 +44,7 @@ class RequestRecord:
     request_id: int
     num_steps: int
     traffic_class: str = "default"
+    cfg_scale: float = 0.0
     enqueue_time: float = 0.0
     admit_time: float = 0.0
     finish_time: float = 0.0
@@ -38,6 +52,15 @@ class RequestRecord:
     finish_tick: int = -1
     slot: int = -1
     computed_steps: int = 0          # ticks where this slot ran a full compute
+    uncond_computed_steps: int = 0   # ticks where the uncond branch refreshed
+    #: True when serve(max_ticks=...) ended before this request completed
+    #: (either mid-flight or still queued); its latency fields are partial
+    #: and it is excluded from latency/throughput aggregation.
+    preempted: bool = False
+
+    @property
+    def guided(self) -> bool:
+        return self.cfg_scale > 0.0
 
     @property
     def latency(self) -> float:
@@ -59,16 +82,32 @@ class RequestRecord:
         """Steps served from cache (verbatim reuse or forecast)."""
         return 1.0 - self.compute_fraction
 
+    @property
+    def uncond_saved_steps(self) -> int:
+        """Unconditional-branch computes avoided by CFG-branch reuse
+        (FasterCacheCFG); 0 for unguided requests."""
+        if not self.guided:
+            return 0
+        return max(self.num_steps - self.uncond_computed_steps, 0)
+
 
 @dataclass
 class ServingTelemetry:
     """Aggregates RequestRecords plus per-tick engine counters."""
     cache_state_bytes_per_slot: int = 0
     records: List[RequestRecord] = field(default_factory=list)
-    ticks_full: int = 0
+    preempted_records: List[RequestRecord] = field(default_factory=list)
+    ticks_full: int = 0          # both-branch backbone (2S rows)
+    ticks_cond: int = 0          # cond-only backbone (S rows)
     ticks_skip: int = 0
     tick_seconds_full: float = 0.0
+    tick_seconds_cond: float = 0.0
     tick_seconds_skip: float = 0.0
+    #: uncond backbone rows actually dispatched (S per "full" tick)
+    uncond_rows_computed: int = 0
+    #: uncond rows a naive two-branch server would have dispatched but this
+    #: engine did not (active guided slots on "cond"/"skip" ticks)
+    uncond_rows_saved: int = 0
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
@@ -79,10 +118,14 @@ class ServingTelemetry:
     def stop(self) -> None:
         self._t1 = time.perf_counter()
 
-    def record_tick(self, full: bool, seconds: float) -> None:
-        if full:
+    def record_tick(self, kind: str, seconds: float) -> None:
+        assert kind in TICK_KINDS, kind
+        if kind == "full":
             self.ticks_full += 1
             self.tick_seconds_full += seconds
+        elif kind == "cond":
+            self.ticks_cond += 1
+            self.tick_seconds_cond += seconds
         else:
             self.ticks_skip += 1
             self.tick_seconds_skip += seconds
@@ -90,19 +133,41 @@ class ServingTelemetry:
     def finish_request(self, rec: RequestRecord) -> None:
         self.records.append(rec)
 
+    def preempt_request(self, rec: RequestRecord) -> None:
+        """Record a request cut off by max_ticks instead of dropping it."""
+        rec.preempted = True
+        self.preempted_records.append(rec)
+
     # ------------------------------------------------------------------
     @property
     def elapsed(self) -> float:
         t1 = self._t1 if self._t1 is not None else time.perf_counter()
         return (t1 - self._t0) if self._t0 is not None else 0.0
 
+    @property
+    def ticks_backbone(self) -> int:
+        return self.ticks_full + self.ticks_cond
+
+    def step_time_ms(self):
+        """(backbone_tick_ms, skip_tick_ms) — the pair autotune's latency
+        constraint consumes.  Backbone time averages over full AND cond-only
+        ticks (unguided pools only ever record the latter)."""
+        nb = self.ticks_backbone
+        t_back = (1e3 * (self.tick_seconds_full + self.tick_seconds_cond) / nb
+                  if nb else 0.0)
+        t_skip = (1e3 * self.tick_seconds_skip / self.ticks_skip
+                  if self.ticks_skip else 0.0)
+        return t_back, t_skip
+
     def summary(self) -> Dict[str, float]:
         lat = [r.latency for r in self.records]
         cf = [r.compute_fraction for r in self.records]
-        ticks = self.ticks_full + self.ticks_skip
+        ticks = self.ticks_full + self.ticks_cond + self.ticks_skip
         n = len(self.records)
+        guided = [r for r in self.records if r.guided]
         return {
             "requests": n,
+            "requests_preempted": len(self.preempted_records),
             "elapsed_s": self.elapsed,
             "throughput_rps": n / self.elapsed if self.elapsed > 0 else 0.0,
             "latency_p50_s": _pct(lat, 0.50),
@@ -112,11 +177,22 @@ class ServingTelemetry:
             "compute_fraction_mean": sum(cf) / n if n else 1.0,
             "cache_hit_rate_mean": 1.0 - (sum(cf) / n if n else 1.0),
             "ticks": ticks,
-            "full_tick_fraction": self.ticks_full / ticks if ticks else 0.0,
+            # fraction of ticks that ran the backbone at all (full or cond)
+            "full_tick_fraction": self.ticks_backbone / ticks if ticks else 0.0,
+            # fraction that needed the 2S-row both-branch program
+            "cfg_full_tick_fraction": self.ticks_full / ticks if ticks else 0.0,
+            "tick_ms_backbone_mean": self.step_time_ms()[0],
             "tick_ms_full_mean": (1e3 * self.tick_seconds_full /
                                   self.ticks_full if self.ticks_full else 0.0),
+            "tick_ms_cond_mean": (1e3 * self.tick_seconds_cond /
+                                  self.ticks_cond if self.ticks_cond else 0.0),
             "tick_ms_skip_mean": (1e3 * self.tick_seconds_skip /
                                   self.ticks_skip if self.ticks_skip else 0.0),
+            "guided_requests": len(guided),
+            "uncond_rows_computed": self.uncond_rows_computed,
+            "uncond_rows_saved": self.uncond_rows_saved,
+            "uncond_saved_steps_total":
+                sum(r.uncond_saved_steps for r in guided),
             "cache_state_bytes_per_slot": self.cache_state_bytes_per_slot,
         }
 

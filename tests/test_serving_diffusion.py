@@ -1,19 +1,22 @@
 """Diffusion serving subsystem: scheduler lifecycle, batched cache states,
-reset-on-refill isolation, serving-vs-reference fidelity, autotuning."""
+reset-on-refill isolation, serving-vs-reference fidelity (unguided and
+CFG-guided), preemption accounting, autotuning."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import POLICY_REGISTRY, SlotBatchedPolicy, make_policy
+from repro.core import (POLICY_REGISTRY, BlockCachePolicy, FasterCacheCFG,
+                        SlotBatchedPolicy, make_policy)
 from repro.diffusion import (CachedDenoiser, ddim_step, linear_schedule,
                              sample)
+from repro.diffusion.pipeline import cfg_denoise_fn
 from repro.models import init_params, perturb_zero_init
 from repro.serving import RequestQueue
 from repro.serving.diffusion import (SLA, DiffusionRequest,
                                      DiffusionServingEngine, SlotScheduler,
-                                     autotune)
+                                     autotune, request_noise_key)
 
 NUM_STEPS = 12
 
@@ -28,13 +31,32 @@ def setup():
     return cfg, params
 
 
-def _reference(cfg, params, policy_name, num_steps, seed, **kw):
+def _request_xT(cfg, req):
+    """The engine's initial noise for `req` (seed + request_id folded)."""
+    return jax.random.normal(request_noise_key(req),
+                             (1, cfg.dit_patch_tokens, cfg.dit_in_dim))
+
+
+def _reference(cfg, params, policy_name, req, **kw):
+    """Single-stream CachedDenoiser trajectory on the engine's noise."""
     sched = linear_schedule(1000)
-    ts = sched.spaced(num_steps)
-    xT = jax.random.normal(jax.random.PRNGKey(seed),
-                           (1, cfg.dit_patch_tokens, cfg.dit_in_dim))
-    pol = make_policy(policy_name, num_steps=num_steps, **kw)
-    den = CachedDenoiser(params, cfg, pol)
+    ts = sched.spaced(req.num_steps)
+    xT = _request_xT(cfg, req)
+    pol = make_policy(policy_name, num_steps=req.num_steps, **kw)
+    den = CachedDenoiser(params, cfg, pol, class_label=req.class_label)
+    x0, _ = sample(den, xT, ts, sched, step_fn=ddim_step,
+                   denoiser_state=den.init_state(1))
+    return np.asarray(x0[0])
+
+
+def _cfg_reference(cfg, params, req, cfg_policy=None, policy=None):
+    """Single-stream guided trajectory (CachedDenoiser CFG path) on the
+    engine's noise; cfg_policy=None is the exact two-branch baseline."""
+    sched = linear_schedule(1000)
+    ts = sched.spaced(req.num_steps)
+    xT = _request_xT(cfg, req)
+    den = CachedDenoiser(params, cfg, policy, cfg_scale=req.cfg_scale,
+                         cfg_policy=cfg_policy, class_label=req.class_label)
     x0, _ = sample(den, xT, ts, sched, step_fn=ddim_step,
                    denoiser_state=den.init_state(1))
     return np.asarray(x0[0])
@@ -194,8 +216,9 @@ def test_serving_matches_cached_denoiser(setup, name):
     cfg, params = setup
     pol = make_policy(name, num_steps=NUM_STEPS)
     eng = DiffusionServingEngine(params, cfg, pol, slots=2, max_steps=16)
-    res = eng.serve([DiffusionRequest(0, NUM_STEPS, seed=7)])
-    ref = _reference(cfg, params, name, NUM_STEPS, seed=7)
+    req = DiffusionRequest(0, NUM_STEPS, seed=7)
+    res = eng.serve([req])
+    ref = _reference(cfg, params, name, req)
     np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
 
 
@@ -215,10 +238,18 @@ def test_e2e_mixed_budget_serving_smoke(setup):
 
     s = eng.telemetry.summary()
     assert s["requests"] == 16
+    assert s["requests_preempted"] == 0
     assert s["throughput_rps"] > 0
     assert 0.0 < s["compute_fraction_mean"] < 1.0
-    assert eng.telemetry.ticks_skip > eng.telemetry.ticks_full  # interval=4
+    # interval=4: most ticks skip; unguided pools never need the 2S-row
+    # both-branch program (that is what tick_cond_only exists for)
+    assert eng.telemetry.ticks_skip > eng.telemetry.ticks_cond > 0
+    assert eng.telemetry.ticks_full == 0
     assert s["cache_state_bytes_per_slot"] > 0
+    # the autotune latency pair must see backbone time even though unguided
+    # pools record it all under cond-only ticks
+    t_back, t_skip = eng.telemetry.step_time_ms()
+    assert t_back > 0 and t_back == s["tick_ms_backbone_mean"]
     for r in res:
         assert r.record.latency > 0
         assert r.record.queue_wait >= 0
@@ -232,6 +263,182 @@ def test_serving_rejects_over_budget_request(setup):
     eng = DiffusionServingEngine(params, cfg, "none", slots=1, max_steps=8)
     with pytest.raises(ValueError):
         eng.serve([DiffusionRequest(0, num_steps=9)])
+
+
+def test_default_seed_requests_draw_distinct_noise(setup):
+    """Regression: PRNGKey(req.seed) alone gave every default-seeded request
+    identical initial noise (identical samples); the request id must be
+    folded into the key."""
+    cfg, params = setup
+    ka = request_noise_key(DiffusionRequest(0, 8))
+    kb = request_noise_key(DiffusionRequest(1, 8))
+    assert not np.array_equal(np.asarray(ka), np.asarray(kb))
+
+    eng = DiffusionServingEngine(params, cfg, "none", slots=2, max_steps=8)
+    res = eng.serve([DiffusionRequest(0, num_steps=8),
+                     DiffusionRequest(1, num_steps=8)])
+    assert np.abs(res[0].x0 - res[1].x0).max() > 1e-3
+
+
+def test_max_ticks_reports_preempted_requests(setup):
+    """Regression: serve(max_ticks=...) silently dropped unfinished requests;
+    they must surface as preempted records, excluded from latency stats."""
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "none", slots=1, max_steps=8)
+    # slot pool of 1: request 0 is mid-flight at tick 4, request 1 queued
+    res = eng.serve([DiffusionRequest(0, num_steps=8),
+                     DiffusionRequest(1, num_steps=8)], max_ticks=4)
+    assert res == []
+    tele = eng.telemetry
+    assert len(tele.records) == 0
+    assert sorted(r.request_id for r in tele.preempted_records) == [0, 1]
+    assert all(r.preempted for r in tele.preempted_records)
+    s = tele.summary()
+    assert s["requests"] == 0 and s["requests_preempted"] == 2
+    assert s["latency_p50_s"] == 0.0      # preempted records don't poison it
+
+    # a full run of the same engine reports zero preemptions
+    res = eng.serve([DiffusionRequest(2, num_steps=8)])
+    assert len(res) == 1
+    assert eng.telemetry.summary()["requests_preempted"] == 0
+
+
+def test_engine_static_plan_survives_short_blockcache_profile(setup):
+    """Regression: BlockCachePolicy with a profile shorter than max_steps
+    raised IndexError in the static-plan builder (silent device fallback
+    whose gather clamped to the last entry).  Overflow steps now recompute,
+    and served output matches the single-stream path on the same policy."""
+    cfg, params = setup
+    profile = [0.0, 0.01, 0.5, 0.01, 0.5, 0.01]          # 6-step calibration
+    pol = BlockCachePolicy(profile, delta=0.1)
+    eng = DiffusionServingEngine(params, cfg, pol, slots=1, max_steps=16)
+    assert eng._static_plan is not None                   # no IndexError
+    assert eng._static_plan[len(profile):].all()          # overflow: compute
+
+    req = DiffusionRequest(0, num_steps=NUM_STEPS, seed=5)   # 12 > 6
+    res = eng.serve([req])
+    sched = linear_schedule(1000)
+    ts = sched.spaced(NUM_STEPS)
+    den = CachedDenoiser(params, cfg, pol)
+    ref, _ = sample(den, _request_xT(cfg, req), ts, sched, step_fn=ddim_step,
+                    denoiser_state=den.init_state(1))
+    np.testing.assert_allclose(res[0].x0, np.asarray(ref[0]),
+                               atol=5e-3, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# CFG serving (classifier-free guidance, per-slot FasterCacheCFG)
+# ----------------------------------------------------------------------
+
+def test_serving_cfg_matches_exact_baseline(setup):
+    """A guided request with no CFG cache (naive two-branch) must match the
+    exact single-stream cfg_denoise_fn trajectory."""
+    cfg, params = setup
+    req = DiffusionRequest(0, NUM_STEPS, seed=3, class_label=4, cfg_scale=2.5)
+    eng = DiffusionServingEngine(params, cfg, "none", slots=2, max_steps=16)
+    res = eng.serve([req])
+    sched = linear_schedule(1000)
+    ts = sched.spaced(NUM_STEPS)
+    ref, _ = sample(cfg_denoise_fn(params, cfg, 2.5, 4), _request_xT(cfg, req),
+                    ts, sched, step_fn=ddim_step)
+    np.testing.assert_allclose(res[0].x0, np.asarray(ref[0]),
+                               atol=5e-3, rtol=1e-3)
+    # naive mode: every backbone tick carries both branches
+    assert eng.telemetry.ticks_full == NUM_STEPS
+    assert eng.telemetry.ticks_cond == 0
+    assert res[0].record.uncond_computed_steps == NUM_STEPS
+    assert res[0].record.uncond_saved_steps == 0
+
+
+def test_serving_cfg_matches_fastercache_denoiser(setup):
+    """Engine-served FasterCacheCFG must match the single-stream
+    CachedDenoiser(cfg_policy=FasterCacheCFG) path on the same grid."""
+    cfg, params = setup
+    req = DiffusionRequest(0, NUM_STEPS, seed=3, class_label=4, cfg_scale=2.5)
+    eng = DiffusionServingEngine(params, cfg, "none", slots=2, max_steps=16,
+                                 cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+    res = eng.serve([req])
+    ref = _cfg_reference(cfg, params, req,
+                         cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+    np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
+    # interval=3 over 12 steps: 4 both-branch ticks, 8 cond-only ticks
+    tele = eng.telemetry
+    assert tele.ticks_full == 4 and tele.ticks_cond == 8
+    assert res[0].record.uncond_computed_steps == 4
+    assert res[0].record.uncond_saved_steps == 8
+    assert tele.summary()["uncond_rows_saved"] > 0
+
+
+def test_serving_cfg_mixed_budgets_use_per_slot_blend_weight(setup):
+    """Two guided requests with different step budgets share the pool; each
+    must match its own single-stream FasterCacheCFG reference (the blend
+    weight w = step/(num_steps-1) is per-slot, not engine-global)."""
+    cfg, params = setup
+    reqs = [DiffusionRequest(0, 12, seed=3, class_label=1, cfg_scale=2.0),
+            DiffusionRequest(1, 8, seed=4, class_label=2, cfg_scale=3.0)]
+    eng = DiffusionServingEngine(params, cfg, "none", slots=2, max_steps=16,
+                                 cfg_policy=FasterCacheCFG(4, 16))
+    res = eng.serve(reqs)
+    for r, req in zip(res, reqs):
+        ref = _cfg_reference(cfg, params, req,
+                             cfg_policy=FasterCacheCFG(4, req.num_steps))
+        np.testing.assert_allclose(r.x0, ref, atol=5e-3, rtol=1e-3)
+
+
+def test_serving_cfg_refill_resets_cfg_cache(setup):
+    """Mid-flight refill isolation of the per-slot CFG cache: guided request
+    B served after A through the same slot must equal B served alone."""
+    cfg, params = setup
+    a = DiffusionRequest(0, NUM_STEPS, seed=1, class_label=1, cfg_scale=3.0)
+    b = DiffusionRequest(1, NUM_STEPS, seed=2, class_label=2, cfg_scale=2.0)
+    eng = DiffusionServingEngine(params, cfg, "fora", slots=1, max_steps=16,
+                                 cfg_policy=FasterCacheCFG(4, NUM_STEPS))
+    both = eng.serve([a, b])
+    eng2 = DiffusionServingEngine(params, cfg, "fora", slots=1, max_steps=16,
+                                  cfg_policy=FasterCacheCFG(4, NUM_STEPS))
+    alone = eng2.serve([b])
+    np.testing.assert_array_equal(both[1].x0, alone[0].x0)
+
+
+def test_serving_mixed_guided_unguided_pool(setup):
+    """Guided and unguided requests share slots; each matches its own
+    single-stream reference and CFG accounting stays per-request."""
+    cfg, params = setup
+    guided = DiffusionRequest(0, NUM_STEPS, seed=3, class_label=4,
+                              cfg_scale=2.5)
+    plain = DiffusionRequest(1, NUM_STEPS, seed=5, class_label=2)
+    eng = DiffusionServingEngine(params, cfg, "fora", slots=2, max_steps=16,
+                                 cfg_policy=FasterCacheCFG(4, NUM_STEPS))
+    res = eng.serve([guided, plain])
+
+    ref_g = _cfg_reference(cfg, params, guided, policy=make_policy("fora"),
+                           cfg_policy=FasterCacheCFG(4, NUM_STEPS))
+    ref_p = _reference(cfg, params, "fora", plain)
+    np.testing.assert_allclose(res[0].x0, ref_g, atol=5e-3, rtol=1e-3)
+    np.testing.assert_allclose(res[1].x0, ref_p, atol=5e-3, rtol=1e-3)
+
+    assert res[0].record.guided and not res[1].record.guided
+    assert 0 < res[0].record.uncond_computed_steps < NUM_STEPS
+    assert res[1].record.uncond_computed_steps == 0
+    s = eng.telemetry.summary()
+    assert s["guided_requests"] == 1
+    assert s["uncond_saved_steps_total"] == res[0].record.uncond_saved_steps
+
+
+def test_serving_cfg_saves_uncond_rows_vs_naive(setup):
+    """With FasterCacheCFG the engine dispatches measurably fewer uncond
+    backbone rows than naive two-branch serving of the same queue."""
+    cfg, params = setup
+    reqs = [DiffusionRequest(i, 8, seed=i, class_label=i % 5, cfg_scale=3.0)
+            for i in range(4)]
+    rows = {}
+    for mode, cfg_pol in (("naive", None),
+                          ("fastercache", FasterCacheCFG(4, 8))):
+        eng = DiffusionServingEngine(params, cfg, "fora", slots=2,
+                                     max_steps=8, cfg_policy=cfg_pol)
+        eng.serve(reqs)
+        rows[mode] = eng.telemetry.summary()["uncond_rows_computed"]
+    assert rows["fastercache"] < rows["naive"]
 
 
 # ----------------------------------------------------------------------
@@ -252,6 +459,32 @@ def test_autotune_respects_sla(setup):
     assert loose.policy_name in ("fora", "taylorseer")
     assert loose.align == 4
     assert loose.make() is not None
+
+
+def test_autotune_cfg_aware_sweep(setup):
+    """Guided tuning crosses candidates with uncond-reuse intervals; under a
+    loose SLA the CFG-cached variant wins on row-weighted compute fraction,
+    and the tuned choice reconstructs an engine-ready cfg_policy."""
+    cfg, params = setup
+    cands = [("none", {}), ("fora", {"interval": 4})]
+    loose = autotune(params, cfg, SLA("loose", min_psnr=-100.0),
+                     candidates=cands, num_steps=NUM_STEPS,
+                     cfg_scale=2.0, cfg_intervals=(None, 4))
+    assert loose.cfg_interval == 4
+    assert loose.uncond_compute_fraction < 1.0
+    assert loose.compute_fraction < 1.0
+    pol = loose.make_cfg_policy(NUM_STEPS)
+    assert isinstance(pol, FasterCacheCFG) and pol.interval == 4
+    assert loose.align == 4
+
+    strict = autotune(params, cfg, SLA("strict", min_psnr=200.0),
+                      candidates=[("none", {})], num_steps=NUM_STEPS,
+                      cfg_scale=2.0, cfg_intervals=(None, 4))
+    # infeasible SLA falls back to the highest-PSNR candidate: the naive
+    # two-branch exact server (uncond recomputed every step)
+    assert strict.policy_name == "none" and strict.cfg_interval is None
+    assert not strict.feasible
+    assert strict.make_cfg_policy(NUM_STEPS) is None
 
 
 def test_policy_registry_covers_taxonomy():
