@@ -15,10 +15,18 @@ ticks, so guided throughput lands between 1x and 2x of naive two-branch
 serving.  The benchmark serves the same guided queue both ways and checks
 that the cached engine dispatches measurably fewer uncond backbone rows.
 
+Row-compaction mode (always run, last): a mixed TeaCache + CFG pool is the
+worst case for whole-pool ticks — a signal policy firing on ONE slot used to
+drag every slot through the backbone, and one uncond refresh doubled the
+batch.  The row-compacted engine gathers only the rows whose per-slot
+policies want a compute; the benchmark serves the same mixed queue through
+the compacted and the dense (PR-3) engine and checks equal output with
+strictly fewer backbone rows computed, reporting rows alongside req/s.
+
 `--smoke` (used by CI) shrinks the model / queue / tick counts so the whole
-benchmark — including the CFG mode — runs in seconds; timing-dependent
-assertions are skipped in smoke mode, structural ones (rows saved, request
-completion) are kept.
+benchmark — including the CFG and compaction modes — runs in seconds;
+timing-dependent assertions are skipped in smoke mode, structural ones
+(rows saved, request completion, output equality) are kept.
 """
 from __future__ import annotations
 
@@ -161,6 +169,74 @@ def run_cfg(cfg, params, *, num_requests, steps, slots, smoke):
             "summaries": out}, failures
 
 
+def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
+    """Row-compacted vs dense whole-pool ticks on a mixed TeaCache + CFG
+    pool: equal per-request output, strictly fewer backbone rows, req/s no
+    worse (timing claim skipped in smoke mode)."""
+    from repro.core import FasterCacheCFG
+    from repro.serving.diffusion import (DiffusionRequest,
+                                         DiffusionServingEngine)
+
+    print(f"\n-- row compaction (teacache + FasterCacheCFG, mixed "
+          f"guided/unguided pool, {slots} slots) --")
+    print(f"{'engine':12s} {'req/s':>8s} {'p50 lat':>9s} {'rows':>7s} "
+          f"{'pad':>5s} {'saved':>7s}")
+    reqs = [DiffusionRequest(i, num_steps=steps, seed=i, class_label=i % 10,
+                             cfg_scale=CFG_SCALE if i % 2 == 0 else 0.0)
+            for i in range(num_requests)]
+    out, results = {}, {}
+    for mode, compact in (("compacted", True), ("dense", False)):
+        eng = DiffusionServingEngine(params, cfg, "teacache", slots=slots,
+                                     max_steps=steps,
+                                     cfg_policy=FasterCacheCFG(CFG_INTERVAL,
+                                                               steps),
+                                     row_compaction=compact)
+        # compile every bucket program up front (state-dependent policies
+        # surface new bucket sizes mid-run), then warm the host paths
+        eng.warmup()
+        eng.serve([DiffusionRequest(10_000 + i, num_steps=steps, seed=i,
+                                    cfg_scale=CFG_SCALE)
+                   for i in range(slots)])
+        res = eng.serve(reqs)
+        assert len(res) == num_requests
+        assert all(np.isfinite(r.x0).all() for r in res)
+        s = eng.telemetry.summary()
+        out[mode], results[mode] = s, res
+        print(f"{mode:12s} {s['throughput_rps']:8.2f} "
+              f"{s['latency_p50_s']:8.3f}s {s['backbone_rows_computed']:7d} "
+              f"{s['backbone_rows_padding']:5d} "
+              f"{s['backbone_rows_saved']:7d}")
+
+    failures = []
+    # equal output: compaction only changes which rows are batched, never
+    # the per-slot policy step
+    for a, b in zip(results["compacted"], results["dense"]):
+        if not np.allclose(a.x0, b.x0, atol=1e-3, rtol=1e-3):
+            failures.append(f"request {a.request_id}: compacted x0 diverged "
+                            f"from dense (max |dx|="
+                            f"{np.abs(a.x0 - b.x0).max():.2e})")
+            break
+    # strictly fewer backbone rows, even counting the pow-2 padding
+    rows_compact = (out["compacted"]["backbone_rows_computed"] +
+                    out["compacted"]["backbone_rows_padding"])
+    rows_dense = out["dense"]["backbone_rows_computed"]
+    print(f"backbone rows (incl padding): {rows_compact} compacted vs "
+          f"{rows_dense} dense "
+          f"({rows_dense / max(rows_compact, 1):.2f}x fewer)")
+    if not rows_compact < rows_dense:
+        failures.append(f"row compaction did not reduce backbone rows: "
+                        f"{rows_compact} vs {rows_dense}")
+    ratio = (out["compacted"]["throughput_rps"] /
+             out["dense"]["throughput_rps"])
+    print(f"compacted-vs-dense throughput: {ratio:.2f}x")
+    if not smoke and ratio < 1.0:
+        failures.append(f"row compaction regressed throughput: {ratio:.2f}x")
+    return {"throughput_ratio": ratio,
+            "backbone_rows": {"compacted": rows_compact,
+                              "dense": rows_dense},
+            "summaries": out}, failures
+
+
 def run(smoke: bool = False):
     if smoke:
         cfg, params = small_dit(layers=2, d_model=64, tokens=16, in_dim=8)
@@ -169,6 +245,8 @@ def run(smoke: bool = False):
                                                 slot_counts=(2,), smoke=True)
         cfg_res, cfg_fails = run_cfg(cfg, params, num_requests=4, steps=8,
                                      slots=2, smoke=True)
+        comp_res, comp_fails = run_compaction(cfg, params, num_requests=4,
+                                              steps=8, slots=2, smoke=True)
     else:
         cfg, params = small_dit()  # the shared ~5M-param cache-benchmark DiT
         rows, comparisons, fails = run_unguided(
@@ -176,11 +254,14 @@ def run(smoke: bool = False):
             slot_counts=SLOT_COUNTS, smoke=False)
         cfg_res, cfg_fails = run_cfg(cfg, params, num_requests=12, steps=16,
                                      slots=4, smoke=False)
+        comp_res, comp_fails = run_compaction(cfg, params, num_requests=12,
+                                              steps=16, slots=4, smoke=False)
     # save the payload before raising so a failed claim is still diagnosable
     save_result("serving", {"rows": rows, "throughput_vs_none": comparisons,
-                            "cfg": cfg_res, "smoke": smoke})
-    if fails or cfg_fails:
-        raise AssertionError("; ".join(fails + cfg_fails))
+                            "cfg": cfg_res, "compaction": comp_res,
+                            "smoke": smoke})
+    if fails or cfg_fails or comp_fails:
+        raise AssertionError("; ".join(fails + cfg_fails + comp_fails))
 
 
 if __name__ == "__main__":

@@ -10,9 +10,13 @@ the cache policy per traffic class before serving.
 
 Part 2 serves *guided* traffic: classifier-free guidance doubles backbone
 cost, so each slot additionally carries a FasterCacheCFG state that reuses
-the unconditional branch — on reuse ticks the engine drops the uncond rows
-from the backbone batch entirely (the cond-only tick program).  Guided and
-unguided requests share one slot pool.
+the unconditional branch.  Every tick is row-compacted: the engine gathers
+exactly the cond and uncond rows whose per-slot policies want a compute into
+one power-of-two bucket, runs the backbone over those rows only, and
+scatters the outputs back — a slot refreshing its uncond cache costs one
+extra row, not a doubled batch, and the telemetry reports the backbone rows
+actually computed vs what dense whole-pool ticks would have dispatched.
+Guided and unguided requests share one slot pool.
 """
 import jax
 import numpy as np
@@ -101,9 +105,13 @@ assert all(np.isfinite(r.x0).all() for r in results)
 print(f"\n== mixed guided/unguided: {len(guided_requests)} requests "
       f"({s['guided_requests']} guided @ cfg_scale=4.0) ==")
 print(f"  throughput      : {s['throughput_rps']:.2f} req/s")
-print(f"  tick mix        : {eng.telemetry.ticks_full} both-branch / "
+print(f"  tick mix        : {eng.telemetry.ticks_full} w/ uncond rows / "
       f"{eng.telemetry.ticks_cond} cond-only / "
       f"{eng.telemetry.ticks_skip} skip")
+print(f"  backbone rows   : {s['backbone_rows_computed']} computed "
+      f"(+{s['backbone_rows_padding']} bucket padding), "
+      f"{s['backbone_rows_saved']} saved vs dense whole-pool ticks "
+      f"({s['backbone_rows_per_tick_mean']:.1f} rows/backbone tick)")
 print(f"  uncond rows     : {s['uncond_rows_computed']} dispatched, "
       f"{s['uncond_rows_saved']} saved by CFG reuse "
       f"({s['uncond_saved_steps_total']} uncond computes saved "

@@ -266,6 +266,58 @@ def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
     return backbone2_fn, backbone_fn, apply_fn, want_cond_fn, want_uncond_fn
 
 
+def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
+                             cfg_policy: Optional[CachePolicy] = None):
+    """Row-compacted slot-parallel entry point for the serving engine.
+
+    `slot_cfg_denoise_fns` runs the backbone over *whole-pool* batches: S cond
+    rows, optionally doubled to 2S when any slot wants an uncond refresh.
+    That makes tick cost all-or-nothing — one TeaCache slot firing drags every
+    slot through the backbone.  This variant adds the gather/scatter pair that
+    lets the engine dispatch the backbone over EXACTLY the rows whose per-slot
+    policies want a compute this tick, padded to a power-of-two bucket so the
+    jit program count stays bounded (one program per bucket size):
+
+      compact_backbone_fn(xs, tvals, labels, nulls,
+                          row_slot, row_uncond, row_dest) -> (y_c, y_u)
+          `row_slot` (B,) gathers each compacted row's latent/timestep from
+          its source slot; `row_uncond` selects the null label for uncond
+          rows; the backbone runs over the compacted (B, T, D) batch; the
+          scatter writes each row into a (2S+1)-row buffer at `row_dest`
+          (cond row i -> i, uncond row i -> S + i, padding -> the 2S dump
+          row) and splits it back into the S-row `y_c` / `y_u` layout the
+          vmapped apply_fn expects.  Rows that were not gathered come back
+          as zeros — safe under the standing invariant that a dummy row may
+          only reach a branch the per-slot lax.cond (vmapped to a select)
+          discards, i.e. the gather set must cover every row whose policy
+          `want_compute` is True.
+      apply_fn / want_cond_fn / want_uncond_fn
+          unchanged from `slot_cfg_denoise_fns` — compaction only changes
+          how y_c / y_u are produced, never the per-slot policy step.
+
+    All index operands are traced values, so one jit program per bucket size
+    B serves every gather pattern of that size.  B is static per program:
+    the engine re-pads each tick's row set to the next power of two.
+    """
+    (backbone2_fn, backbone_fn, apply_fn, want_cond_fn,
+     want_uncond_fn) = slot_cfg_denoise_fns(params, cfg, policy, cfg_policy)
+
+    def compact_backbone_fn(xs, tvals, labels, nulls,
+                            row_slot, row_uncond, row_dest):
+        S, T, D = xs.shape
+        xb = xs[row_slot]
+        tb = tvals[row_slot].astype(jnp.float32)
+        yb = jnp.where(row_uncond, nulls[row_slot],
+                       labels[row_slot]).astype(jnp.int32)
+        eps = dit.forward(params, xb, tb, yb, cfg)
+        # scatter: padding rows all land in the 2S dump row and are dropped
+        buf = jnp.zeros((2 * S + 1, T, D), eps.dtype).at[row_dest].set(eps)
+        return buf[:S], buf[S:2 * S]
+
+    return (compact_backbone_fn, backbone2_fn, backbone_fn, apply_fn,
+            want_cond_fn, want_uncond_fn)
+
+
 def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0):
     """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u)."""
     def fn(state, step, x, t_vec):

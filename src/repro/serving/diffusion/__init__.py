@@ -6,29 +6,36 @@ generation requests, each at its own denoising step with its own step
 budget, advance together through two shared jit'd programs while each slot
 carries its own cache state (repro.core.SlotBatchedPolicy):
 
-  engine     — DiffusionServingEngine: vmapped denoise tick (full /
-               cond-only / skip program triple), classifier-free guidance
-               with per-slot FasterCacheCFG uncond-branch reuse, mid-flight
-               slot refill, reset-on-refill
+  engine     — DiffusionServingEngine: row-compacted denoise ticks (gather
+               exactly the cond/uncond rows whose per-slot policies want a
+               compute into one power-of-two bucket, scatter back; one jit
+               program per bucket size), classifier-free guidance with
+               per-slot FasterCacheCFG uncond-branch reuse, mid-flight slot
+               refill, reset-on-refill; `row_compaction=False` restores the
+               dense whole-pool full/cond/skip program triple as the
+               equivalence baseline
   scheduler  — SlotScheduler: admission queue, slot lifecycle, per-request
                step budgets (+ cfg_scale / null_label), phase-aligned
                admission
   autotune   — SLA-driven sweep of POLICY_REGISTRY (optionally × CFG reuse
                intervals): pick policy + hyperparams per traffic class
-               against latency/quality budgets
+               against latency/quality budgets, latency priced in actual
+               backbone rows (row_time_ms)
   telemetry  — per-request latency / compute_fraction / cache hit rates +
-               uncond computes saved, fleet throughput, full/cond/skip tick
-               mix, preempted-request accounting, cache bytes per slot
+               uncond computes saved, fleet throughput, backbone rows
+               computed / padded / saved, full/cond/skip tick mix,
+               preempted-request accounting, cache bytes per slot
 """
 from .autotune import SLA, TunedPolicy, autotune, autotune_traffic_classes
-from .engine import (DiffusionResult, DiffusionServingEngine,
+from .engine import (DiffusionResult, DiffusionServingEngine, compact_rows,
                      request_noise_key)
 from .scheduler import DiffusionRequest, Slot, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
 
 __all__ = [
     "SLA", "TunedPolicy", "autotune", "autotune_traffic_classes",
-    "DiffusionResult", "DiffusionServingEngine", "request_noise_key",
+    "DiffusionResult", "DiffusionServingEngine", "compact_rows",
+    "request_noise_key",
     "DiffusionRequest", "Slot", "SlotScheduler",
     "RequestRecord", "ServingTelemetry",
 ]

@@ -21,6 +21,16 @@ over `cfg_intervals` — unconditional-branch reuse intervals (None = naive
 two-branch; N = FasterCacheCFG(interval=N)).  The minimized cost becomes the
 *row-weighted* compute fraction (cond computes + uncond computes) / (2 T),
 i.e. the fraction of backbone rows a guided request actually dispatches.
+
+Latency is priced in actual backbone rows: the row-compacted engine
+dispatches exactly the rows the pool's schedules want, so the per-request
+estimate is  T * (occupancy * rows_per_step * ms_per_row + tick_overhead_ms)
+with rows_per_step = cond fraction + uncond fraction and `occupancy` the
+busy-slot count sharing each tick (phase alignment puts a homogeneous pool's
+refreshes on the same ticks).  Feed it
+`row_time_ms=ServingTelemetry.row_time_ms()` from a prior serving run; the
+older `step_time_ms` tick-kind pricing (which charged a whole-pool tick even
+for a 1-row refresh) is kept as a fallback for dense-engine measurements.
 """
 from __future__ import annotations
 
@@ -155,16 +165,29 @@ def autotune(params, cfg, sla: SLA,
              num_steps: int = 16, batch: int = 1, seed: int = 0,
              noise_schedule=None,
              step_time_ms: Optional[Tuple[float, float]] = None,
+             row_time_ms: Optional[Tuple[float, float]] = None,
+             occupancy: int = 1,
              cfg_scale: float = 0.0,
              cfg_intervals: Sequence[Optional[int]] = (None,),
              verbose: bool = False) -> TunedPolicy:
     """Sweep candidates against `sla` on a calibration batch.
 
-    step_time_ms: measured (backbone_tick_ms, skip_tick_ms) from a prior
-    serving run — `ServingTelemetry.step_time_ms()`, which averages over
-    full and cond-only ticks (an unguided run records only the latter) —
-    enables the latency constraint; without it only the PSNR floor is
-    enforced.
+    row_time_ms: measured (ms_per_backbone_row, skip_tick_ms) from a prior
+    serving run — `ServingTelemetry.row_time_ms()` — prices a candidate's
+    latency by backbone rows: a request waits for its whole tick, and with
+    phase-aligned admission a homogeneous pool's co-resident slots gather
+    rows on the same ticks, so the per-step estimate is
+    `occupancy * rows_per_step * ms_per_row + skip_tick_ms` with
+    rows_per_step = cond fraction + uncond fraction.  Pass
+    `occupancy=slots` (or the typical busy-slot count) for a loaded pool;
+    the default 1 prices an otherwise-idle engine and UNDER-estimates
+    per-request latency under load by roughly the occupancy factor.
+
+    step_time_ms: legacy tick-kind pricing, (backbone_tick_ms, skip_tick_ms)
+    from `ServingTelemetry.step_time_ms()` — used only when row_time_ms is
+    not given (it charges a whole-pool backbone tick even for a 1-row
+    refresh, over-estimating compacted serving).  Without either, only the
+    PSNR floor is enforced.
 
     cfg_scale > 0 tunes for *guided* traffic: every (policy, hyperparams)
     candidate is crossed with `cfg_intervals` (uncond-branch reuse intervals;
@@ -191,8 +214,14 @@ def autotune(params, cfg, sla: SLA,
                 cfg_scale=cfg_scale, cfg_interval=ci)
             # guided cost = fraction of backbone rows dispatched per step
             cost = (cf + cf_u) / 2.0 if cfg_scale > 0.0 else cf
+            # rows this candidate gathers per step in the compacted engine
+            rows_per_step = cf + (cf_u if cfg_scale > 0.0 else 0.0)
             lat = None
-            if step_time_ms is not None:
+            if row_time_ms is not None:
+                t_row, t_tick = row_time_ms
+                lat = num_steps * (max(occupancy, 1) * rows_per_step * t_row
+                                   + t_tick)
+            elif step_time_ms is not None:
                 t_full, t_skip = step_time_ms
                 lat = num_steps * (cost * t_full + (1.0 - cost) * t_skip)
             ok = q >= sla.min_psnr and (

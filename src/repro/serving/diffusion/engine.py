@@ -2,25 +2,40 @@
 latent generation with per-slot cache states, including classifier-free
 guidance with per-slot CFG-branch reuse (FasterCacheCFG, survey §III-C).
 
-Device side, every tick is one of exactly three jit'd programs over the
-whole slot pool (no per-request compilation, arbitrary request mixes):
+Device side, every tick gathers EXACTLY the backbone rows the per-slot
+policies want computed this tick (row compaction, the default):
 
-  * tick_full — both-branch backbone: cond and uncond rows stacked into one
-    2S-row batch (slot axis == batch axis, backbone outside vmap), then the
-    vmapped per-slot policy step: each slot's main policy takes its own
-    COMPUTE / REUSE / FORECAST branch and its FasterCacheCFG state gates the
-    uncond row the same way (lax.cond vmaps to a select).  Dispatched only
-    when some active guided slot's CFG policy wants a fresh uncond compute.
-  * tick_cond_only — backbone over the S cond rows only; every active slot
-    reuses (blend-extrapolates) its cached uncond branch, so the uncond rows
-    are dropped from the backbone batch entirely.  For unguided pools this
-    is the only backbone program — it is PR 2's tick_full.
-  * tick_skip — no backbone at all; dispatched when no slot wants any
-    compute.  These ticks cost only forecast/reuse arithmetic.
+  * Each active slot contributes a cond row iff its main policy wants a
+    compute and an uncond row iff it is guided and its CFG policy wants an
+    uncond refresh.  The wanted rows are gathered into one compacted batch,
+    padded to the next power-of-two bucket, run through the backbone (slot
+    axis == batch axis, backbone outside vmap), and scattered back to the
+    S-row y_c / y_u layout before the vmapped per-slot policy step — each
+    slot still takes its own COMPUTE / REUSE / FORECAST branch (lax.cond
+    vmaps to a select), rows that were not gathered arrive as zeros and may
+    only reach discarded branches.  One jit program per bucket size (all
+    gather/scatter indices are traced), so the program count is bounded by
+    log2(2S) + 2 regardless of request mix.
+  * A tick with zero wanted rows dispatches the skip program — no backbone
+    at all, only forecast/reuse arithmetic.
 
-CFG doubles backbone cost; FasterCacheCFG(interval=N) makes (N-1)/N of
-backbone ticks cond-only, recovering most of the doubled cost — serving
-throughput lands between 1x and 2x of naive two-branch serving
+This is the batch dimension's version of block-level partial computing
+(DeepCache / Cache-Me-if-You-Can): a TeaCache pool where one slot fires
+dispatches a 1-row bucket, not a whole-pool batch, and a mixed
+guided/unguided pool pays per uncond row instead of doubling the batch
+whenever any slot refreshes its CFG branch.
+
+`row_compaction=False` restores the PR-3 dense engine — one of exactly
+three whole-pool programs per tick (tick_full over 2S rows, tick_cond_only
+over S rows, tick_skip) — kept as the equivalence/benchmark baseline; the
+compacted engine must reproduce its per-request outputs exactly
+(tests/test_serving_compaction.py).  The tick *kinds* full/cond/skip are
+still reported either way; under compaction they classify which branches
+the gathered rows came from while the row counters carry the real cost.
+
+CFG doubles backbone cost; FasterCacheCFG(interval=N) drops each slot's
+uncond row from (N-1)/N of its backbone ticks — serving throughput lands
+between 1x and 2x of naive two-branch serving
 (benchmarks/bench_serving.py --cfg).
 
 Host side, the SlotScheduler refills finished slots from the admission
@@ -49,7 +64,7 @@ import numpy as np
 from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
                         make_policy)
 from repro.diffusion import NoiseSchedule, linear_schedule
-from repro.diffusion.pipeline import slot_cfg_denoise_fns
+from repro.diffusion.pipeline import slot_compact_denoise_fns
 
 from .scheduler import DiffusionRequest, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
@@ -62,6 +77,42 @@ def request_noise_key(req: DiffusionRequest):
     `seed=0` must still draw *distinct* initial noise (identical seeds once
     made every default request produce the identical sample)."""
     return jax.random.fold_in(jax.random.PRNGKey(req.seed), req.request_id)
+
+
+def compact_rows(want_c: np.ndarray, want_u: np.ndarray, slots: int):
+    """Plan one row-compacted tick from the per-slot want masks.
+
+    Returns (bucket, row_slot, row_uncond, row_dest): the wanted cond rows
+    first, then the wanted uncond rows, padded to the next power-of-two
+    bucket (capped at the tick's dense batch — `slots` for cond-only ticks,
+    `2*slots` otherwise) so the engine compiles at most one tick program per
+    bucket size.
+    `row_slot[b]` is the source slot of compacted row b, `row_uncond[b]`
+    selects the null label, and `row_dest[b]` is the scatter target in the
+    (2*slots + 1)-row buffer: cond row of slot i -> i, uncond row -> slots+i,
+    padding -> the 2*slots dump row (discarded).  bucket == 0 means a pure
+    skip tick (no backbone program at all)."""
+    c_rows = np.nonzero(want_c)[0].astype(np.int32)
+    u_rows = np.nonzero(want_u)[0].astype(np.int32)
+    n = len(c_rows) + len(u_rows)
+    if n == 0:
+        z = np.zeros((0,), np.int32)
+        return 0, z, np.zeros((0,), bool), z
+    # capped at this tick's dense batch (S for cond-only ticks, 2S when any
+    # uncond row is gathered): for non-power-of-two slot counts the next
+    # power of two can overshoot the whole-pool batch, which would make a
+    # busy compacted tick dispatch MORE rows than the dense engine
+    cap = 2 * slots if len(u_rows) else slots
+    bucket = min(1 << (int(n) - 1).bit_length(), cap)
+    row_slot = np.zeros((bucket,), np.int32)
+    row_uncond = np.zeros((bucket,), bool)
+    row_dest = np.full((bucket,), 2 * slots, np.int32)
+    row_slot[:len(c_rows)] = c_rows
+    row_dest[:len(c_rows)] = c_rows
+    row_slot[len(c_rows):n] = u_rows
+    row_uncond[len(c_rows):n] = True
+    row_dest[len(c_rows):n] = u_rows + slots
+    return bucket, row_slot, row_uncond, row_dest
 
 
 @dataclass
@@ -79,13 +130,18 @@ class DiffusionServingEngine:
                  *, slots: int = 8, max_steps: int = 64,
                  noise_schedule: Optional[NoiseSchedule] = None,
                  align: Optional[int] = None,
-                 cfg_policy: Union[CachePolicy, str, None] = None):
+                 cfg_policy: Union[CachePolicy, str, None] = None,
+                 row_compaction: bool = True):
         self.params, self.cfg = params, cfg
         self.slots = slots
         self.max_steps = max_steps
+        self.row_compaction = bool(row_compaction)
         self.sched = noise_schedule or linear_schedule(1000)
         if isinstance(policy, str):
-            policy = make_policy(policy)
+            # num_steps=max_steps on BOTH string paths: the main policy used
+            # to be built bare, so e.g. policy="magcache" got a gamma curve
+            # sized for the registry default 50 steps regardless of max_steps
+            policy = make_policy(policy, num_steps=max_steps)
         self.policy = policy if policy is not None else make_policy("none")
         # uncond-branch gate for guided requests; None = naive two-branch
         # serving (every guided slot recomputes its uncond row each step)
@@ -106,9 +162,9 @@ class DiffusionServingEngine:
         self._feat = (1, T, D)                      # per-slot policy feature
         self._sig_shape = (1, T, cfg.d_model)       # TeaCache signal shape
         self.batched = SlotBatchedPolicy(self.policy, slots)
-        (backbone2_fn, backbone_fn, apply_fn, want_cond_fn,
-         want_uncond_fn) = slot_cfg_denoise_fns(params, cfg, self.policy,
-                                                cfg_policy)
+        (compact_backbone_fn, backbone2_fn, backbone_fn, apply_fn,
+         want_cond_fn, want_uncond_fn) = slot_compact_denoise_fns(
+            params, cfg, self.policy, cfg_policy)
         # combined per-slot state: main policy branch + uncond CFG branch
         # (an empty dict when cfg_policy is None — NoCachePolicy is stateless)
         uncond_pol = self.cfg_policy
@@ -119,28 +175,59 @@ class DiffusionServingEngine:
                     if uncond_pol is not None else {}),
         }
 
+        def slot_step(states, steps, xs, tvals, labels, scales, cfg_ws,
+                      ab_t, ab_n, y_c, y_u):
+            """Shared tail of every tick program: vmapped per-slot policy
+            step + traced per-slot DDIM update."""
+            eps, states = jax.vmap(apply_fn)(states, steps, xs, tvals,
+                                             labels, scales, cfg_ws,
+                                             y_c, y_u)
+            a_t = ab_t[:, None, None]
+            a_n = ab_n[:, None, None]
+            x0_hat = (xs - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
+            x_next = jnp.sqrt(a_n) * x0_hat + jnp.sqrt(1.0 - a_n) * eps
+            return x_next, states
+
         def make_tick(mode: str):
+            """Dense whole-pool programs (PR-3 baseline, row_compaction=False):
+            the backbone runs OUTSIDE vmap over S or 2S rows."""
             def tick(states, steps, xs, tvals, labels, nulls, scales, cfg_ws,
                      ab_t, ab_n):
-                # the backbone runs OUTSIDE vmap: slot axis == batch axis
                 if mode == "full":
                     y_c, y_u = backbone2_fn(xs, tvals, labels, nulls)
                 elif mode == "cond":
                     y_c, y_u = backbone_fn(xs, tvals, labels), jnp.zeros_like(xs)
                 else:
                     y_c = y_u = jnp.zeros_like(xs)
-                eps, states = jax.vmap(apply_fn)(states, steps, xs, tvals,
-                                                 labels, scales, cfg_ws,
-                                                 y_c, y_u)
-                a_t = ab_t[:, None, None]
-                a_n = ab_n[:, None, None]
-                x0_hat = (xs - jnp.sqrt(1.0 - a_t) * eps) / jnp.sqrt(a_t)
-                x_next = jnp.sqrt(a_n) * x0_hat + jnp.sqrt(1.0 - a_n) * eps
-                return x_next, states
+                return slot_step(states, steps, xs, tvals, labels, scales,
+                                 cfg_ws, ab_t, ab_n, y_c, y_u)
             return jax.jit(tick)
 
-        self._ticks = {kind: make_tick(kind)
-                       for kind in ("full", "cond", "skip")}
+        def make_compact_tick(bucket: int):
+            """One parameterized row-compacted program per bucket size: the
+            backbone runs over the gathered `bucket`-row batch only; the
+            scatter restores the S-row y_c / y_u layout (missing rows zero —
+            they only reach branches the per-slot select discards).  All
+            index operands are traced, so this compiles once per bucket."""
+            def tick(states, steps, xs, tvals, labels, nulls, scales, cfg_ws,
+                     ab_t, ab_n, row_slot, row_uncond, row_dest):
+                if bucket == 0:
+                    y_c = y_u = jnp.zeros_like(xs)
+                else:
+                    y_c, y_u = compact_backbone_fn(xs, tvals, labels, nulls,
+                                                   row_slot, row_uncond,
+                                                   row_dest)
+                return slot_step(states, steps, xs, tvals, labels, scales,
+                                 cfg_ws, ab_t, ab_n, y_c, y_u)
+            return jax.jit(tick)
+
+        if self.row_compaction:
+            self._make_compact_tick = make_compact_tick
+            self._compact_ticks = {}   # bucket size -> jit'd program (lazy)
+            self._ticks = None
+        else:
+            self._ticks = {kind: make_tick(kind)
+                           for kind in ("full", "cond", "skip")}
         self._want_cond = jax.jit(
             lambda states, steps, xs, tvals, labels:
             jax.vmap(want_cond_fn)(states, steps, xs, tvals, labels))
@@ -179,6 +266,51 @@ class DiffusionServingEngine:
         self._guided = np.zeros((slots,), bool)
         #: ServingTelemetry of the most recent serve() call
         self.telemetry: Optional[ServingTelemetry] = None
+
+    def _compact_tick(self, bucket: int):
+        """The jit'd row-compacted program for one bucket size (lazy; at most
+        log2(2*slots) + 2 programs ever exist)."""
+        fn = self._compact_ticks.get(bucket)
+        if fn is None:
+            fn = self._compact_ticks[bucket] = self._make_compact_tick(bucket)
+        return fn
+
+    def warmup(self) -> None:
+        """Compile every tick program on dummy inputs before serving.
+
+        Row compaction spreads the engine across one program per bucket size;
+        without warmup each first-seen bucket pays its XLA compile inside a
+        live tick (state-dependent policies like TeaCache surface new bucket
+        sizes mid-run, long after admission warmed the common ones).  Serving
+        benchmarks call this so steady-state throughput is measured."""
+        S = self.slots
+        T, D = self.cfg.dit_patch_tokens, self.cfg.dit_in_dim
+        xs = jnp.zeros((S, T, D), jnp.float32)
+        states = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (S,) + a.shape).copy(),
+            self._fresh)
+        zi = jnp.zeros((S,), jnp.int32)
+        zf = jnp.zeros((S,), jnp.float32)
+        ab = jnp.full((S,), 0.5, jnp.float32)
+        args = (states, zi, xs, zf, zi, zi, zf, zf, ab, ab)
+        if not self.row_compaction:
+            for fn in self._ticks.values():
+                fn(*args)[0].block_until_ready()
+            return
+        # every bucket a tick can request, mirroring compact_rows exactly:
+        # cond-only ticks pad n in 1..S capped at S, ticks with uncond rows
+        # pad n in 1..2S capped at 2S
+        buckets = sorted(
+            {0}
+            | {min(1 << (n - 1).bit_length(), S) for n in range(1, S + 1)}
+            | {min(1 << (n - 1).bit_length(), 2 * S)
+               for n in range(1, 2 * S + 1)})
+        for bucket in buckets:
+            row_slot = jnp.zeros((bucket,), jnp.int32)
+            row_uncond = jnp.zeros((bucket,), bool)
+            row_dest = jnp.full((bucket,), 2 * S, jnp.int32)
+            fn = self._compact_tick(bucket)
+            fn(*args, row_slot, row_uncond, row_dest)[0].block_until_ready()
 
     def _probe_static_plan(self, policy: CachePolicy) -> Optional[np.ndarray]:
         try:
@@ -278,24 +410,44 @@ class DiffusionServingEngine:
 
             want_c = self._plan(states, idx, xs, tvals) & active
             want_u = self._plan_uncond(states, idx, xs) & active
-            if want_u.any():
+            n_c, n_u = int(want_c.sum()), int(want_u.sum())
+            if n_u:
                 kind = "full"          # some slot refreshes its uncond cache
-            elif want_c.any():
-                kind = "cond"          # uncond rows dropped from the batch
+            elif n_c:
+                kind = "cond"          # cond-branch rows only
             else:
                 kind = "skip"
-            t0 = now()
-            xs, states = self._ticks[kind](
-                states, jnp.asarray(idx), xs, jnp.asarray(tvals),
-                jnp.asarray(self._labels), jnp.asarray(self._nulls),
-                jnp.asarray(self._scales), jnp.asarray(cfg_ws),
-                jnp.asarray(ab_t), jnp.asarray(ab_n))
-            xs.block_until_ready()
-            tele.record_tick(kind, now() - t0)
-            if kind == "full":
-                tele.uncond_rows_computed += self.slots
+            # rows a dense whole-pool tick of this kind dispatches (the PR-3
+            # engine's actual batch; also what row compaction saves against)
+            dense_rows = {"full": 2 * self.slots, "cond": self.slots,
+                          "skip": 0}[kind]
+            args = (states, jnp.asarray(idx), xs, jnp.asarray(tvals),
+                    jnp.asarray(self._labels), jnp.asarray(self._nulls),
+                    jnp.asarray(self._scales), jnp.asarray(cfg_ws),
+                    jnp.asarray(ab_t), jnp.asarray(ab_n))
+            if self.row_compaction:
+                bucket, row_slot, row_uncond, row_dest = compact_rows(
+                    want_c, want_u, self.slots)
+                t0 = now()
+                xs, states = self._compact_tick(bucket)(
+                    *args, jnp.asarray(row_slot), jnp.asarray(row_uncond),
+                    jnp.asarray(row_dest))
+                xs.block_until_ready()
+                tele.record_tick(kind, now() - t0,
+                                 rows_computed=n_c + n_u,
+                                 rows_padding=bucket - (n_c + n_u),
+                                 rows_saved=dense_rows - (n_c + n_u))
             else:
-                tele.uncond_rows_saved += int((active & self._guided).sum())
+                t0 = now()
+                xs, states = self._ticks[kind](*args)
+                xs.block_until_ready()
+                tele.record_tick(kind, now() - t0, rows_computed=dense_rows)
+            # uncond accounting in rows actually refreshing a CFG cache: a
+            # dense full tick used to add `self.slots`, over-counting
+            # inactive and unguided slots into the autotuner's row cost
+            tele.uncond_rows_computed += n_u
+            tele.uncond_rows_saved += int(
+                (active & self._guided & ~want_u).sum())
 
             for slot in sched.slots:
                 if slot.busy and want_c[slot.index]:

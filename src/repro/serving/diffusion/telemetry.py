@@ -11,15 +11,21 @@ collects both views:
     per-slot FasterCacheCFG state saved) and an explicit `preempted` flag
     for requests cut off by `serve(max_ticks=...)`.
   * ServingTelemetry — fleet aggregation: throughput, latency percentiles,
-    the full / cond-only / skip tick mix, uncond backbone rows dispatched
-    vs saved, cache hit + forecast rates, cache_state_bytes/slot.
+    the full / cond-only / skip tick mix, backbone rows computed / padded /
+    saved by row compaction, uncond rows dispatched vs saved, cache hit +
+    forecast rates, cache_state_bytes/slot.
 
-Tick kinds (engine docstring):
-  "full" — backbone over 2S rows (cond + uncond branches)
-  "cond" — backbone over S cond rows only (every active slot reuses its
-           cached uncond branch; also the only backbone tick kind for
+Tick kinds (kept for compatibility with the PR-3 dense engine; under row
+compaction they classify WHICH branches the tick's gathered rows came from,
+no longer the batch size):
+  "full" — some gathered row is an uncond-branch refresh
+  "cond" — cond-branch rows only (also the only backbone tick kind for
            unguided pools)
   "skip" — no backbone at all (forecast/reuse arithmetic only)
+The true per-tick cost now lives in the row counters:
+`backbone_rows_computed` (rows carrying real per-slot work), `_padding`
+(power-of-two bucket waste), `_saved` (rows a dense whole-pool tick would
+have dispatched on top).
 """
 from __future__ import annotations
 
@@ -31,11 +37,20 @@ TICK_KINDS = ("full", "cond", "skip")
 
 
 def _pct(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default method).
+
+    Nearest-rank via int(q * (len-1)) truncates DOWN, so p95 over a small
+    fleet (10 requests -> index int(8.55) = 8) silently reported the ~p89
+    sample; interpolating between the bracketing order statistics matches
+    np.percentile exactly (tests/test_serving_compaction.py asserts so)."""
     if not xs:
         return 0.0
     xs = sorted(xs)
-    i = min(int(q * (len(xs) - 1)), len(xs) - 1)
-    return xs[i]
+    pos = q * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
 
 
 @dataclass
@@ -103,11 +118,27 @@ class ServingTelemetry:
     tick_seconds_full: float = 0.0
     tick_seconds_cond: float = 0.0
     tick_seconds_skip: float = 0.0
-    #: uncond backbone rows actually dispatched (S per "full" tick)
+    #: uncond backbone rows that refreshed an active guided slot's CFG cache
+    #: (rows a dense engine additionally dispatches but whose output the
+    #: per-slot select discards are NOT counted here — they show up in
+    #: backbone_rows_computed instead)
     uncond_rows_computed: int = 0
     #: uncond rows a naive two-branch server would have dispatched but this
-    #: engine did not (active guided slots on "cond"/"skip" ticks)
+    #: engine did not (active guided slots whose CFG cache was reused)
     uncond_rows_saved: int = 0
+    #: backbone rows carrying real per-slot work (cond + uncond), summed over
+    #: ticks.  For the dense whole-pool engine this is the full batch (S or
+    #: 2S per backbone tick — slot-count inflation included, because those
+    #: rows really run); for the row-compacted engine it is exactly the rows
+    #: whose policies wanted a compute.
+    backbone_rows_computed: int = 0
+    #: pad rows added to reach the power-of-two bucket size (compacted engine
+    #: only; these also run through the backbone, so actual dispatched batch
+    #: rows = backbone_rows_computed + backbone_rows_padding)
+    backbone_rows_padding: int = 0
+    #: rows a dense whole-pool tick of the same kind would have dispatched
+    #: minus the rows this engine actually needed
+    backbone_rows_saved: int = 0
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
@@ -118,7 +149,9 @@ class ServingTelemetry:
     def stop(self) -> None:
         self._t1 = time.perf_counter()
 
-    def record_tick(self, kind: str, seconds: float) -> None:
+    def record_tick(self, kind: str, seconds: float, *,
+                    rows_computed: int = 0, rows_padding: int = 0,
+                    rows_saved: int = 0) -> None:
         assert kind in TICK_KINDS, kind
         if kind == "full":
             self.ticks_full += 1
@@ -129,6 +162,9 @@ class ServingTelemetry:
         else:
             self.ticks_skip += 1
             self.tick_seconds_skip += seconds
+        self.backbone_rows_computed += int(rows_computed)
+        self.backbone_rows_padding += int(rows_padding)
+        self.backbone_rows_saved += int(rows_saved)
 
     def finish_request(self, rec: RequestRecord) -> None:
         self.records.append(rec)
@@ -158,6 +194,18 @@ class ServingTelemetry:
         t_skip = (1e3 * self.tick_seconds_skip / self.ticks_skip
                   if self.ticks_skip else 0.0)
         return t_back, t_skip
+
+    def row_time_ms(self):
+        """(ms_per_backbone_row, skip_tick_ms) — autotune's row-priced
+        latency model.  Backbone tick time divided by the rows those ticks
+        actually dispatched (real + padding), so the estimate prices a
+        candidate by the rows it gathers instead of by tick kind."""
+        rows = self.backbone_rows_computed + self.backbone_rows_padding
+        t_row = (1e3 * (self.tick_seconds_full + self.tick_seconds_cond) /
+                 rows if rows else 0.0)
+        t_skip = (1e3 * self.tick_seconds_skip / self.ticks_skip
+                  if self.ticks_skip else 0.0)
+        return t_row, t_skip
 
     def summary(self) -> Dict[str, float]:
         lat = [r.latency for r in self.records]
@@ -189,6 +237,12 @@ class ServingTelemetry:
             "tick_ms_skip_mean": (1e3 * self.tick_seconds_skip /
                                   self.ticks_skip if self.ticks_skip else 0.0),
             "guided_requests": len(guided),
+            "backbone_rows_computed": self.backbone_rows_computed,
+            "backbone_rows_padding": self.backbone_rows_padding,
+            "backbone_rows_saved": self.backbone_rows_saved,
+            "backbone_rows_per_tick_mean":
+                (self.backbone_rows_computed / self.ticks_backbone
+                 if self.ticks_backbone else 0.0),
             "uncond_rows_computed": self.uncond_rows_computed,
             "uncond_rows_saved": self.uncond_rows_saved,
             "uncond_saved_steps_total":

@@ -1,0 +1,296 @@
+"""Row-compacted backbone ticks: the compacted engine must reproduce the
+dense whole-pool engine (per-slot outputs within fp tolerance, computed-step
+counts exactly) for every registry policy, bucket planning must handle the
+edge cases, refill isolation must survive compaction, and the telemetry /
+percentile fixes that rode along with it."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import POLICY_REGISTRY, FasterCacheCFG, make_policy
+from repro.models import init_params, perturb_zero_init
+from repro.serving.diffusion import (SLA, DiffusionRequest,
+                                     DiffusionServingEngine, autotune,
+                                     compact_rows)
+from repro.serving.diffusion.telemetry import _pct
+
+NUM_STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # smaller than test_serving_diffusion's model: this file serves every
+    # registry policy twice (compacted + dense), so compile time dominates
+    cfg = get_config("dit-xl").reduced(num_layers=2, d_model=64,
+                                       num_heads=4, num_kv_heads=4,
+                                       d_ff=128, dit_patch_tokens=8,
+                                       dit_in_dim=4, dit_num_classes=10)
+    params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _mixed_requests(n=3):
+    """Mixed guided/unguided, mixed budgets — the pool shape whole-pool
+    ticks handled worst."""
+    return [DiffusionRequest(i, num_steps=(NUM_STEPS, NUM_STEPS - 2)[i % 2],
+                             seed=i, class_label=i % 5,
+                             cfg_scale=2.5 if i % 2 == 0 else 0.0)
+            for i in range(n)]
+
+
+def _serve(cfg, params, policy, reqs, *, compact, cfg_policy=None, slots=2):
+    eng = DiffusionServingEngine(params, cfg, policy, slots=slots,
+                                 max_steps=NUM_STEPS, cfg_policy=cfg_policy,
+                                 row_compaction=compact)
+    return eng, eng.serve(reqs)
+
+
+# ----------------------------------------------------------------------
+# bucket planning (pure host-side)
+# ----------------------------------------------------------------------
+
+def test_compact_rows_zero_rows_is_skip():
+    b, rs, ru, rd = compact_rows(np.zeros(4, bool), np.zeros(4, bool), 4)
+    assert b == 0 and rs.shape == (0,) and ru.shape == (0,) and rd.shape == (0,)
+
+
+def test_compact_rows_layout_and_padding():
+    want_c = np.array([True, False, True, False])
+    want_u = np.array([False, False, True, False])
+    b, rs, ru, rd = compact_rows(want_c, want_u, 4)
+    assert b == 4                                   # 3 rows -> bucket 4
+    # cond rows first (dest = slot), then uncond (dest = slot + S),
+    # padding points at the 2S dump row
+    np.testing.assert_array_equal(rs, [0, 2, 2, 0])
+    np.testing.assert_array_equal(ru, [False, False, True, False])
+    np.testing.assert_array_equal(rd, [0, 2, 6, 8])
+
+
+@pytest.mark.parametrize("n_rows,bucket", [
+    (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8), (9, 16),
+])
+def test_compact_rows_next_pow2_bucket(n_rows, bucket):
+    """S rows stay in the S bucket; S+1 spills to the next power of two."""
+    slots = 16
+    want_c = np.zeros(slots, bool)
+    want_c[:n_rows] = True
+    b, rs, ru, rd = compact_rows(want_c, np.zeros(slots, bool), slots)
+    assert b == bucket
+    assert (rd[n_rows:] == 2 * slots).all()         # padding -> dump row
+
+
+def test_compact_rows_bucket_capped_at_dense_batch():
+    """Non-power-of-two pools: the bucket must clamp to the tick's dense
+    batch — S for cond-only ticks, 2S with uncond rows — never dispatching
+    MORE rows than the whole-pool tick it replaces."""
+    slots = 6
+    want = np.ones(slots, bool)                     # 12 wanted rows
+    b, rs, ru, rd = compact_rows(want, want, slots)
+    assert b == 2 * slots                           # 12, not 16
+    assert (rd != 2 * slots).all()                  # no padding at the cap
+    # cond-only busy tick: dense dispatches S=6 rows, so pow2 8 must clamp
+    b, _, _, _ = compact_rows(want, np.zeros(slots, bool), slots)
+    assert b == slots
+    # one uncond row joins: the dense comparison is the 2S full batch again
+    one_u = np.zeros(slots, bool)
+    one_u[0] = True
+    b, _, _, _ = compact_rows(want, one_u, slots)
+    assert b == 8                                   # 7 rows -> pow2 8 < 12
+
+
+# ----------------------------------------------------------------------
+# compacted == dense equivalence, every registry policy
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(POLICY_REGISTRY))
+def test_compacted_matches_dense_engine(setup, name):
+    """Per-request x0 within fp tolerance and EXACT computed-step counts:
+    compaction only changes which rows are batched through the backbone,
+    never the per-slot policy step."""
+    cfg, params = setup
+    reqs = _mixed_requests()
+    results = {}
+    for compact in (True, False):
+        pol = make_policy(name, num_steps=NUM_STEPS)
+        _, results[compact] = _serve(cfg, params, pol, reqs, compact=compact,
+                                     cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+    for a, b in zip(results[True], results[False]):
+        np.testing.assert_allclose(a.x0, b.x0, atol=5e-4, rtol=1e-3)
+        assert a.record.computed_steps == b.record.computed_steps
+        assert a.record.uncond_computed_steps == b.record.uncond_computed_steps
+
+
+def test_compacted_matches_dense_teacache_naive_cfg(setup):
+    """Signal policy + naive two-branch guidance (no CFG cache): the dense
+    engine's worst case — every uncond row recomputes — must still agree."""
+    cfg, params = setup
+    reqs = _mixed_requests()
+    results = {}
+    for compact in (True, False):
+        _, results[compact] = _serve(cfg, params, "teacache", reqs,
+                                     compact=compact)
+    for a, b in zip(results[True], results[False]):
+        np.testing.assert_allclose(a.x0, b.x0, atol=5e-4, rtol=1e-3)
+        assert a.record.computed_steps == b.record.computed_steps
+        assert a.record.uncond_computed_steps == b.record.uncond_computed_steps
+
+
+# ----------------------------------------------------------------------
+# row accounting
+# ----------------------------------------------------------------------
+
+def test_row_telemetry_counts_only_wanted_rows(setup):
+    """backbone_rows_computed must equal the sum of per-request computed
+    steps (cond + uncond): no slot-count inflation from inactive or
+    unguided slots, skip ticks contribute zero rows."""
+    cfg, params = setup
+    reqs = _mixed_requests()
+    eng, res = _serve(cfg, params, "fora", reqs, compact=True,
+                      cfg_policy=FasterCacheCFG(4, NUM_STEPS))
+    tele = eng.telemetry
+    cond_steps = sum(r.record.computed_steps for r in res)
+    uncond_steps = sum(r.record.uncond_computed_steps for r in res)
+    assert tele.backbone_rows_computed == cond_steps + uncond_steps
+    assert tele.uncond_rows_computed == uncond_steps
+    assert tele.backbone_rows_saved > 0        # vs a dense whole-pool tick
+    assert tele.backbone_rows_padding >= 0
+    s = tele.summary()
+    assert s["backbone_rows_computed"] == tele.backbone_rows_computed
+    assert s["backbone_rows_per_tick_mean"] > 0
+    assert tele.row_time_ms()[0] > 0    # the autotune row-pricing input
+
+
+def test_dense_engine_row_accounting_matches_batch(setup):
+    """The dense engine reports its true whole-pool batches (S or 2S rows
+    per backbone tick) and the same fixed uncond accounting: only rows that
+    refreshed an active guided slot's CFG cache."""
+    cfg, params = setup
+    req = DiffusionRequest(0, NUM_STEPS, seed=3, class_label=4, cfg_scale=2.5)
+    eng, res = _serve(cfg, params, "none", [req], compact=False,
+                      cfg_policy=FasterCacheCFG(4, NUM_STEPS), slots=2)
+    tele = eng.telemetry
+    S = 2
+    assert tele.backbone_rows_computed == (2 * S * tele.ticks_full +
+                                           S * tele.ticks_cond)
+    assert tele.backbone_rows_padding == 0
+    # one active guided slot: uncond rows == its uncond refreshes, NOT
+    # `slots` per full tick (the pre-fix inflation)
+    assert tele.uncond_rows_computed == res[0].record.uncond_computed_steps
+    assert tele.uncond_rows_computed == tele.ticks_full
+
+
+def test_compaction_dispatches_fewer_rows_than_dense(setup):
+    """The acceptance claim at test scale: equal output, strictly fewer
+    backbone rows (padding included) on a mixed signal-policy + CFG pool."""
+    cfg, params = setup
+    reqs = _mixed_requests(4)
+    rows = {}
+    for compact in (True, False):
+        eng, _ = _serve(cfg, params, "teacache", reqs, compact=compact,
+                        cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+        t = eng.telemetry
+        rows[compact] = t.backbone_rows_computed + t.backbone_rows_padding
+    assert rows[True] < rows[False]
+
+
+# ----------------------------------------------------------------------
+# engine behaviour under compaction
+# ----------------------------------------------------------------------
+
+def test_refill_isolation_under_compaction(setup):
+    """Reset-on-refill still holds when ticks are row-compacted: a guided
+    request served after another through the same slot must equal it served
+    alone (bitwise)."""
+    cfg, params = setup
+    a = DiffusionRequest(0, NUM_STEPS, seed=1, class_label=1, cfg_scale=3.0)
+    b = DiffusionRequest(1, NUM_STEPS, seed=2, class_label=2, cfg_scale=2.0)
+    _, both = _serve(cfg, params, "teacache", [a, b], compact=True,
+                     cfg_policy=FasterCacheCFG(3, NUM_STEPS), slots=1)
+    _, alone = _serve(cfg, params, "teacache", [b], compact=True,
+                      cfg_policy=FasterCacheCFG(3, NUM_STEPS), slots=1)
+    np.testing.assert_array_equal(both[1].x0, alone[0].x0)
+
+
+def test_zero_row_tick_skips_backbone(setup):
+    """Interval-4 over an aligned pool: 3 of 4 ticks gather zero rows and
+    must dispatch the bucket-0 (skip) program — kinds stay compatible."""
+    cfg, params = setup
+    reqs = [DiffusionRequest(i, NUM_STEPS, seed=i) for i in range(2)]
+    eng, _ = _serve(cfg, params, make_policy("fora", interval=4), reqs,
+                    compact=True)
+    tele = eng.telemetry
+    assert tele.ticks_skip == 3 * tele.ticks_cond
+    assert tele.ticks_full == 0
+    assert 0 in eng._compact_ticks              # the skip program ran
+
+
+def test_warmup_precompiles_every_bucket(setup):
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "teacache", slots=3,
+                                 max_steps=NUM_STEPS,
+                                 cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+    eng.warmup()
+    # slots=3: cond-only ticks pad 1..3 capped at S -> {1, 2, 3}; ticks with
+    # uncond rows pad 1..6 capped at 2S -> {1, 2, 4, 6}; plus the skip
+    # program
+    assert set(eng._compact_ticks) == {0, 1, 2, 3, 4, 6}
+
+
+def test_string_policy_gets_engine_max_steps(setup):
+    """Regression: policy="magcache" was built without num_steps, sizing its
+    gamma curve for the registry default 50 steps regardless of max_steps."""
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "magcache", slots=1,
+                                 max_steps=24)
+    assert eng.policy.gammas.shape[0] == 24
+    eng = DiffusionServingEngine(params, cfg, "magcache", slots=1,
+                                 max_steps=24, cfg_policy="fastercache_cfg")
+    assert eng.cfg_policy.num_steps == 24
+
+
+# ----------------------------------------------------------------------
+# autotune row-priced latency
+# ----------------------------------------------------------------------
+
+def test_autotune_prices_latency_in_backbone_rows(setup):
+    """With row_time_ms the estimate is T * (rows_per_step * ms_per_row +
+    tick_overhead): a guided fora/4 + cfg-interval-4 candidate gathers
+    0.25 + 0.25 rows per step, half a naive candidate's cond row alone."""
+    cfg, params = setup
+    t = autotune(params, cfg, SLA("loose", min_psnr=-100.0),
+                 candidates=[("fora", {"interval": 4})], num_steps=NUM_STEPS,
+                 row_time_ms=(100.0, 1.0), cfg_scale=2.0, cfg_intervals=(4,))
+    # cf = cf_u = 1/4 -> 8 * (0.5 * 100 + 1) = 408 ms
+    assert t.est_latency_ms == pytest.approx(408.0)
+    # a loaded pool's co-resident slots share every tick: occupancy scales
+    # the row term (4x here), not the per-tick overhead
+    t4 = autotune(params, cfg, SLA("loose", min_psnr=-100.0),
+                  candidates=[("fora", {"interval": 4})], num_steps=NUM_STEPS,
+                  row_time_ms=(100.0, 1.0), occupancy=4,
+                  cfg_scale=2.0, cfg_intervals=(4,))
+    assert t4.est_latency_ms == pytest.approx(8 * (4 * 0.5 * 100 + 1))
+    # a max_latency_ms between the row-priced estimates separates candidates
+    sla = SLA("tight", min_psnr=-100.0, max_latency_ms=500.0)
+    tuned = autotune(params, cfg, sla,
+                     candidates=[("none", {}), ("fora", {"interval": 4})],
+                     num_steps=NUM_STEPS, row_time_ms=(100.0, 1.0),
+                     cfg_scale=2.0, cfg_intervals=(None, 4))
+    assert tuned.policy_name == "fora" and tuned.cfg_interval == 4
+    assert tuned.feasible and tuned.est_latency_ms <= 500.0
+
+
+# ----------------------------------------------------------------------
+# percentile fix
+# ----------------------------------------------------------------------
+
+def test_pct_matches_np_percentile():
+    """Regression: nearest-rank-truncated p95 over 10 samples returned the
+    ~p89 sample; _pct must interpolate exactly like np.percentile."""
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 10, 17, 100):
+        xs = rng.exponential(size=n).tolist()
+        for q in (0.0, 0.5, 0.9, 0.95, 0.99, 1.0):
+            np.testing.assert_allclose(
+                _pct(xs, q), np.percentile(xs, 100 * q), rtol=1e-12)
+    assert _pct([], 0.95) == 0.0
