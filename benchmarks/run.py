@@ -13,8 +13,8 @@ import traceback
 
 def main():
     from benchmarks import (bench_decode_cache, bench_error, bench_memory,
-                            bench_quality, bench_roofline, bench_serving,
-                            bench_speca, bench_speedup)
+                            bench_modalities, bench_quality, bench_roofline,
+                            bench_serving, bench_speca, bench_speedup)
     benches = [
         ("speedup (T/m claim, §III-B)", bench_speedup.run),
         ("error-vs-interval (TaylorSeer/HiCache/FoCa, §III-D3)", bench_error.run),
@@ -23,6 +23,8 @@ def main():
         ("adaptive quality + exact cross-KV (§III-D1, §I-C)", bench_quality.run),
         ("beyond-paper: decode-axis caching", bench_decode_cache.run),
         ("serving throughput vs policy (continuous batching)", bench_serving.run),
+        ("multi-modal caching (image/video/audio + mixed pool)",
+         bench_modalities.run),
         ("roofline table (from dry-run artifacts)", bench_roofline.run),
     ]
     import gc

@@ -67,9 +67,12 @@ class ArchConfig:
 
     # --- DiT (diffusion) ---
     is_dit: bool = False
-    dit_patch_tokens: int = 0        # number of latent patches
+    dit_patch_tokens: int = 0        # latent patches (per frame for video)
     dit_in_dim: int = 0              # patchified latent channel dim
     dit_num_classes: int = 1000
+    # video DiT (factorized spatio-temporal attention): > 0 selects the
+    # repro.models.video_dit backbone over (frames * patch) latent clips
+    dit_num_frames: int = 0
 
     # --- numerics ---
     dtype: str = "bfloat16"          # activation/param dtype on TPU
@@ -91,6 +94,12 @@ class ArchConfig:
     @property
     def is_hybrid(self) -> bool:
         return self.mamba_version > 0 and self.hybrid_attn_every > 0
+
+    @property
+    def dit_tokens(self) -> int:
+        """Total latent tokens per sample: per-frame patches x frames (1 for
+        image/audio DiTs, dit_num_frames for video clips)."""
+        return self.dit_patch_tokens * max(self.dit_num_frames, 1)
 
     @property
     def supports_long_context(self) -> bool:
@@ -128,6 +137,7 @@ class ArchConfig:
             dit_patch_tokens=min(self.dit_patch_tokens, 16) if self.dit_patch_tokens else 0,
             dit_in_dim=min(self.dit_in_dim, 16) if self.dit_in_dim else 0,
             dit_num_classes=min(self.dit_num_classes, 10),
+            dit_num_frames=min(self.dit_num_frames, 4) if self.dit_num_frames else 0,
             sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
             dtype="float32",
             name=self.name + "-smoke",

@@ -29,7 +29,8 @@ from .token import ToCaPolicy
 from .predictive import (BASES, FreqCaPolicy, PredictivePolicy,
                          forecast_from_diffs, update_diff_stack)
 from .static_policies import (DeltaCachePolicy, FasterCacheCFG,
-                              FixedIntervalPolicy, PABPolicy)
+                              FixedIntervalPolicy, PABPolicy, lowpass)
+from .temporal import TemporalPABStack, TemporalTeaCachePolicy
 
 POLICY_REGISTRY = {
     "none": lambda **kw: NoCachePolicy(),
@@ -48,11 +49,20 @@ POLICY_REGISTRY = {
     "toca": lambda interval=4, ratio=0.25, **kw: ToCaPolicy(interval, ratio),
     "clusca": lambda interval=4, k=16, **kw: ClusCaPolicy(interval, k),
     "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
+    # temporal-aware TeaCache for video latent clips: the input-side signal
+    # distance is taken per frame and max-reduced, so motion concentrated in
+    # one frame still refreshes the cache (repro.core.temporal).  `frames`
+    # MUST match the clip's frame count — the serving engine (string path)
+    # and DenoiseWorkload.make_policy inject cfg.dit_num_frames; only bare
+    # make_policy calls fall back to this default.
+    "teacache_video": lambda delta=0.1, frames=4, reduce="max", **kw:
+        TemporalTeaCachePolicy(delta, frames, reduce=reduce),
     # CFG-branch reuse (survey §III-C).  Not a backbone gate: it caches the
     # *unconditional* stream and belongs in CachedDenoiser's `cfg_policy`
-    # slot or DiffusionServingEngine's `cfg_policy` argument.
-    "fastercache_cfg": lambda interval=4, num_steps=50, **kw:
-        FasterCacheCFG(interval, num_steps),
+    # slot or DiffusionServingEngine's `cfg_policy` argument.  mode="lowfreq"
+    # selects the low-frequency cond-residual reconstruction.
+    "fastercache_cfg": lambda interval=4, num_steps=50, mode="extrapolate", **kw:
+        FasterCacheCFG(interval, num_steps, mode=mode),
 }
 
 # Stack-structural methods complete the taxonomy map but are NOT CachePolicy
@@ -66,6 +76,10 @@ POLICY_REGISTRY = {
 STRUCTURAL_POLICIES = {
     "dbcache": DBCacheStack,
     "deepcache": "repro.diffusion.pipeline.CachedDenoiser(granularity='deepcache')",
+    # PAB over a factorized spatio-temporal stack: per-module-type broadcast
+    # ranges (temporal attention reused over the longest range); built with
+    # the video backbone's branch fns (repro.modalities wires it up)
+    "pab_video": TemporalPABStack,
 }
 
 

@@ -61,9 +61,16 @@ class TeaCachePolicy(CachePolicy):
             out = out + a * d**i
         return out
 
+    def _signal_distance(self, sig, prev):
+        """Scalar change metric between consecutive signals (Eq. 22).
+
+        Subclass hook: TemporalTeaCachePolicy (repro.core.temporal) reduces a
+        per-frame distance over the clip's frame axis instead."""
+        return rel_l1(sig, prev)
+
     def apply(self, state, step, x, compute_fn, **signals):
         sig = signals.get("signal", x).astype(jnp.float32)
-        d = self._correct(rel_l1(sig, state["prev_signal"]))
+        d = self._correct(self._signal_distance(sig, state["prev_signal"]))
         acc = state["acc"] + d
         first = state["n"] == 0
         refresh = jnp.logical_or(first, acc >= self.delta)
@@ -89,7 +96,7 @@ class TeaCachePolicy(CachePolicy):
 
     def want_compute(self, state, step, x, **signals):
         sig = signals.get("signal", x).astype(jnp.float32)
-        d = self._correct(rel_l1(sig, state["prev_signal"]))
+        d = self._correct(self._signal_distance(sig, state["prev_signal"]))
         return jnp.logical_or(state["n"] == 0, state["acc"] + d >= self.delta)
 
 

@@ -97,28 +97,79 @@ class PABPolicy(FixedIntervalPolicy):
         self.module_type = module_type
 
 
-class FasterCacheCFG(CachePolicy):
-    """FasterCache's CFG-branch reuse.
+def lowpass(y, cutoff: float, axis: int = -2):
+    """Low-frequency band of `y` along `axis` (FreqCa-style rfft mask)."""
+    n = y.shape[axis]
+    f = jnp.fft.rfft(y.astype(jnp.float32), axis=axis)
+    k = jnp.arange(f.shape[axis])
+    keep = (k <= max(int(cutoff * n // 2), 1)).astype(f.dtype)
+    shape = [1] * y.ndim
+    shape[axis] = f.shape[axis]
+    return jnp.fft.irfft(f * keep.reshape(shape), n=n, axis=axis)
 
-    The unconditional branch output is cached; on reuse steps it is
-    reconstructed as a blend of the two most recent cached outputs with a
-    weight w(t) that increases linearly over the trajectory, preserving the
-    slow drift of the unconditional stream (survey §III-C)."""
+
+class FasterCacheCFG(CachePolicy):
+    """FasterCache's CFG-branch reuse (survey §III-C).
+
+    Two reconstruction modes for the unconditional branch between refreshes:
+
+      "extrapolate" (default) — the uncond output itself is cached; reuse
+        steps blend the two most recent cached outputs with a weight w(t)
+        that increases linearly over the trajectory, preserving the slow
+        drift of the unconditional stream.
+      "lowfreq" — FasterCache's CFG residual observation: the cond and
+        uncond outputs differ mostly in a LOW-frequency residual that drifts
+        slowly across steps, while their high-frequency content is nearly
+        shared.  Refresh steps cache the low band of (eps_cond - eps_uncond)
+        (token-axis rfft, `cutoff`); reuse steps reconstruct the uncond
+        output from the CURRENT conditional output minus that cached
+        residual — eps_u ~= eps_c - lowpass(delta) — so the uncond branch
+        tracks every step's fresh cond structure instead of going stale.
+        Requires `signals["cond_out"]` (the cond-branch output this step);
+        repro.diffusion.pipeline wires it through automatically.
+    """
 
     name = "fastercache_cfg"
 
-    def __init__(self, interval: int, num_steps: int):
+    def __init__(self, interval: int, num_steps: int,
+                 mode: str = "extrapolate", cutoff: float = 0.25):
         assert interval >= 1
+        assert mode in ("extrapolate", "lowfreq")
         self.interval = interval
         self.num_steps = num_steps
+        self.mode = mode
+        self.cutoff = float(cutoff)
 
     def init_state(self, shape, dtype=jnp.float32):
+        if self.mode == "lowfreq":
+            # one tensor regardless of history depth: the cached low band of
+            # the cond-minus-uncond residual (half the extrapolate footprint)
+            return {"delta_low": jnp.zeros(shape, jnp.float32)}
         return {
             "prev": jnp.zeros(shape, dtype),
             "prev2": jnp.zeros(shape, dtype),
         }
 
     def apply(self, state, step, x, compute_fn, **signals):
+        if self.mode == "lowfreq":
+            cond_out = signals.get("cond_out")
+            if cond_out is None:
+                raise ValueError(
+                    "FasterCacheCFG(mode='lowfreq') needs signals['cond_out'] "
+                    "(the conditional branch output this step)")
+
+            def compute(state):
+                y = compute_fn(x)
+                delta = cond_out.astype(jnp.float32) - y.astype(jnp.float32)
+                return y, {"delta_low": lowpass(delta, self.cutoff)}
+
+            def reuse(state):
+                y = cond_out.astype(jnp.float32) - state["delta_low"]
+                return y.astype(x.dtype), state
+
+            return cond_or_static(interval_pred(step, self.interval),
+                                  compute, reuse, state)
+
         def compute(state):
             y = compute_fn(x)
             return y, {"prev": y.astype(state["prev"].dtype), "prev2": state["prev"]}

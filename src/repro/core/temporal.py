@@ -1,0 +1,132 @@
+"""Temporal-aware caching for latents with a frame axis (survey §IV, the
+video-generation scenarios the caching literature was born in).
+
+Image-latent policies treat the token axis as one undifferentiated bag; a
+video clip's tokens carry a (frames, patches) factorization and the two axes
+age differently across denoising steps — motion concentrates change in a few
+frames while the background barely moves.  Two temporal specializations:
+
+  * TemporalTeaCachePolicy — TeaCache whose input-side signal distance is
+    computed PER FRAME and reduced across the frame axis (default: max), so
+    a change concentrated in one frame refreshes the cache that a clip-mean
+    rel-L1 would average away.  Model granularity, fully serving-compatible
+    (uses_signal + want_compute), registered as "teacache_video".
+  * TemporalPABStack — Pyramid Attention Broadcast over a factorized
+    spatio-temporal block stack: each block's spatial-attention,
+    temporal-attention and MLP branch outputs are cached and broadcast over
+    PER-MODULE-TYPE ranges (PABPolicy.RANGES: spatial 2, temporal 4, mlp 4)
+    — temporal attention drifts slowest across steps, so its output is
+    reused over the longest range.  Stack-structural (owns the layer loop,
+    like DBCacheStack), listed in STRUCTURAL_POLICIES as "pab_video".
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .adaptive import TeaCachePolicy
+from .policy import cond_or_static, interval_pred
+from .static_policies import PABPolicy
+
+_EPS = 1e-8
+
+
+class TemporalTeaCachePolicy(TeaCachePolicy):
+    """TeaCache with a per-frame signal reduction (frame-axis-aware Eq. 22).
+
+    `frames` is the clip's frame count F; signals of shape (B, F*P, d) are
+    viewed as (B, F, P*d) and the symmetric rel-L1 is taken per frame, then
+    reduced across frames (`reduce`: "max" — any frame crossing the
+    threshold refreshes — or "mean", which recovers a clip-level average).
+    """
+
+    name = "teacache_video"
+
+    def __init__(self, delta: float, frames: int,
+                 poly: Sequence[float] = (0.0, 1.0), reduce: str = "max"):
+        assert frames >= 1
+        assert reduce in ("max", "mean")
+        super().__init__(delta, poly)
+        self.frames = frames
+        self.reduce = reduce
+
+    def _signal_distance(self, sig, prev):
+        F = self.frames
+        s = sig.reshape(sig.shape[0], F, -1)
+        p = prev.reshape(prev.shape[0], F, -1)
+        num = jnp.sum(jnp.abs(s - p), axis=(0, 2))
+        den = (jnp.sum(jnp.abs(s), axis=(0, 2)) +
+               jnp.sum(jnp.abs(p), axis=(0, 2)) + _EPS)
+        per_frame = num / den
+        if self.reduce == "max":
+            return jnp.max(per_frame)
+        return jnp.mean(per_frame)
+
+
+class TemporalPABStack:
+    """PAB (survey §III-C) over a factorized spatio-temporal block stack.
+
+    branch_fns: ordered mapping {module_type: fn} with
+    fn(layer_params, x, *args) -> the block's gated residual BRANCH output
+    (same shape as x); the block applies x += branch(x) in mapping order.
+    Each branch output is cached per layer and recomputed only at its
+    module-type broadcast range: `intervals[module_type]` steps
+    (PABPolicy.RANGES by default, so temporal attention is broadcast across
+    a longer range than spatial attention).  Step-indexed like every static
+    policy — schedules resolve at trace time for concrete steps.
+    """
+
+    def __init__(self, branch_fns: Mapping[str, Callable], num_layers: int,
+                 ranges: Optional[Mapping[str, int]] = None):
+        assert num_layers >= 1 and branch_fns
+        self.branch_fns = dict(branch_fns)
+        self.num_layers = num_layers
+        src = dict(PABPolicy.RANGES if ranges is None else ranges)
+        self.intervals = {k: int(src[k]) for k in self.branch_fns}
+
+    def init(self, shape, dtype=jnp.float32):
+        one = {k: jnp.zeros(shape, dtype) for k in self.branch_fns}
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None], (self.num_layers,) + a.shape).copy(), one)
+
+    def _branch(self, name, params_l, step, x, cache, args):
+        def compute(x, cache):
+            o = self.branch_fns[name](params_l, x, *args)
+            return o, o.astype(cache.dtype)
+
+        def reuse(x, cache):
+            return cache.astype(x.dtype), cache
+
+        return cond_or_static(interval_pred(step, self.intervals[name]),
+                              compute, reuse, x, cache)
+
+    def __call__(self, states, step, x, stacked_params, *args):
+        """states: per-layer per-branch caches (leading layer axis);
+        x: (B, T, d).  Returns (y, new_states)."""
+
+        def body(carry, inp):
+            x = carry
+            params_l, state_l = inp
+            new_state = {}
+            for name in self.branch_fns:
+                o, new_state[name] = self._branch(name, params_l, step, x,
+                                                  state_l[name], args)
+                x = x + o
+            return x, new_state
+
+        return jax.lax.scan(body, x, (stacked_params, states))
+
+    def static_schedule(self, num_steps: int):
+        """Per-step fraction of branches computing (roofline introspection)."""
+        n = len(self.branch_fns)
+        return [sum(s % iv == 0 for iv in self.intervals.values()) / n
+                for s in range(num_steps)]
+
+    def compute_fraction(self, num_steps: int) -> float:
+        """Fraction of branch evaluations that actually run over a
+        trajectory — PAB's analogue of the survey's 1/speedup."""
+        sched = self.static_schedule(num_steps)
+        return sum(sched) / max(num_steps, 1)

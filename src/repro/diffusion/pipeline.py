@@ -1,8 +1,16 @@
-"""CachedDenoiser — binds repro.core cache policies to the DiT backbone.
+"""CachedDenoiser — binds repro.core cache policies to a DiT backbone.
 
 This is the integration point the whole survey is about: the denoiser is an
 iterative map eps_hat = F(x_t, t, c) and the cache policy decides, per
 (step, module), between COMPUTE / REUSE / FORECAST.
+
+Modalities: every entry point here dispatches on the config — a plain
+isotropic DiT (image latents, audio mel-spectrograms) when
+`cfg.dit_num_frames == 0`, the factorized spatio-temporal video DiT
+(repro.models.video_dit) otherwise.  Latents are always (B, cfg.dit_tokens,
+cfg.dit_in_dim), so the cache/serving stack is modality-agnostic; only the
+backbone forward and the TeaCache signal change underneath
+(repro.modalities wraps this into named workload specs).
 
 Granularities (survey Fig. 2 reuse-granularity axis):
 
@@ -18,10 +26,18 @@ Granularities (survey Fig. 2 reuse-granularity axis):
               is gated as one unit (its "upsampling path").  The adaption of
               DeepCache's U-Net insight to the isotropic DiT stack follows
               Δ-DiT's front/rear analysis.
+  PAB_VIDEO — video backbone only: Pyramid Attention Broadcast with
+              per-module-type ranges — each block's spatial-attention,
+              temporal-attention and MLP branch outputs cached and
+              broadcast over different intervals (temporal the longest);
+              repro.core.temporal.TemporalPABStack owns the layer loop.
 
 Classifier-free guidance (cfg_scale > 0) doubles the compute; the
 `cfg_policy` slot accepts FasterCacheCFG to reuse the unconditional branch
-(survey §III-C).
+(survey §III-C), including its low-frequency cond-residual mode, which
+receives the conditional output via `signals["cond_out"]`.  `null_embed`
+carries negative-prompt conditioning: an arbitrary (d_model,) vector used
+for the unconditional branch instead of the null-class embedding.
 """
 from __future__ import annotations
 
@@ -30,10 +46,45 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import (CachePolicy, CachedStack, NoCachePolicy)
-from repro.models import dit
+from repro.core import (CachePolicy, CachedStack, NoCachePolicy,
+                        TemporalPABStack)
+from repro.models import dit, video_dit
 
 PyTree = Any
+
+
+def backbone_module(cfg):
+    """The backbone module for this config's modality (dit | video_dit)."""
+    return video_dit if cfg.dit_num_frames > 0 else dit
+
+
+def backbone_fns(params, cfg):
+    """(forward_fn, signal_fn) bound to params for this config's modality.
+
+    forward_fn(xs, ts, labels, y_embed=None) -> eps — xs (B, T, D), ts (B,)
+    float timesteps, labels (B,) int32 class conditioning, y_embed (B, d)
+    optional conditioning-vector override (negative prompts).
+    signal_fn(xs, ts, labels) -> the TeaCache modulated input signal.
+    """
+    mod = backbone_module(cfg)
+
+    def forward_fn(xs, ts, labels, y_embed=None):
+        return mod.forward(params, xs, ts.astype(jnp.float32),
+                           labels.astype(jnp.int32), cfg, y_embed=y_embed)
+
+    def signal_fn(xs, ts, labels):
+        h, c = mod.embed_patches(params, xs, ts.astype(jnp.float32),
+                                 labels.astype(jnp.int32), cfg)
+        return mod.modulated_signal(params, h, c, cfg)
+
+    return forward_fn, signal_fn
+
+
+def _null_embed_rows(params, nulls, null_vecs, null_mask):
+    """Per-row unconditional conditioning: the null-class embedding, replaced
+    by the request's negative-prompt vector where `null_mask` is set."""
+    ce = params["class_embed"][nulls.astype(jnp.int32)]
+    return jnp.where(null_mask[:, None], null_vecs.astype(ce.dtype), ce)
 
 
 class CachedDenoiser:
@@ -42,8 +93,8 @@ class CachedDenoiser:
     def __init__(self, params, cfg, policy: Optional[CachePolicy] = None,
                  granularity: str = "model", shallow_n: int = 4,
                  cfg_scale: float = 0.0, cfg_policy: Optional[CachePolicy] = None,
-                 class_label: int = 0):
-        assert granularity in ("model", "block", "deepcache")
+                 class_label: int = 0, null_embed=None):
+        assert granularity in ("model", "block", "deepcache", "pab_video")
         self.params = params
         self.cfg = cfg
         self.policy = policy or NoCachePolicy()
@@ -52,23 +103,38 @@ class CachedDenoiser:
         self.cfg_scale = float(cfg_scale)
         self.cfg_policy = cfg_policy
         self.class_label = class_label
+        # negative-prompt conditioning: an arbitrary (d_model,) vector for the
+        # unconditional branch (None = the model's null-class embedding)
+        self.null_embed = (None if null_embed is None
+                           else jnp.asarray(null_embed, jnp.float32))
+        self._mod = backbone_module(cfg)
         if granularity == "block":
             self._stack = CachedStack(
-                lambda p, x, c: dit.dit_block(p, x, c, cfg),
+                lambda p, x, c: self._block(p, x, c),
                 self.policy, cfg.num_layers)
+        elif granularity == "pab_video":
+            assert cfg.dit_num_frames > 0, \
+                "pab_video granularity needs the factorized video backbone"
+            self._stack = TemporalPABStack(video_dit.pab_branch_fns(cfg),
+                                           cfg.num_layers)
+
+    def _block(self, p, x, c):
+        if self._mod is video_dit:
+            return video_dit.video_block(p, x, c, self.cfg)
+        return dit.dit_block(p, x, c, self.cfg)
 
     # ------------------------------------------------------------------
     def init_state(self, batch: int) -> PyTree:
         cfgm = self.cfg
-        feat = (batch, cfgm.dit_patch_tokens, cfgm.d_model)
-        eps_shape = (batch, cfgm.dit_patch_tokens, cfgm.dit_in_dim)
+        feat = (batch, cfgm.dit_tokens, cfgm.d_model)
+        eps_shape = (batch, cfgm.dit_tokens, cfgm.dit_in_dim)
         if self.granularity == "model":
             try:  # TeaCache tracks an input-side signal of a different shape
                 state = {"policy": self.policy.init_state(
                     eps_shape, signal_shape=feat)}
             except TypeError:
                 state = {"policy": self.policy.init_state(eps_shape)}
-        elif self.granularity == "block":
+        elif self.granularity in ("block", "pab_video"):
             state = {"policy": self._stack.init(feat)}
         else:  # deepcache: one cache over the deep section's hidden output
             state = {"policy": self.policy.init_state(feat)}
@@ -81,22 +147,22 @@ class CachedDenoiser:
         """One conditional forward under the configured granularity.
 
         Returns (eps_hat, new_policy_state)."""
-        params, cfgm = self.params, self.cfg
+        params, cfgm, mod = self.params, self.cfg, self._mod
 
         if self.granularity == "model":
             def compute_fn(lat):
-                return dit.forward(params, lat, t_vec, y, cfgm)
+                return mod.forward(params, lat, t_vec, y, cfgm)
 
             # TeaCache's signal: timestep-modulated first-block input
-            h, c = dit.embed_patches(params, x_lat, t_vec, y, cfgm)
-            sig = dit.modulated_signal(params, h, c, cfgm)
+            h, c = mod.embed_patches(params, x_lat, t_vec, y, cfgm)
+            sig = mod.modulated_signal(params, h, c, cfgm)
             return self.policy.apply(state, step, x_lat, compute_fn,
                                      signal=sig)
 
-        h, c = dit.embed_patches(params, x_lat, t_vec, y, cfgm)
-        if self.granularity == "block":
+        h, c = mod.embed_patches(params, x_lat, t_vec, y, cfgm)
+        if self.granularity in ("block", "pab_video"):
             h, new_state = self._stack(state, step, h, params["blocks"], c)
-            return dit.final_layer(params, h, c, cfgm), new_state
+            return mod.final_layer(params, h, c, cfgm), new_state
 
         # deepcache split
         F = self.shallow_n
@@ -105,14 +171,14 @@ class CachedDenoiser:
 
         def run(h, stacked):
             def body(h, p):
-                return dit.dit_block(p, h, c, cfgm), None
+                return self._block(p, h, c), None
             h, _ = jax.lax.scan(body, h, stacked)
             return h
 
         h = run(h, shallow)
         h, new_state = self.policy.apply(state, step, h,
                                          lambda hh: run(hh, deep))
-        return dit.final_layer(params, h, c, cfgm), new_state
+        return mod.final_layer(params, h, c, cfgm), new_state
 
     # ------------------------------------------------------------------
     def __call__(self, state, step, x_lat, t_vec):
@@ -125,17 +191,25 @@ class CachedDenoiser:
 
         if self.cfg_scale > 0.0:
             y_null = jnp.full((B,), self.cfg.dit_num_classes, jnp.int32)
+            y_embed = (None if self.null_embed is None
+                       else jnp.broadcast_to(self.null_embed[None],
+                                             (B, self.cfg.d_model)))
+            mod = self._mod
+
+            def plain_uncond(lat):
+                return mod.forward(self.params, lat, t_vec, y_null, self.cfg,
+                                   y_embed=y_embed)
+
             if self.cfg_policy is not None:
                 # unconditional branch gated by the CFG policy; its compute_fn
-                # runs a fresh (non-caching) backbone pass
-                def plain_uncond(lat):
-                    return dit.forward(self.params, lat, t_vec, y_null, self.cfg)
-
+                # runs a fresh (non-caching) backbone pass.  cond_out feeds
+                # FasterCacheCFG's low-frequency residual reconstruction.
                 eps_u, cstate = self.cfg_policy.apply(state["cfg"], step, x_lat,
-                                                      plain_uncond)
+                                                      plain_uncond,
+                                                      cond_out=eps_c)
                 new_state["cfg"] = cstate
             else:
-                eps_u = dit.forward(self.params, x_lat, t_vec, y_null, self.cfg)
+                eps_u = plain_uncond(x_lat)
             eps_c = eps_u + self.cfg_scale * (eps_c - eps_u)
 
         return eps_c, new_state
@@ -166,14 +240,15 @@ def slot_denoise_fns(params, cfg, policy: CachePolicy):
           refresh decision without touching the backbone.
 
     x: (T, in_dim) latent tokens; t: scalar model-facing timestep; label:
-    scalar int32 class conditioning.  TeaCache's input-side signal (the
-    AdaLN-modulated first-block input, Eq. 22) is wired through when the
-    policy declares `uses_signal`.
+    scalar int32 class conditioning.  The backbone is the config's modality
+    backbone (image/audio DiT or factorized video DiT); TeaCache's
+    input-side signal (the AdaLN-modulated first-block input, Eq. 22) is
+    wired through when the policy declares `uses_signal`.
     """
+    forward_fn, signal_fn = backbone_fns(params, cfg)
 
     def backbone_fn(xs, ts, labels):
-        return dit.forward(params, xs, ts.astype(jnp.float32),
-                           labels.astype(jnp.int32), cfg)
+        return forward_fn(xs, ts, labels)
 
     def _ctx(x, t, label):
         xb = x[None]
@@ -181,8 +256,7 @@ def slot_denoise_fns(params, cfg, policy: CachePolicy):
         y = jnp.reshape(label, (1,)).astype(jnp.int32)
         if not policy.uses_signal:       # skip-tick cost: don't embed
             return xb, {}
-        h, c = dit.embed_patches(params, xb, t_vec, y, cfg)
-        return xb, {"signal": dit.modulated_signal(params, h, c, cfg)}
+        return xb, {"signal": signal_fn(xb, t_vec, y)}
 
     def apply_fn(state, step, x, t, label, y_full):
         xb, sig = _ctx(x, t, label)
@@ -211,9 +285,11 @@ def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
     uncond rows into one 2S-row batch (slot axis == batch axis), so XLA sees
     a plain batched forward either way.
 
-      backbone2_fn(xs, ts, labels, null_labels) -> (eps_c, eps_u)
+      backbone2_fn(xs, ts, labels, null_labels, null_vecs, null_mask)
           one 2S-row backbone pass over [cond rows; uncond rows], split back
-          into the two S-row branch outputs.
+          into the two S-row branch outputs.  `null_vecs` (S, d_model) with
+          `null_mask` (S,) carry per-slot negative-prompt conditioning
+          vectors that replace the null-class embedding on uncond rows.
       backbone_fn(xs, ts, labels) -> eps_c
           the S-row cond-only pass (from slot_denoise_fns), dispatched on
           ticks where every active slot reuses its cached uncond branch —
@@ -225,6 +301,8 @@ def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
           select, never blended).  `cfg_w` is the slot's trajectory-progress
           weight step/(num_steps-1) — passed from the host because slots run
           different step budgets against one shared FasterCacheCFG instance.
+          The cond-branch output is forwarded to the CFG policy as
+          `cond_out` (FasterCacheCFG's low-frequency residual mode).
           On cond-only / skip ticks the engine passes zeros for the missing
           y_u / y_c rows — safe under the same rule as slot_denoise_fns:
           a dummy row may only reach a branch that the per-slot lax.cond
@@ -235,21 +313,26 @@ def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
           pools never dispatch the 2S-row program.
     """
     uncond_policy = cfg_policy if cfg_policy is not None else NoCachePolicy()
+    forward_fn, _ = backbone_fns(params, cfg)
     backbone_fn, base_apply, base_want = slot_denoise_fns(params, cfg, policy)
 
-    def backbone2_fn(xs, ts, labels, null_labels):
+    def backbone2_fn(xs, ts, labels, null_labels, null_vecs, null_mask):
         S = xs.shape[0]
         x2 = jnp.concatenate([xs, xs], axis=0)
         t2 = jnp.concatenate([ts, ts], axis=0).astype(jnp.float32)
         y2 = jnp.concatenate([labels, null_labels], axis=0).astype(jnp.int32)
-        eps = dit.forward(params, x2, t2, y2, cfg)
+        ce_c = params["class_embed"][labels.astype(jnp.int32)]
+        ce_u = _null_embed_rows(params, null_labels, null_vecs, null_mask)
+        eps = forward_fn(x2, t2, y2,
+                         y_embed=jnp.concatenate([ce_c, ce_u], axis=0))
         return eps[:S], eps[S:]
 
     def apply_fn(state, step, x, t, label, scale, cfg_w, y_c, y_u):
         eps_c, pol_state = base_apply(state["policy"], step, x, t, label, y_c)
         eps_u, cfg_state = uncond_policy.apply(state["cfg"], step, x[None],
                                                lambda _: y_u[None],
-                                               cfg_w=cfg_w)
+                                               cfg_w=cfg_w,
+                                               cond_out=eps_c[None])
         eps_u = eps_u[0]
         eps = jnp.where(scale > 0.0, eps_u + scale * (eps_c - eps_u), eps_c)
         return eps, {"policy": pol_state, "cfg": cfg_state}
@@ -278,12 +361,13 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
     policies want a compute this tick, padded to a power-of-two bucket so the
     jit program count stays bounded (one program per bucket size):
 
-      compact_backbone_fn(xs, tvals, labels, nulls,
+      compact_backbone_fn(xs, tvals, labels, nulls, null_vecs, null_mask,
                           row_slot, row_uncond, row_dest) -> (y_c, y_u)
           `row_slot` (B,) gathers each compacted row's latent/timestep from
-          its source slot; `row_uncond` selects the null label for uncond
-          rows; the backbone runs over the compacted (B, T, D) batch; the
-          scatter writes each row into a (2S+1)-row buffer at `row_dest`
+          its source slot; `row_uncond` selects the null label (or the
+          slot's negative-prompt vector, where `null_mask` is set) for
+          uncond rows; the backbone runs over the compacted (B, T, D) batch;
+          the scatter writes each row into a (2S+1)-row buffer at `row_dest`
           (cond row i -> i, uncond row i -> S + i, padding -> the 2S dump
           row) and splits it back into the S-row `y_c` / `y_u` layout the
           vmapped apply_fn expects.  Rows that were not gathered come back
@@ -299,17 +383,22 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
     B serves every gather pattern of that size.  B is static per program:
     the engine re-pads each tick's row set to the next power of two.
     """
+    forward_fn, _ = backbone_fns(params, cfg)
     (backbone2_fn, backbone_fn, apply_fn, want_cond_fn,
      want_uncond_fn) = slot_cfg_denoise_fns(params, cfg, policy, cfg_policy)
 
-    def compact_backbone_fn(xs, tvals, labels, nulls,
+    def compact_backbone_fn(xs, tvals, labels, nulls, null_vecs, null_mask,
                             row_slot, row_uncond, row_dest):
         S, T, D = xs.shape
         xb = xs[row_slot]
         tb = tvals[row_slot].astype(jnp.float32)
         yb = jnp.where(row_uncond, nulls[row_slot],
                        labels[row_slot]).astype(jnp.int32)
-        eps = dit.forward(params, xb, tb, yb, cfg)
+        # negative-prompt rows: uncond rows of slots carrying a vector
+        ce = _null_embed_rows(params, yb, null_vecs[row_slot],
+                              jnp.logical_and(row_uncond,
+                                              null_mask[row_slot]))
+        eps = forward_fn(xb, tb, yb, y_embed=ce)
         # scatter: padding rows all land in the 2S dump row and are dropped
         buf = jnp.zeros((2 * S + 1, T, D), eps.dtype).at[row_dest].set(eps)
         return buf[:S], buf[S:2 * S]
@@ -318,15 +407,24 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
             want_cond_fn, want_uncond_fn)
 
 
-def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0):
-    """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u)."""
+def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0,
+                   null_embed=None):
+    """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u).
+
+    `null_embed` (d_model,) replaces the null-class embedding with an
+    arbitrary negative-prompt conditioning vector."""
+    forward_fn, _ = backbone_fns(params, cfg)
+    ne = None if null_embed is None else jnp.asarray(null_embed, jnp.float32)
+
     def fn(state, step, x, t_vec):
         B = x.shape[0]
         y_c = jnp.full((B,), class_label, jnp.int32)
         y_u = jnp.full((B,), cfg.dit_num_classes, jnp.int32)
-        e_c = dit.forward(params, x, t_vec, y_c, cfg)
+        e_c = forward_fn(x, t_vec, y_c)
         if cfg_scale <= 0.0:
             return e_c, state
-        e_u = dit.forward(params, x, t_vec, y_u, cfg)
+        ye = None if ne is None else jnp.broadcast_to(ne[None],
+                                                      (B, cfg.d_model))
+        e_u = forward_fn(x, t_vec, y_u, y_embed=ye)
         return e_u + cfg_scale * (e_c - e_u), state
     return fn

@@ -1,0 +1,31 @@
+"""repro.modalities — multi-modal denoise workloads for the cache stack.
+
+The survey's subtitle promises *efficient multi-modal generation*; this
+package is the modality layer that makes the claim testable end-to-end:
+
+  spec     — ModalitySpec / DenoiseWorkload: image latents, video latent
+             clips (frame axis, factorized spatio-temporal backbone), audio
+             mel-spectrograms — each bound to a config + params and turned
+             into the denoise workload the cache policies (repro.core), the
+             cached pipeline (repro.diffusion) and the serving engine
+             (repro.serving.diffusion) already know how to run.
+  serving  — MixedModalityEngine: per-modality sub-pools (token shapes
+             differ, so programs cannot be shared) interleaved tick-by-tick
+             under one scheduler/telemetry umbrella, with per-modality row
+             accounting (MixedTelemetry) and an autotune umbrella
+             (autotune_pools).
+
+Temporal-aware caching lives in repro.core.temporal (TemporalTeaCachePolicy
+= "teacache_video" in the registry; TemporalPABStack = "pab_video" among
+the structural policies), wired to the video backbone via
+DenoiseWorkload.make_policy / .pab_stack.
+"""
+from .serving import MixedModalityEngine, MixedTelemetry, autotune_pools
+from .spec import (MODALITIES, DenoiseWorkload, ModalitySpec, get_modality,
+                   make_workload)
+
+__all__ = [
+    "MODALITIES", "ModalitySpec", "DenoiseWorkload", "get_modality",
+    "make_workload",
+    "MixedModalityEngine", "MixedTelemetry", "autotune_pools",
+]

@@ -1,0 +1,171 @@
+"""Modality specs and denoise workloads.
+
+The survey's subtitle is *Toward Efficient Multi-Modal Generation*: the same
+cache operator (Eq. 14-15) is claimed to accelerate image, video and audio
+diffusion transformers alike (SmoothCache demonstrates exactly this
+cross-modality sweep).  A ModalitySpec pins down what a modality IS for the
+cache/serving stack:
+
+  image — class-conditional latent patches, the plain isotropic DiT
+          (dit-xl): tokens = spatial patches, channels = patchified latent.
+  video — latent clips with a frame axis, the factorized spatio-temporal
+          DiT (dit-video, repro.models.video_dit): tokens = frames x
+          per-frame patches flattened, so the serving stack sees the same
+          (B, T, D) rows; the frame structure lives in the backbone's
+          factorized attention and in the temporal-aware policies
+          (repro.core.temporal).
+  audio — mel-spectrogram latents (dit-audio): tokens = mel time-frames,
+          channels = mel bins, backbone = the plain DiT.  Nothing but the
+          token semantics changes — which is the cross-modality claim.
+
+`DenoiseWorkload` binds a spec to (cfg, params) and hands out the pieces
+the rest of the stack consumes: a CachedDenoiser, a serving engine, the
+exact CFG baseline, and modality-aware policy construction (temporal
+policies need the clip's frame count).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import get_config
+from repro.core import CachePolicy, TemporalPABStack, make_policy
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ModalitySpec:
+    """What a generation modality means to the cache/serving stack."""
+    name: str
+    arch_id: str            # repro.configs registry id of the backbone
+    description: str
+    #: does the latent carry a frame axis (factorized video backbone)?
+    temporal: bool = False
+
+    def config(self, smoke: bool = False):
+        from repro.configs import get_smoke_config
+        return get_smoke_config(self.arch_id) if smoke \
+            else get_config(self.arch_id)
+
+    def validate(self, cfg) -> None:
+        if not cfg.is_dit:
+            raise ValueError(f"modality '{self.name}': config {cfg.name} is "
+                             f"not a DiT")
+        if self.temporal != (cfg.dit_num_frames > 0):
+            raise ValueError(
+                f"modality '{self.name}': temporal={self.temporal} but "
+                f"cfg.dit_num_frames={cfg.dit_num_frames}")
+
+
+MODALITIES: Dict[str, ModalitySpec] = {
+    "image": ModalitySpec(
+        "image", "dit-xl",
+        "class-conditional latent patches, isotropic DiT"),
+    "video": ModalitySpec(
+        "video", "dit-video",
+        "latent clips (frames x patches), factorized spatio-temporal DiT",
+        temporal=True),
+    "audio": ModalitySpec(
+        "audio", "dit-audio",
+        "mel-spectrogram latents (time-frames x mel bins), isotropic DiT"),
+}
+
+
+def get_modality(name: str) -> ModalitySpec:
+    if name not in MODALITIES:
+        raise KeyError(f"unknown modality '{name}'; "
+                       f"available: {sorted(MODALITIES)}")
+    return MODALITIES[name]
+
+
+@dataclass
+class DenoiseWorkload:
+    """A modality bound to concrete (cfg, params): everything the cache and
+    serving layers need to denoise this modality end-to-end."""
+    spec: ModalitySpec
+    cfg: Any
+    params: PyTree
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.spec.validate(self.cfg)
+
+    # -- shapes ---------------------------------------------------------
+    @property
+    def tokens(self) -> int:
+        return self.cfg.dit_tokens
+
+    @property
+    def latent_dim(self) -> int:
+        return self.cfg.dit_in_dim
+
+    @property
+    def frames(self) -> int:
+        return max(self.cfg.dit_num_frames, 1)
+
+    def latent_shape(self, batch: int = 1):
+        return (batch, self.tokens, self.latent_dim)
+
+    def noise(self, key, batch: int = 1):
+        return jax.random.normal(key, self.latent_shape(batch))
+
+    # -- policies -------------------------------------------------------
+    def make_policy(self, name: str, num_steps: int = 50,
+                    **kw) -> CachePolicy:
+        """Registry policy with modality-aware defaults: temporal policies
+        (teacache_video) get this workload's frame count."""
+        if self.spec.temporal:
+            kw.setdefault("frames", self.frames)
+        return make_policy(name, num_steps=num_steps, **kw)
+
+    def pab_stack(self, ranges: Optional[Dict[str, int]] = None
+                  ) -> TemporalPABStack:
+        """The PAB-faithful broadcast over the factorized video backbone:
+        per-module-type ranges, temporal attention reused over the longest
+        one.  Video only (the image/audio DiT has no temporal branch)."""
+        if not self.spec.temporal:
+            raise ValueError(f"modality '{self.spec.name}' has no "
+                             f"factorized temporal branches for PAB")
+        from repro.models import video_dit
+        return TemporalPABStack(video_dit.pab_branch_fns(self.cfg),
+                                self.cfg.num_layers, ranges)
+
+    # -- denoising entry points ----------------------------------------
+    def denoiser(self, policy: Optional[CachePolicy] = None, **kw):
+        """CachedDenoiser over this workload's backbone (single stream)."""
+        from repro.diffusion.pipeline import CachedDenoiser
+        return CachedDenoiser(self.params, self.cfg, policy, **kw)
+
+    def cfg_denoise_fn(self, cfg_scale: float, class_label: int = 0,
+                       null_embed=None):
+        """The exact (uncached) guided baseline for this modality."""
+        from repro.diffusion.pipeline import cfg_denoise_fn
+        return cfg_denoise_fn(self.params, self.cfg, cfg_scale, class_label,
+                              null_embed)
+
+    def engine(self, policy=None, **kw):
+        """A single-modality DiffusionServingEngine over this backbone —
+        one sub-pool of a mixed-modality pool."""
+        from repro.serving.diffusion import DiffusionServingEngine
+        return DiffusionServingEngine(self.params, self.cfg, policy, **kw)
+
+
+def make_workload(name: str, cfg=None, params=None, *, smoke: bool = False,
+                  seed: int = 0, perturb: bool = True) -> DenoiseWorkload:
+    """Build a modality workload: registry spec + config + (fresh) params.
+
+    cfg/params default to the spec's registered config (smoke variant when
+    `smoke`) and freshly initialised weights; `perturb` replaces the
+    AdaLN-zero-initialised leaves so an untrained backbone doesn't output
+    exactly zero (repro.models.perturb_zero_init)."""
+    from repro.models import init_params, perturb_zero_init
+    spec = get_modality(name)
+    cfg = cfg if cfg is not None else spec.config(smoke=smoke)
+    if params is None:
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        if perturb:
+            params = perturb_zero_init(params, seed)
+    return DenoiseWorkload(spec, cfg, params)

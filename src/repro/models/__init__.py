@@ -6,13 +6,15 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
-from . import dit, encdec, layers, mla, moe, ssm, transformer
+from . import dit, encdec, layers, mla, moe, ssm, transformer, video_dit
 from .transformer import decode_step, forward, init_cache, init_lm, prefill
 
 
 def init_params(key, cfg, dtype=None):
     """Initialize any architecture in the zoo."""
     if cfg.is_dit:
+        if cfg.dit_num_frames > 0:
+            return video_dit.init_video_dit(key, cfg, dtype)
         return dit.init_dit(key, cfg, dtype)
     if cfg.is_encoder_decoder:
         return encdec.init_encdec(key, cfg, dtype)

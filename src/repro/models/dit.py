@@ -55,12 +55,17 @@ def init_dit(key, cfg, dtype=None):
     }
 
 
-def condition(params, t, y, cfg):
-    """(B,) timestep + (B,) class -> (B, d) conditioning vector."""
+def condition(params, t, y, cfg, y_embed=None):
+    """(B,) timestep + (B,) class -> (B, d) conditioning vector.
+
+    `y_embed` (B, d) overrides the class-embedding lookup with an arbitrary
+    conditioning vector — the negative-prompt path: a guided request's null
+    conditioning need not be the model's null-class embedding."""
     te = timestep_embedding(t.astype(jnp.float32), cfg.d_model)
     te = jax.nn.silu(te.astype(params["t_mlp1"].dtype) @ params["t_mlp1"])
     te = te @ params["t_mlp2"]
-    return te + params["class_embed"][y]
+    ce = params["class_embed"][y] if y_embed is None else y_embed
+    return te + ce.astype(te.dtype)
 
 
 def _modulate(x, shift, scale):
@@ -96,11 +101,11 @@ def modulated_signal(params, x, c, cfg):
                                 jnp.zeros((d,), x.dtype)), s1, sc1)
 
 
-def embed_patches(params, latents, t, y, cfg):
+def embed_patches(params, latents, t, y, cfg, y_embed=None):
     x = latents @ params["patch_in"]
     T = x.shape[1]
     x = x + sinusoidal_positions(jnp.arange(T)[None], cfg.d_model).astype(x.dtype)
-    c = condition(params, t, y, cfg)
+    c = condition(params, t, y, cfg, y_embed)
     return x, c
 
 
@@ -113,9 +118,9 @@ def final_layer(params, x, c, cfg):
     return h @ params["patch_out"]
 
 
-def forward(params, latents, t, y, cfg, *, remat=False):
+def forward(params, latents, t, y, cfg, *, y_embed=None, remat=False):
     """latents: (B, T, in_dim); t: (B,); y: (B,) -> noise prediction."""
-    x, c = embed_patches(params, latents, t, y, cfg)
+    x, c = embed_patches(params, latents, t, y, cfg, y_embed)
     ckpt = jax.checkpoint if remat else (lambda f: f)
 
     @ckpt

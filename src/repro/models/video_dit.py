@@ -1,0 +1,195 @@
+"""Factorized spatio-temporal DiT (Latte / OpenSora style) — the video
+backbone for the survey's multi-modal caching claims.
+
+A latent *clip* carries `F = cfg.dit_num_frames` frames of
+`P = cfg.dit_patch_tokens` patches each, flattened to (B, F*P, in_dim) so
+the cache/serving stack sees the same (batch, tokens, channels) layout as
+the image DiT.  Each block factorizes attention along the two axes:
+
+  spatial attention   — over the P patches of each frame (frames folded
+                        into the batch axis),
+  temporal attention  — over the F frames at each patch position (patches
+                        folded into the batch axis),
+  MLP                 — pointwise, axis-agnostic,
+
+each branch AdaLN-zero gated (9 modulation vectors per block).  The three
+branch functions are exposed separately (`spatial_branch` /
+`temporal_branch` / `mlp_branch`) because Pyramid Attention Broadcast
+caches them at *different* intervals — temporal attention output drifts
+slowest across denoising steps, so it is broadcast over the longest range
+(repro.core.temporal.TemporalPABStack).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dit import _modulate, condition
+from .encdec import sinusoidal_positions
+from .layers import blocked_attention, dense_init, init_mlp, layer_norm, \
+    mlp_forward
+
+#: the three PAB module types of a factorized block, in execution order
+BRANCHES = ("spatial_attn", "temporal_attn", "mlp")
+
+
+def _init_attn(key, d, H, hd, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"wq": dense_init(k1, d, H * hd, dtype),
+            "wk": dense_init(k1, d, H * hd, dtype),
+            "wv": dense_init(k2, d, H * hd, dtype),
+            "wo": dense_init(k2, H * hd, d, dtype)}
+
+
+def _init_video_block(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "spatial": _init_attn(ks[0], d, H, hd, dtype),
+        "temporal": _init_attn(ks[1], d, H, hd, dtype),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype, gated=False),
+        # AdaLN-zero: 3 branches x (shift, scale, gate); gates init to zero
+        "ada_w": jnp.zeros((d, 9 * d), dtype),
+        "ada_b": jnp.zeros((9 * d,), dtype),
+    }
+
+
+def init_video_dit(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    L, d = cfg.num_layers, cfg.d_model
+    bkeys = jax.random.split(ks[0], L)
+    return {
+        "patch_in": dense_init(ks[1], cfg.dit_in_dim, d, dtype),
+        "t_mlp1": dense_init(ks[2], d, d, dtype),
+        "t_mlp2": dense_init(ks[3], d, d, dtype),
+        "class_embed": jax.random.normal(ks[4], (cfg.dit_num_classes + 1, d),
+                                         dtype) * 0.02,
+        "blocks": jax.vmap(lambda k: _init_video_block(k, cfg, dtype))(bkeys),
+        "final_ada_w": jnp.zeros((d, 2 * d), dtype),
+        "final_ada_b": jnp.zeros((2 * d,), dtype),
+        "patch_out": dense_init(ks[5], d, cfg.dit_in_dim, dtype, scale=0.0),
+    }
+
+
+def _mod9(p, c):
+    """The block's 9 modulation vectors, grouped per branch."""
+    mod = jax.nn.silu(c) @ p["ada_w"] + p["ada_b"]
+    parts = jnp.split(mod, 9, axis=-1)
+    return {"spatial_attn": parts[0:3], "temporal_attn": parts[3:6],
+            "mlp": parts[6:9]}
+
+
+def _attend(ap, h, fold, unfold, cfg):
+    """One factorized attention: fold an axis into batch, attend, unfold."""
+    hf = fold(h)
+    B, T, _ = hf.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = (hf @ ap["wq"]).reshape(B, T, H, hd)
+    k = (hf @ ap["wk"]).reshape(B, T, H, hd)
+    v = (hf @ ap["wv"]).reshape(B, T, H, hd)
+    o = blocked_attention(q, k, v, causal=False)
+    return unfold(o.reshape(B, T, H * hd) @ ap["wo"])
+
+
+def _norm_mod(x, shift, scale, cfg):
+    d = cfg.d_model
+    return _modulate(layer_norm(x, jnp.ones((d,), x.dtype),
+                                jnp.zeros((d,), x.dtype)), shift, scale)
+
+
+def spatial_branch(p, x, c, cfg):
+    """Gated spatial-attention residual: attention over the P patches of each
+    frame.  x: (B, F*P, d)."""
+    B, T, d = x.shape
+    F = cfg.dit_num_frames
+    P = T // F
+    s, sc, g = _mod9(p, c)["spatial_attn"]
+    h = _norm_mod(x, s, sc, cfg)
+    o = _attend(p["spatial"], h,
+                lambda a: a.reshape(B * F, P, d),
+                lambda a: a.reshape(B, F * P, d), cfg)
+    return g[:, None, :] * o
+
+
+def temporal_branch(p, x, c, cfg):
+    """Gated temporal-attention residual: attention over the F frames at each
+    patch position."""
+    B, T, d = x.shape
+    F = cfg.dit_num_frames
+    P = T // F
+    s, sc, g = _mod9(p, c)["temporal_attn"]
+    h = _norm_mod(x, s, sc, cfg)
+    o = _attend(
+        p["temporal"], h,
+        lambda a: a.reshape(B, F, P, d).transpose(0, 2, 1, 3).reshape(B * P, F, d),
+        lambda a: a.reshape(B, P, F, d).transpose(0, 2, 1, 3).reshape(B, F * P, d),
+        cfg)
+    return g[:, None, :] * o
+
+
+def mlp_branch(p, x, c, cfg):
+    s, sc, g = _mod9(p, c)["mlp"]
+    return g[:, None, :] * mlp_forward(p["mlp"], _norm_mod(x, s, sc, cfg))
+
+
+BRANCH_FNS = {"spatial_attn": spatial_branch, "temporal_attn": temporal_branch,
+              "mlp": mlp_branch}
+
+
+def pab_branch_fns(cfg):
+    """The factorized branches bound to `cfg`, keyed by PAB module type —
+    the single source for TemporalPABStack construction (pipeline's
+    pab_video granularity and DenoiseWorkload.pab_stack both use it)."""
+    return {name: (lambda p, x, c, fn=fn: fn(p, x, c, cfg))
+            for name, fn in BRANCH_FNS.items()}
+
+
+def video_block(p, x, c, cfg):
+    """One factorized block: the three gated residual branches in order."""
+    for name in BRANCHES:
+        x = x + BRANCH_FNS[name](p, x, c, cfg)
+    return x
+
+
+def embed_patches(params, latents, t, y, cfg, y_embed=None):
+    """(B, F*P, in_dim) -> tokens with factorized positions + conditioning."""
+    x = latents @ params["patch_in"]
+    F = cfg.dit_num_frames
+    P = x.shape[1] // F
+    d = cfg.d_model
+    spat = sinusoidal_positions(jnp.arange(P)[None], d)          # (1, P, d)
+    temp = sinusoidal_positions(jnp.arange(F)[None], d)          # (1, F, d)
+    pos = (jnp.tile(spat, (1, F, 1)) +
+           jnp.repeat(temp, P, axis=1))                          # (1, F*P, d)
+    x = x + pos.astype(x.dtype)
+    c = condition(params, t, y, cfg, y_embed)
+    return x, c
+
+
+def modulated_signal(params, x, c, cfg):
+    """TeaCache's input-side signal for the video backbone: the first block's
+    spatial-branch modulated input (the analogue of dit.modulated_signal)."""
+    p0 = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    s, sc, _ = _mod9(p0, c)["spatial_attn"]
+    return _norm_mod(x, s, sc, cfg)
+
+
+def final_layer(params, x, c, cfg):
+    mod = jax.nn.silu(c) @ params["final_ada_w"] + params["final_ada_b"]
+    s, sc = jnp.split(mod, 2, axis=-1)
+    return _norm_mod(x, s, sc, cfg) @ params["patch_out"]
+
+
+def forward(params, latents, t, y, cfg, *, y_embed=None, remat=False):
+    """latents: (B, F*P, in_dim); t: (B,); y: (B,) -> noise prediction."""
+    x, c = embed_patches(params, latents, t, y, cfg, y_embed)
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    @ckpt
+    def body(x, p):
+        return video_block(p, x, c, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return final_layer(params, x, c, cfg)

@@ -27,15 +27,15 @@ carries its own cache state (repro.core.SlotBatchedPolicy):
                preempted-request accounting, cache bytes per slot
 """
 from .autotune import SLA, TunedPolicy, autotune, autotune_traffic_classes
-from .engine import (DiffusionResult, DiffusionServingEngine, compact_rows,
-                     request_noise_key)
+from .engine import (DiffusionResult, DiffusionServingEngine, ServeSession,
+                     compact_rows, request_noise_key)
 from .scheduler import DiffusionRequest, Slot, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
 
 __all__ = [
     "SLA", "TunedPolicy", "autotune", "autotune_traffic_classes",
-    "DiffusionResult", "DiffusionServingEngine", "compact_rows",
-    "request_noise_key",
+    "DiffusionResult", "DiffusionServingEngine", "ServeSession",
+    "compact_rows", "request_noise_key",
     "DiffusionRequest", "Slot", "SlotScheduler",
     "RequestRecord", "ServingTelemetry",
 ]

@@ -128,7 +128,7 @@ def calibration_reference(params, cfg, num_steps: int, batch: int = 1,
     sched = noise_schedule or linear_schedule(1000)
     ts = sched.spaced(num_steps)
     xT = jax.random.normal(jax.random.PRNGKey(seed),
-                           (batch, cfg.dit_patch_tokens, cfg.dit_in_dim))
+                           (batch, cfg.dit_tokens, cfg.dit_in_dim))
     exact, _ = sample(cfg_denoise_fn(params, cfg, cfg_scale, class_label),
                       xT, ts, sched, step_fn=ddim_step)
     return sched, ts, xT, np.asarray(exact)

@@ -25,18 +25,28 @@ dispatches a 1-row bucket, not a whole-pool batch, and a mixed
 guided/unguided pool pays per uncond row instead of doubling the batch
 whenever any slot refreshes its CFG branch.
 
-`row_compaction=False` restores the PR-3 dense engine — one of exactly
-three whole-pool programs per tick (tick_full over 2S rows, tick_cond_only
-over S rows, tick_skip) — kept as the equivalence/benchmark baseline; the
+`row_compaction=False` restores the dense engine — one of exactly three
+whole-pool programs per tick (tick_full over 2S rows, tick_cond_only over S
+rows, tick_skip) — kept as the equivalence/benchmark baseline; the
 compacted engine must reproduce its per-request outputs exactly
 (tests/test_serving_compaction.py).  The tick *kinds* full/cond/skip are
 still reported either way; under compaction they classify which branches
 the gathered rows came from while the row counters carry the real cost.
 
+Modalities: the engine serves whatever backbone the config selects —
+image/audio DiT or the factorized video DiT (`cfg.dit_num_frames > 0`);
+latent rows are (cfg.dit_tokens, cfg.dit_in_dim) either way.  One engine
+instance hosts ONE modality (token shapes must agree across slots);
+repro.modalities.MixedModalityEngine runs several engines as per-modality
+sub-pools under one scheduler/telemetry umbrella by driving the
+tick-granular `ServeSession` API below instead of the blocking `serve()`.
+
 CFG doubles backbone cost; FasterCacheCFG(interval=N) drops each slot's
 uncond row from (N-1)/N of its backbone ticks — serving throughput lands
 between 1x and 2x of naive two-branch serving
-(benchmarks/bench_serving.py --cfg).
+(benchmarks/bench_serving.py --cfg).  A request's `null_label` may be an
+arbitrary conditioning VECTOR (negative prompt) instead of a class id; the
+engine threads it through the uncond rows as a per-slot embedding override.
 
 Host side, the SlotScheduler refills finished slots from the admission
 queue mid-flight.  Refill resets the slot's combined cache state — main
@@ -123,6 +133,187 @@ class DiffusionResult:
     record: RequestRecord
 
 
+class ServeSession:
+    """One in-flight batch of requests, advanced one tick at a time.
+
+    `DiffusionServingEngine.serve()` drives a session to completion; the
+    mixed-modality engine (repro.modalities) interleaves the sessions of
+    several per-modality sub-pools under one umbrella by calling `tick()`
+    round-robin and `finish()` once every session reports `done`."""
+
+    def __init__(self, engine: "DiffusionServingEngine",
+                 requests: Sequence[DiffusionRequest],
+                 telemetry: Optional[ServingTelemetry] = None):
+        for r in requests:
+            if r.num_steps > engine.max_steps:
+                raise ValueError(f"request {r.request_id}: num_steps="
+                                 f"{r.num_steps} > max_steps={engine.max_steps}")
+            # reject malformed null-conditioning vectors before any work
+            # runs, not at admission deep inside a tick
+            if r.null_label is not None and np.ndim(r.null_label) > 0:
+                shape = np.shape(r.null_label)
+                if shape != (engine.cfg.d_model,):
+                    raise ValueError(
+                        f"request {r.request_id}: null_label vector shape "
+                        f"{shape} != (d_model={engine.cfg.d_model},)")
+        # per-slot timestep/conditioning tables live on the engine, so two
+        # interleaved sessions of one engine would corrupt each other
+        if engine._session_active:
+            raise RuntimeError(
+                "engine already has a session in flight; finish() it first "
+                "(use one engine per modality sub-pool, never shared)")
+        engine._session_active = True
+        self.engine = engine
+        self.requests = list(requests)
+        self.tele = telemetry if telemetry is not None else ServingTelemetry()
+        self.tele.cache_state_bytes_per_slot = cache_state_bytes(engine._fresh)
+        self.tele.start()
+
+        self.sched = SlotScheduler(engine.slots, engine.align)
+        now = time.perf_counter
+        self.recs: Dict[int, RequestRecord] = {
+            r.request_id: RequestRecord(r.request_id, r.num_steps,
+                                        r.traffic_class,
+                                        cfg_scale=r.cfg_scale,
+                                        modality=r.modality,
+                                        enqueue_time=now())
+            for r in requests}
+        self.sched.submit_all(requests)
+
+        T, D = engine.tokens, engine.in_dim
+        self.xs = jnp.zeros((engine.slots, T, D), jnp.float32)
+        self.states = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (engine.slots,) + a.shape).copy(),
+            engine._fresh)
+        # device-resident negative-prompt tables: (slots, d_model) is the
+        # one per-slot operand that grows with the model, so it is uploaded
+        # only when admission changes it, not on every tick
+        self._null_vecs = jnp.asarray(engine._null_vecs)
+        self._null_mask = jnp.asarray(engine._null_mask)
+        self.results: Dict[int, DiffusionResult] = {}
+        self.ticks = 0
+        self._finished = False
+
+    @property
+    def done(self) -> bool:
+        return self.sched.idle()
+
+    # ------------------------------------------------------------------
+    def tick(self) -> None:
+        """One engine tick: refill free slots, plan the wanted rows,
+        dispatch the matching program, advance and harvest."""
+        if self._finished:
+            raise RuntimeError("session already finished; the engine's "
+                               "per-slot tables may belong to a new session")
+        eng, sched, tele = self.engine, self.sched, self.tele
+        now = time.perf_counter
+        T, D = eng.tokens, eng.in_dim
+
+        # -- refill free slots from the queue (phase-aligned) -------
+        admitted = sched.admit(self.ticks)
+        for slot, req in admitted:
+            noise = jax.random.normal(request_noise_key(req), (T, D))
+            self.xs, self.states = eng._refill(self.xs, self.states,
+                                               slot.index, noise, eng._fresh)
+            eng._install_request(slot.index, req)
+            rec = self.recs[req.request_id]
+            rec.admit_time = now()
+            rec.admit_tick = self.ticks
+            rec.slot = slot.index
+        if admitted:
+            self._null_vecs = jnp.asarray(eng._null_vecs)
+            self._null_mask = jnp.asarray(eng._null_mask)
+
+        active = np.asarray(sched.active_mask())
+        steps = np.asarray(sched.steps(), np.int32)
+        idx = np.minimum(steps, eng.max_steps - 1)
+        rows = np.arange(eng.slots)
+        tvals = eng._tv[rows, idx]
+        ab_t = eng._ab[rows, idx]
+        ab_n = eng._ab[rows, idx + 1]
+        # per-slot trajectory-progress weight for FasterCacheCFG's blend
+        cfg_ws = idx.astype(np.float32) / np.maximum(eng._nsteps - 1, 1)
+
+        want_c = eng._plan(self.states, idx, self.xs, tvals) & active
+        want_u = eng._plan_uncond(self.states, idx, self.xs) & active
+        n_c, n_u = int(want_c.sum()), int(want_u.sum())
+        if n_u:
+            kind = "full"          # some slot refreshes its uncond cache
+        elif n_c:
+            kind = "cond"          # cond-branch rows only
+        else:
+            kind = "skip"
+        # rows a dense whole-pool tick of this kind dispatches (the dense
+        # engine's actual batch; also what row compaction saves against)
+        dense_rows = {"full": 2 * eng.slots, "cond": eng.slots,
+                      "skip": 0}[kind]
+        args = (self.states, jnp.asarray(idx), self.xs, jnp.asarray(tvals),
+                jnp.asarray(eng._labels), jnp.asarray(eng._nulls),
+                self._null_vecs, self._null_mask,
+                jnp.asarray(eng._scales), jnp.asarray(cfg_ws),
+                jnp.asarray(ab_t), jnp.asarray(ab_n))
+        if eng.row_compaction:
+            bucket, row_slot, row_uncond, row_dest = compact_rows(
+                want_c, want_u, eng.slots)
+            t0 = now()
+            self.xs, self.states = eng._compact_tick(bucket)(
+                *args, jnp.asarray(row_slot), jnp.asarray(row_uncond),
+                jnp.asarray(row_dest))
+            self.xs.block_until_ready()
+            tele.record_tick(kind, now() - t0,
+                             rows_computed=n_c + n_u,
+                             rows_padding=bucket - (n_c + n_u),
+                             rows_saved=dense_rows - (n_c + n_u))
+        else:
+            t0 = now()
+            self.xs, self.states = eng._ticks[kind](*args)
+            self.xs.block_until_ready()
+            tele.record_tick(kind, now() - t0, rows_computed=dense_rows)
+        # uncond accounting in rows actually refreshing a CFG cache: a
+        # dense full tick used to add `slots`, over-counting inactive and
+        # unguided slots into the autotuner's row cost
+        tele.uncond_rows_computed += n_u
+        tele.uncond_rows_saved += int(
+            (active & eng._guided & ~want_u).sum())
+
+        for slot in sched.slots:
+            if slot.busy and want_c[slot.index]:
+                self.recs[slot.request.request_id].computed_steps += 1
+            if slot.busy and want_u[slot.index]:
+                self.recs[slot.request.request_id].uncond_computed_steps += 1
+
+        # -- advance + harvest finished slots -----------------------
+        sched.advance()
+        for slot, req in sched.harvest():
+            rec = self.recs[req.request_id]
+            rec.finish_time = now()
+            rec.finish_tick = self.ticks + 1
+            tele.finish_request(rec)
+            self.results[req.request_id] = DiffusionResult(
+                req.request_id, np.asarray(self.xs[slot.index]), rec)
+
+        self.ticks += 1
+
+    # ------------------------------------------------------------------
+    def finish(self) -> List[DiffusionResult]:
+        """Close the session: preempted accounting, telemetry stop, results
+        in request order.  Idempotent."""
+        if not self._finished:
+            # requests cut off before completion (mid-flight or still
+            # queued) are reported as preempted, never silently dropped with
+            # half-filled records poisoning the latency aggregates
+            for r in self.requests:
+                if r.request_id not in self.results:
+                    self.tele.preempt_request(self.recs[r.request_id])
+            self.tele.stop()
+            self.engine.telemetry = self.tele
+            self.engine._session_active = False
+            self._finished = True
+        return [self.results[r.request_id] for r in self.requests
+                if r.request_id in self.results]
+
+
 class DiffusionServingEngine:
     """Fixed-slot continuous-batching server over one DiT backbone."""
 
@@ -137,16 +328,20 @@ class DiffusionServingEngine:
         self.max_steps = max_steps
         self.row_compaction = bool(row_compaction)
         self.sched = noise_schedule or linear_schedule(1000)
+        # string-built policies get the engine's actual geometry: num_steps
+        # for step-indexed curves (magcache), frames for the temporal
+        # policies (teacache_video's per-frame reduction must group by the
+        # CONFIG's frame count, not the registry default)
+        policy_kw = {"num_steps": max_steps}
+        if cfg.dit_num_frames > 0:
+            policy_kw["frames"] = cfg.dit_num_frames
         if isinstance(policy, str):
-            # num_steps=max_steps on BOTH string paths: the main policy used
-            # to be built bare, so e.g. policy="magcache" got a gamma curve
-            # sized for the registry default 50 steps regardless of max_steps
-            policy = make_policy(policy, num_steps=max_steps)
+            policy = make_policy(policy, **policy_kw)
         self.policy = policy if policy is not None else make_policy("none")
         # uncond-branch gate for guided requests; None = naive two-branch
         # serving (every guided slot recomputes its uncond row each step)
         if isinstance(cfg_policy, str):
-            cfg_policy = make_policy(cfg_policy, num_steps=max_steps)
+            cfg_policy = make_policy(cfg_policy, **policy_kw)
         self.cfg_policy = cfg_policy
         # phase-aligned admission: default to the lcm of the two compute
         # intervals so both branches' refreshes land on shared ticks
@@ -158,7 +353,10 @@ class DiffusionServingEngine:
                 if cfg_policy is not None else 1
             self.align = a * b // math.gcd(a, b)
 
-        T, D = cfg.dit_patch_tokens, cfg.dit_in_dim
+        # latent row shape for this engine's modality (video folds the frame
+        # axis into the token axis: dit_tokens = frames * per-frame patches)
+        self.tokens, self.in_dim = cfg.dit_tokens, cfg.dit_in_dim
+        T, D = self.tokens, self.in_dim
         self._feat = (1, T, D)                      # per-slot policy feature
         self._sig_shape = (1, T, cfg.d_model)       # TeaCache signal shape
         self.batched = SlotBatchedPolicy(self.policy, slots)
@@ -189,12 +387,13 @@ class DiffusionServingEngine:
             return x_next, states
 
         def make_tick(mode: str):
-            """Dense whole-pool programs (PR-3 baseline, row_compaction=False):
+            """Dense whole-pool programs (row_compaction=False baseline):
             the backbone runs OUTSIDE vmap over S or 2S rows."""
-            def tick(states, steps, xs, tvals, labels, nulls, scales, cfg_ws,
-                     ab_t, ab_n):
+            def tick(states, steps, xs, tvals, labels, nulls, null_vecs,
+                     null_mask, scales, cfg_ws, ab_t, ab_n):
                 if mode == "full":
-                    y_c, y_u = backbone2_fn(xs, tvals, labels, nulls)
+                    y_c, y_u = backbone2_fn(xs, tvals, labels, nulls,
+                                            null_vecs, null_mask)
                 elif mode == "cond":
                     y_c, y_u = backbone_fn(xs, tvals, labels), jnp.zeros_like(xs)
                 else:
@@ -209,12 +408,14 @@ class DiffusionServingEngine:
             scatter restores the S-row y_c / y_u layout (missing rows zero —
             they only reach branches the per-slot select discards).  All
             index operands are traced, so this compiles once per bucket."""
-            def tick(states, steps, xs, tvals, labels, nulls, scales, cfg_ws,
-                     ab_t, ab_n, row_slot, row_uncond, row_dest):
+            def tick(states, steps, xs, tvals, labels, nulls, null_vecs,
+                     null_mask, scales, cfg_ws, ab_t, ab_n,
+                     row_slot, row_uncond, row_dest):
                 if bucket == 0:
                     y_c = y_u = jnp.zeros_like(xs)
                 else:
                     y_c, y_u = compact_backbone_fn(xs, tvals, labels, nulls,
+                                                   null_vecs, null_mask,
                                                    row_slot, row_uncond,
                                                    row_dest)
                 return slot_step(states, steps, xs, tvals, labels, scales,
@@ -261,11 +462,16 @@ class DiffusionServingEngine:
         self._tv = np.zeros((slots, max_steps), np.float32)
         self._labels = np.zeros((slots,), np.int32)
         self._nulls = np.full((slots,), cfg.dit_num_classes, np.int32)
+        # negative-prompt conditioning vectors (per slot) + their mask
+        self._null_vecs = np.zeros((slots, cfg.d_model), np.float32)
+        self._null_mask = np.zeros((slots,), bool)
         self._scales = np.zeros((slots,), np.float32)
         self._nsteps = np.ones((slots,), np.int32)
         self._guided = np.zeros((slots,), bool)
         #: ServingTelemetry of the most recent serve() call
         self.telemetry: Optional[ServingTelemetry] = None
+        # guards the one-live-session invariant (see ServeSession)
+        self._session_active = False
 
     def _compact_tick(self, bucket: int):
         """The jit'd row-compacted program for one bucket size (lazy; at most
@@ -281,18 +487,21 @@ class DiffusionServingEngine:
         Row compaction spreads the engine across one program per bucket size;
         without warmup each first-seen bucket pays its XLA compile inside a
         live tick (state-dependent policies like TeaCache surface new bucket
-        sizes mid-run, long after admission warmed the common ones).  Serving
-        benchmarks call this so steady-state throughput is measured."""
+        sizes mid-run, long after admission warmed the common ones).  The
+        mixed-modality engine calls this on every sub-pool so the first
+        mixed tick doesn't pay several modality-shaped compiles at once."""
         S = self.slots
-        T, D = self.cfg.dit_patch_tokens, self.cfg.dit_in_dim
+        T, D = self.tokens, self.in_dim
         xs = jnp.zeros((S, T, D), jnp.float32)
         states = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (S,) + a.shape).copy(),
             self._fresh)
         zi = jnp.zeros((S,), jnp.int32)
         zf = jnp.zeros((S,), jnp.float32)
+        nv = jnp.zeros((S, self.cfg.d_model), jnp.float32)
+        nm = jnp.zeros((S,), bool)
         ab = jnp.full((S,), 0.5, jnp.float32)
-        args = (states, zi, xs, zf, zi, zi, zf, zf, ab, ab)
+        args = (states, zi, xs, zf, zi, zi, nv, nm, zf, zf, ab, ab)
         if not self.row_compaction:
             for fn in self._ticks.values():
                 fn(*args)[0].block_until_ready()
@@ -329,8 +538,24 @@ class DiffusionServingEngine:
         self._tv[slot, :] = 0.0
         self._tv[slot, :req.num_steps] = ts.astype(np.float32)
         self._labels[slot] = req.class_label
-        self._nulls[slot] = (req.null_label if req.null_label is not None
-                             else self.cfg.dit_num_classes)
+        null = req.null_label
+        self._null_vecs[slot, :] = 0.0
+        self._null_mask[slot] = False
+        if null is None:
+            self._nulls[slot] = self.cfg.dit_num_classes
+        elif np.ndim(null) == 0:
+            self._nulls[slot] = int(null)
+        else:
+            # negative prompt: an arbitrary conditioning vector overrides the
+            # class-embedding lookup on this slot's uncond rows
+            vec = np.asarray(null, np.float32)
+            if vec.shape != (self.cfg.d_model,):
+                raise ValueError(
+                    f"request {req.request_id}: null_label vector shape "
+                    f"{vec.shape} != (d_model={self.cfg.d_model},)")
+            self._nulls[slot] = self.cfg.dit_num_classes
+            self._null_vecs[slot, :] = vec
+            self._null_mask[slot] = True
         self._scales[slot] = req.cfg_scale
         self._nsteps[slot] = req.num_steps
         self._guided[slot] = req.guided
@@ -354,129 +579,31 @@ class DiffusionServingEngine:
                                             jnp.asarray(self._guided)))
 
     # ------------------------------------------------------------------
+    def start_session(self, requests: Sequence[DiffusionRequest],
+                      telemetry: Optional[ServingTelemetry] = None
+                      ) -> ServeSession:
+        """Begin a tick-granular serving session (see ServeSession).
+
+        At most ONE session per engine may be in flight (enforced): the
+        per-slot timestep/conditioning tables live on the engine.
+        Interleaving across engines (the mixed-modality pool) is fine."""
+        return ServeSession(self, requests, telemetry)
+
     def serve(self, requests: Sequence[DiffusionRequest],
               telemetry: Optional[ServingTelemetry] = None,
               max_ticks: Optional[int] = None) -> List[DiffusionResult]:
         """Run every request through the slot pool; returns results in
         request order.  With max_ticks, unfinished requests are recorded as
         preempted in telemetry (never silently dropped)."""
-        for r in requests:
-            if r.num_steps > self.max_steps:
-                raise ValueError(f"request {r.request_id}: num_steps="
-                                 f"{r.num_steps} > max_steps={self.max_steps}")
-        tele = telemetry if telemetry is not None else ServingTelemetry()
-        tele.cache_state_bytes_per_slot = cache_state_bytes(self._fresh)
-        tele.start()
-
-        sched = SlotScheduler(self.slots, self.align)
-        now = time.perf_counter
-        recs: Dict[int, RequestRecord] = {
-            r.request_id: RequestRecord(r.request_id, r.num_steps,
-                                        r.traffic_class,
-                                        cfg_scale=r.cfg_scale,
-                                        enqueue_time=now())
-            for r in requests}
-        sched.submit_all(requests)
-
-        T, D = self.cfg.dit_patch_tokens, self.cfg.dit_in_dim
-        xs = jnp.zeros((self.slots, T, D), jnp.float32)
-        states = jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a[None], (self.slots,) + a.shape).copy(),
-            self._fresh)
-
-        results: Dict[int, DiffusionResult] = {}
-        tick = 0
-        while not sched.idle():
-            # -- refill free slots from the queue (phase-aligned) -------
-            for slot, req in sched.admit(tick):
-                noise = jax.random.normal(request_noise_key(req), (T, D))
-                xs, states = self._refill(xs, states, slot.index, noise,
-                                          self._fresh)
-                self._install_request(slot.index, req)
-                rec = recs[req.request_id]
-                rec.admit_time = now()
-                rec.admit_tick = tick
-                rec.slot = slot.index
-
-            active = np.asarray(sched.active_mask())
-            steps = np.asarray(sched.steps(), np.int32)
-            idx = np.minimum(steps, self.max_steps - 1)
-            rows = np.arange(self.slots)
-            tvals = self._tv[rows, idx]
-            ab_t = self._ab[rows, idx]
-            ab_n = self._ab[rows, idx + 1]
-            # per-slot trajectory-progress weight for FasterCacheCFG's blend
-            cfg_ws = idx.astype(np.float32) / np.maximum(self._nsteps - 1, 1)
-
-            want_c = self._plan(states, idx, xs, tvals) & active
-            want_u = self._plan_uncond(states, idx, xs) & active
-            n_c, n_u = int(want_c.sum()), int(want_u.sum())
-            if n_u:
-                kind = "full"          # some slot refreshes its uncond cache
-            elif n_c:
-                kind = "cond"          # cond-branch rows only
-            else:
-                kind = "skip"
-            # rows a dense whole-pool tick of this kind dispatches (the PR-3
-            # engine's actual batch; also what row compaction saves against)
-            dense_rows = {"full": 2 * self.slots, "cond": self.slots,
-                          "skip": 0}[kind]
-            args = (states, jnp.asarray(idx), xs, jnp.asarray(tvals),
-                    jnp.asarray(self._labels), jnp.asarray(self._nulls),
-                    jnp.asarray(self._scales), jnp.asarray(cfg_ws),
-                    jnp.asarray(ab_t), jnp.asarray(ab_n))
-            if self.row_compaction:
-                bucket, row_slot, row_uncond, row_dest = compact_rows(
-                    want_c, want_u, self.slots)
-                t0 = now()
-                xs, states = self._compact_tick(bucket)(
-                    *args, jnp.asarray(row_slot), jnp.asarray(row_uncond),
-                    jnp.asarray(row_dest))
-                xs.block_until_ready()
-                tele.record_tick(kind, now() - t0,
-                                 rows_computed=n_c + n_u,
-                                 rows_padding=bucket - (n_c + n_u),
-                                 rows_saved=dense_rows - (n_c + n_u))
-            else:
-                t0 = now()
-                xs, states = self._ticks[kind](*args)
-                xs.block_until_ready()
-                tele.record_tick(kind, now() - t0, rows_computed=dense_rows)
-            # uncond accounting in rows actually refreshing a CFG cache: a
-            # dense full tick used to add `self.slots`, over-counting
-            # inactive and unguided slots into the autotuner's row cost
-            tele.uncond_rows_computed += n_u
-            tele.uncond_rows_saved += int(
-                (active & self._guided & ~want_u).sum())
-
-            for slot in sched.slots:
-                if slot.busy and want_c[slot.index]:
-                    recs[slot.request.request_id].computed_steps += 1
-                if slot.busy and want_u[slot.index]:
-                    recs[slot.request.request_id].uncond_computed_steps += 1
-
-            # -- advance + harvest finished slots -----------------------
-            sched.advance()
-            for slot, req in sched.harvest():
-                rec = recs[req.request_id]
-                rec.finish_time = now()
-                rec.finish_tick = tick + 1
-                tele.finish_request(rec)
-                results[req.request_id] = DiffusionResult(
-                    req.request_id, np.asarray(xs[slot.index]), rec)
-
-            tick += 1
-            if max_ticks is not None and tick >= max_ticks:
-                break
-
-        # requests cut off by max_ticks (mid-flight or still queued) are
-        # reported as preempted, never silently dropped with half-filled
-        # records poisoning the latency aggregates
-        for r in requests:
-            if r.request_id not in results:
-                tele.preempt_request(recs[r.request_id])
-
-        tele.stop()
-        self.telemetry = tele
-        return [results[r.request_id] for r in requests
-                if r.request_id in results]
+        session = self.start_session(requests, telemetry)
+        try:
+            while not session.done:
+                session.tick()
+                if max_ticks is not None and session.ticks >= max_ticks:
+                    break
+        finally:
+            # also on a failed tick: release the engine's session latch and
+            # record unfinished requests as preempted, so the engine stays
+            # retryable after an error (finish() is idempotent)
+            session.finish()
+        return session.finish()

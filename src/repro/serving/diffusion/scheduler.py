@@ -19,12 +19,12 @@ unit-testable in microseconds (tests/test_serving_diffusion.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 from repro.serving.common import RequestQueue
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class DiffusionRequest:
     """One latent-generation request.
 
@@ -32,16 +32,24 @@ class DiffusionRequest:
     different budgets share slots (mixed-budget continuous batching).
 
     cfg_scale > 0 makes the request *guided*: the engine runs a second,
-    unconditional backbone branch (label = null_label, defaulting to the
-    model's null-class embedding) and blends eps = e_u + s (e_c - e_u).
-    Guided and unguided requests share one slot pool."""
+    unconditional backbone branch and blends eps = e_u + s (e_c - e_u).
+    `null_label` selects that branch's conditioning: None (the model's
+    null-class embedding), an int class id, or an arbitrary (d_model,)
+    conditioning VECTOR — the negative-prompt path, which bypasses the
+    class-embedding table entirely.  Guided and unguided requests share one
+    slot pool.
+
+    `modality` routes the request to the matching per-modality sub-pool in
+    a mixed pool (repro.modalities.MixedModalityEngine); a single-modality
+    DiffusionServingEngine ignores it."""
     request_id: int
     num_steps: int
     seed: int = 0
     class_label: int = 0
     traffic_class: str = "default"
     cfg_scale: float = 0.0
-    null_label: Optional[int] = None
+    null_label: Optional[Any] = None
+    modality: str = "image"
 
     @property
     def guided(self) -> bool:

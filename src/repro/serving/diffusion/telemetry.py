@@ -60,6 +60,7 @@ class RequestRecord:
     num_steps: int
     traffic_class: str = "default"
     cfg_scale: float = 0.0
+    modality: str = "image"
     enqueue_time: float = 0.0
     admit_time: float = 0.0
     finish_time: float = 0.0
