@@ -3,42 +3,63 @@
 Runs one benchmark per survey claim (DESIGN §7) on CPU-feasible model
 scales; the roofline table is assembled from the dry-run artifacts if they
 exist (run `python -m repro.launch.dryrun --all` to regenerate).
+
+`--json` additionally writes one machine-readable `BENCH_<name>.json` per
+benchmark into benchmarks/results/ — pass/fail, wall seconds, and the
+error text on failure — so CI and tracking dashboards can diff benchmark
+health across commits without parsing stdout.  The per-claim payloads the
+benchmarks save themselves (benchmarks/results/<claim>.json) are
+unaffected.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
 
-def main():
+def main(write_json: bool = False):
     from benchmarks import (bench_decode_cache, bench_error, bench_memory,
                             bench_modalities, bench_quality, bench_roofline,
                             bench_serving, bench_speca, bench_speedup)
+    from benchmarks.common import save_result
     benches = [
-        ("speedup (T/m claim, §III-B)", bench_speedup.run),
-        ("error-vs-interval (TaylorSeer/HiCache/FoCa, §III-D3)", bench_error.run),
-        ("cache memory (FreqCa CRF, Eq. 52)", bench_memory.run),
-        ("speculative caching (SpeCa Eq. 57)", bench_speca.run),
-        ("adaptive quality + exact cross-KV (§III-D1, §I-C)", bench_quality.run),
-        ("beyond-paper: decode-axis caching", bench_decode_cache.run),
-        ("serving throughput vs policy (continuous batching)", bench_serving.run),
-        ("multi-modal caching (image/video/audio + mixed pool)",
+        ("speedup", "speedup (T/m claim, §III-B)", bench_speedup.run),
+        ("error", "error-vs-interval (TaylorSeer/HiCache/FoCa, §III-D3)",
+         bench_error.run),
+        ("memory", "cache memory (FreqCa CRF, Eq. 52)", bench_memory.run),
+        ("speca", "speculative caching (SpeCa Eq. 57)", bench_speca.run),
+        ("quality", "adaptive quality + exact cross-KV (§III-D1, §I-C)",
+         bench_quality.run),
+        ("decode_cache", "beyond-paper: decode-axis caching",
+         bench_decode_cache.run),
+        ("serving", "serving throughput vs policy (continuous batching)",
+         bench_serving.run),
+        ("modalities", "multi-modal caching (image/video/audio + mixed pool)",
          bench_modalities.run),
-        ("roofline table (from dry-run artifacts)", bench_roofline.run),
+        ("roofline", "roofline table (from dry-run artifacts)",
+         bench_roofline.run),
     ]
     import gc
     import jax
     failures = []
-    for name, fn in benches:
+    for slug, name, fn in benches:
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
+        err = None
         try:
             fn()
             print(f"----- done in {time.perf_counter()-t0:.1f}s")
         except Exception:
             failures.append(name)
+            err = traceback.format_exc()
             traceback.print_exc()
+        if write_json:
+            save_result(f"BENCH_{slug}", {
+                "bench": slug, "title": name, "ok": err is None,
+                "seconds": round(time.perf_counter() - t0, 3),
+                "error": err})
         # compiled eager/jit programs accumulate across benches and can
         # exhaust host RAM (LLVM "Cannot allocate memory")
         jax.clear_caches()
@@ -49,4 +70,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json status files to "
+                         "benchmarks/results/")
+    args = ap.parse_args()
+    main(write_json=args.json)

@@ -1,0 +1,102 @@
+"""Online control plane: live policy retuning + a want_compute gate
+learned from serving traces.
+
+    PYTHONPATH=src python examples/online_control_plane.py
+
+Three acts on one small DiT:
+
+1. SmoothCache — profile the model once (rel-L1 change of consecutive
+   exact outputs), derive a static compute/reuse schedule, serve it on the
+   engine's zero-sync host plan.  The strongest offline baseline.
+2. OnlineTuner — quality-sweep a candidate menu once (the SmoothCache
+   schedule family plus dynamic policies), then serve while a
+   TelemetryWindow hook watches every tick; each retune window re-prices
+   the menu with live row timings, occupancy, and the measured plan-time
+   surcharge for device-planned policies, and rolls the pool over
+   blue/green at a refill boundary when a different candidate wins —
+   in-flight requests always drain under the policy that admitted them.
+3. Learned want_compute — a SignalTraceLog hook on the same sessions
+   records per-slot signals and probes latent trajectories; the probes
+   become teacher pairs for a LazyDiT gate trained in-framework, which
+   then serves through `make_policy("lazydit", gate=...)` on the
+   row-compacted path.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_policy
+from repro.core.metrics import psnr
+from repro.models import init_params, perturb_zero_init
+from repro.serving.control import (OnlineTuner, SignalTraceLog,
+                                   SmoothCacheSchedule, TelemetryWindow,
+                                   calibration_profile, fit_want_gate,
+                                   probe_training_set)
+from repro.serving.diffusion import (SLA, DiffusionRequest,
+                                     DiffusionServingEngine)
+
+# -- a tiny CPU-friendly DiT ----------------------------------------------
+cfg = get_config("dit-xl").reduced(num_layers=2, d_model=64, num_heads=4,
+                                   num_kv_heads=4, d_ff=256,
+                                   dit_patch_tokens=16, dit_in_dim=8,
+                                   dit_num_classes=10)
+params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+STEPS, SLOTS = 8, 2
+
+
+def queue(n, base=0):
+    return [DiffusionRequest(base + i, num_steps=STEPS, seed=base + i,
+                             class_label=i % 10) for i in range(n)]
+
+
+# -- 1. SmoothCache: calibrate once, serve statically ----------------------
+print("== 1. SmoothCache static schedule ==")
+profile = calibration_profile(params, cfg, STEPS)
+sc = SmoothCacheSchedule(profile, alpha=0.05)
+print(f"profile (rel-L1/step): {[f'{p:.3f}' for p in profile]}")
+print(f"schedule alpha={sc.alpha}: {sc.static_schedule(STEPS)} "
+      f"(compute fraction {sc.compute_fraction:.2f})")
+
+# -- 2. OnlineTuner: sweep once, re-price live, roll over blue/green -------
+print("\n== 2. online tuner ==")
+menu = [("none", {}), ("teacache", {"delta": 0.06}), ("fora", {"interval": 2}),
+        ("blockcache", {"profile": profile, "delta": 0.05}),
+        ("blockcache", {"profile": profile, "delta": 0.2})]
+window = TelemetryWindow(max_ticks=128)
+trace = SignalTraceLog(probe_every=2, max_probes=6, max_probe_steps=STEPS)
+tuner = OnlineTuner(params, cfg, SLA(min_psnr=15.0), slots=SLOTS,
+                    max_steps=STEPS, candidates=menu, retune_every=6,
+                    min_window_ticks=4, initial=("none", {}),
+                    window=window, trace=trace, verbose=True)
+tuner.submit_all(queue(10))
+results = tuner.drain()
+print(f"served {len(results)} requests; policy now "
+      f"'{tuner.current.policy_name}' after {len(tuner.swaps)} swap(s)")
+for sw in tuner.swaps:
+    print(f"  swap @tick {sw['tick']}: {sw['from'][0]} -> {sw['to'][0]} "
+          f"(row_time={sw['row_time_ms']}, plan={sw['plan_time_ms']:.2f}ms)")
+w = window.summary()
+print(f"window: row_time={w['row_time_ms']:.2f}ms occupancy={w['occupancy']} "
+      f"plan_time={w['plan_time_ms']:.2f}ms "
+      f"compute_fraction={w['compute_fraction']:.2f}")
+
+# -- 3. learned want_compute from the serving traces -----------------------
+print("\n== 3. learned want_compute gate from logged traces ==")
+print(f"trace: {trace.summary()}")
+pairs = probe_training_set(params, cfg, trace)
+gate, hist = fit_want_gate(jax.random.PRNGKey(1), pairs, steps=120)
+print(f"trained on {len(pairs)} probe trajectories: "
+      f"loss {hist[0]:.4f} -> {hist[-1]:.4f}")
+
+learned = make_policy("lazydit", gate=gate, threshold=0.5)
+eng = DiffusionServingEngine(params, cfg, learned, slots=SLOTS,
+                             max_steps=STEPS)
+ref_eng = DiffusionServingEngine(params, cfg, "none", slots=SLOTS,
+                                 max_steps=STEPS)
+reqs = queue(6, base=100)
+got = {r.request_id: r for r in eng.serve(reqs)}
+ref = {r.request_id: r.x0 for r in ref_eng.serve(reqs)}
+cf = np.mean([g.record.compute_fraction for g in got.values()])
+q = np.mean([psnr(ref[i], got[i].x0) for i in got])
+print(f"learned gate served {len(got)} requests: "
+      f"compute fraction {cf:.2f}, {q:.1f}dB vs exact")

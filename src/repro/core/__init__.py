@@ -32,6 +32,24 @@ from .static_policies import (DeltaCachePolicy, FasterCacheCFG,
                               FixedIntervalPolicy, PABPolicy, lowpass)
 from .temporal import TemporalPABStack, TemporalTeaCachePolicy
 
+def _require_gate(gate):
+    if gate is None:
+        raise ValueError(
+            "make_policy('lazydit') needs trained gate params: pass "
+            "gate={'w': ..., 'b': ...} (repro.core.learned.train_lazy_gate "
+            "or repro.serving.control.fit_want_gate)")
+    return gate
+
+
+def _require_profile(profile):
+    if profile is None:
+        raise ValueError(
+            "make_policy('blockcache') needs a calibration profile: pass "
+            "profile=[rel-L1 change per step] (measure one with "
+            "repro.serving.control.calibration_profile)")
+    return profile
+
+
 POLICY_REGISTRY = {
     "none": lambda **kw: NoCachePolicy(),
     "fora": lambda interval=2, **kw: FixedIntervalPolicy(interval),
@@ -47,6 +65,22 @@ POLICY_REGISTRY = {
     "foca": lambda interval=4, **kw: PredictivePolicy(interval, 2, "foca"),
     "freqca": lambda interval=4, cutoff=0.25, **kw: FreqCaPolicy(interval, cutoff),
     "toca": lambda interval=4, ratio=0.25, **kw: ToCaPolicy(interval, ratio),
+    # learned want_compute gate (LazyDiT / HarmoniCa-style training): the
+    # caller must supply trained gate params ({"w", "b"} from init_gate /
+    # train_lazy_gate) — there is no sensible untrained default.  The
+    # control plane (repro.serving.control) trains one from logged serving
+    # traces and serves it through this entry.
+    "lazydit": lambda gate=None, threshold=0.5, **kw:
+        LazyDiTPolicy(_require_gate(gate), threshold),
+    # calibrated static schedule ("Cache Me if You Can" Eq. 34-35; at model
+    # granularity this is SmoothCache — repro.serving.control wraps it with
+    # the calibration recorder).  The caller must supply the measured
+    # rel-L1 profile; there is no sensible uncalibrated default.  Int-step
+    # want_compute -> the serving engine hosts it on the zero-sync static
+    # plan, which is what makes these candidates attractive to the online
+    # tuner's re-pricing.
+    "blockcache": lambda profile=None, delta=0.1, **kw:
+        BlockCachePolicy(_require_profile(profile), delta),
     "clusca": lambda interval=4, k=16, **kw: ClusCaPolicy(interval, k),
     "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
     # temporal-aware TeaCache for video latent clips: the input-side signal

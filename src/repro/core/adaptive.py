@@ -99,6 +99,12 @@ class TeaCachePolicy(CachePolicy):
         d = self._correct(self._signal_distance(sig, state["prev_signal"]))
         return jnp.logical_or(state["n"] == 0, state["acc"] + d >= self.delta)
 
+    def want_metric(self, state, step, x, **signals):
+        """The corrected accumulated distance the delta threshold sees."""
+        sig = signals.get("signal", x).astype(jnp.float32)
+        d = self._correct(self._signal_distance(sig, state["prev_signal"]))
+        return (state["acc"] + d).astype(jnp.float32)
+
 
 class MagCachePolicy(CachePolicy):
     """MagCache: accumulated error eps(t) = 1 - prod(gamma_i) since the last
@@ -150,6 +156,12 @@ class MagCachePolicy(CachePolicy):
         g = self.gammas[jnp.clip(step_val, 0, self.gammas.shape[0] - 1)]
         err = 1.0 - state["prod"] * g
         return jnp.logical_or(state["n"] == 0, err >= self.delta)
+
+    def want_metric(self, state, step, x, **signals):
+        """The accumulated magnitude-decay error the delta threshold sees."""
+        step_val = jnp.asarray(step, jnp.int32)
+        g = self.gammas[jnp.clip(step_val, 0, self.gammas.shape[0] - 1)]
+        return (1.0 - state["prod"] * g).astype(jnp.float32)
 
 
 class EasyCachePolicy(CachePolicy):

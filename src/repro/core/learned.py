@@ -68,6 +68,17 @@ class LazyDiTPolicy(CachePolicy):
 
         return jax.lax.cond(refresh, compute, reuse, state)
 
+    def want_compute(self, state, step, x, **signals):
+        """Traced mirror of the gate decision — the serving engine reads
+        this per slot each tick, so a learned gate firing on one slot costs
+        a 1-row compacted bucket instead of a whole-pool tick."""
+        sim = gate_score(self.gate, x)
+        return jnp.logical_or(state["n"] == 0, sim <= self.threshold)
+
+    def want_metric(self, state, step, x, **signals):
+        """The predicted cross-step similarity the threshold sees."""
+        return gate_score(self.gate, x).astype(jnp.float32)
+
 
 def lazy_trajectory_loss(gate, inputs: jnp.ndarray, outputs: jnp.ndarray,
                          *, rho: float = 0.1, threshold: float = 0.5):

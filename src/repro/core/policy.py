@@ -80,6 +80,18 @@ class CachePolicy:
         return jnp.asarray(True)
 
     # ------------------------------------------------------------------
+    # serving support: the scalar the refresh decision thresholds on
+    # (TeaCache's corrected accumulated signal distance, MagCache's
+    # magnitude-decay error, ...).  The control plane's SignalTraceLog
+    # records this per slot per tick; policies with a purely step-indexed
+    # schedule have nothing to report and return 0.
+    # ------------------------------------------------------------------
+    def want_metric(self, state, step, x, **signals):
+        """Return a float scalar: the signal the refresh decision is
+        thresholding on this step (0.0 for schedule-only policies)."""
+        return jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------------
     # introspection used by benchmarks: how many full computes would a
     # static variant of this policy issue over T steps?
     # ------------------------------------------------------------------

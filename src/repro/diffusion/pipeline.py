@@ -407,6 +407,56 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
             want_cond_fn, want_uncond_fn)
 
 
+def slot_want_fns(params, cfg, policy: CachePolicy,
+                  cfg_policy: Optional[CachePolicy] = None):
+    """Fused slot-batched want/metric pass for the serving engine's planner.
+
+    The per-slot want predicates of `slot_cfg_denoise_fns` compute a
+    signal-using policy's TeaCache signal on a SINGLETON batch inside vmap —
+    the modulated-embed matmuls thread a batch-1 dim through XLA, and the
+    engine paid two separate device syncs per tick (cond plan, then uncond
+    plan).  This entry point fuses the whole plan into one program:
+
+      want_all_fn(states, steps, xs, tvals, labels, guided)
+          -> (want_cond, want_uncond, metric)     each (S,)
+
+    The TeaCache signal is computed ONCE over the whole (S, T, D) slot batch
+    outside vmap (slot axis == batch axis, same layout as the backbone
+    call), then handed row-wise to the vmapped per-slot predicates.  The
+    batched embed is row-independent, so each slot sees exactly the signal
+    the singleton path produced.  `metric` is the per-slot
+    `CachePolicy.want_metric` scalar (the value the refresh decision
+    thresholds on — TeaCache's corrected accumulated distance, the LazyDiT
+    gate score, 0 for schedule-only policies), which the control plane's
+    SignalTraceLog records; it rides the same device round trip, so trace
+    logging costs no extra sync."""
+    uncond_policy = cfg_policy if cfg_policy is not None else NoCachePolicy()
+    _, signal_fn = backbone_fns(params, cfg)
+
+    def per_slot(state, step, x, sig, g):
+        xb = x[None]
+        kw = {"signal": sig[None]} if policy.uses_signal else {}
+        wc = policy.want_compute(state["policy"], step, xb, **kw)
+        wu = uncond_policy.want_compute(state["cfg"], step, xb)
+        m = jnp.asarray(policy.want_metric(state["policy"], step, xb, **kw),
+                        jnp.float32)
+        # `& step >= 0` / `+ 0 * step` keep constant outputs mapped under
+        # vmap (schedule-only policies return trace-constant predicates)
+        wc = jnp.logical_and(jnp.asarray(wc), step >= 0)
+        wu = jnp.logical_and(jnp.logical_and(jnp.asarray(wu), g), step >= 0)
+        return wc, wu, m + 0.0 * step.astype(jnp.float32)
+
+    def want_all_fn(states, steps, xs, tvals, labels, guided):
+        if policy.uses_signal:
+            sigs = signal_fn(xs, tvals.astype(jnp.float32),
+                             labels.astype(jnp.int32))
+        else:                            # dummy rows: per_slot never reads them
+            sigs = jnp.zeros((xs.shape[0], 1, 1), jnp.float32)
+        return jax.vmap(per_slot)(states, steps, xs, sigs, guided)
+
+    return want_all_fn
+
+
 def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0,
                    null_embed=None):
     """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u).

@@ -116,12 +116,16 @@ class MixedModalityEngine:
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[DiffusionRequest],
-              max_ticks: Optional[int] = None) -> List[DiffusionResult]:
+              max_ticks: Optional[int] = None,
+              hooks: Optional[Mapping[str, Sequence]] = None
+              ) -> List[DiffusionResult]:
         """Route requests to their modality sub-pools and interleave the
         sessions until all are done; results come back in request order.
         `max_ticks` bounds the OUTER loop (each sub-pool advances at most
         that many ticks); cut-off requests are recorded as preempted in
-        their pool's telemetry."""
+        their pool's telemetry.  `hooks` maps modality -> TickHook list so
+        a control plane can watch each sub-pool's ticks (each hook sees
+        TickEvents tagged with that pool's modality)."""
         by_mod: Dict[str, List[DiffusionRequest]] = {}
         for r in requests:
             if r.modality not in self.pools:
@@ -133,8 +137,10 @@ class MixedModalityEngine:
         t0 = time.perf_counter()
         sessions: Dict[str, object] = {}
         try:
+            hooks = dict(hooks or {})
             for m, rs in by_mod.items():
-                sessions[m] = self.pools[m].start_session(rs)
+                sessions[m] = self.pools[m].start_session(
+                    rs, hooks=hooks.get(m), modality=m)
             ticks = 0
             while any(not s.done for s in sessions.values()):
                 for s in sessions.values():

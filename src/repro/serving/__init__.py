@@ -3,6 +3,9 @@
   engine    — ServingEngine: LLM prefill + rolling-KV continuous decode
   diffusion — DiffusionServingEngine: step-interleaved continuous batching
               of denoising trajectories with per-slot cache states
+  control   — online control plane over the diffusion engine: telemetry
+              windows, live policy retuning at refill boundaries, signal
+              trace logging + learned want_compute, SmoothCache baseline
   common    — request-queue machinery shared by both engines
 """
 from .common import RequestQueue

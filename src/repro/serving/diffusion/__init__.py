@@ -26,15 +26,17 @@ carries its own cache state (repro.core.SlotBatchedPolicy):
                computed / padded / saved, full/cond/skip tick mix,
                preempted-request accounting, cache bytes per slot
 """
-from .autotune import SLA, TunedPolicy, autotune, autotune_traffic_classes
+from .autotune import (SLA, TunedPolicy, autotune, autotune_traffic_classes,
+                       price_and_pick, sweep_candidates)
 from .engine import (DiffusionResult, DiffusionServingEngine, ServeSession,
-                     compact_rows, request_noise_key)
+                     TickEvent, compact_rows, request_noise_key)
 from .scheduler import DiffusionRequest, Slot, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
 
 __all__ = [
     "SLA", "TunedPolicy", "autotune", "autotune_traffic_classes",
-    "DiffusionResult", "DiffusionServingEngine", "ServeSession",
+    "price_and_pick", "sweep_candidates",
+    "DiffusionResult", "DiffusionServingEngine", "ServeSession", "TickEvent",
     "compact_rows", "request_noise_key",
     "DiffusionRequest", "Slot", "SlotScheduler",
     "RequestRecord", "ServingTelemetry",

@@ -64,8 +64,8 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Union
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ import numpy as np
 from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
                         make_policy)
 from repro.diffusion import NoiseSchedule, linear_schedule
-from repro.diffusion.pipeline import slot_compact_denoise_fns
+from repro.diffusion.pipeline import slot_compact_denoise_fns, slot_want_fns
 
 from .scheduler import DiffusionRequest, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
@@ -133,6 +133,52 @@ class DiffusionResult:
     record: RequestRecord
 
 
+@dataclass
+class TickEvent:
+    """Everything one engine tick decided and produced, for observer hooks.
+
+    ServeSession calls each hook with one TickEvent per tick (after
+    harvest), which is how the control plane (repro.serving.control)
+    watches a live engine: TelemetryWindow derives sliding-window row
+    pricing and occupancy from it, SignalTraceLog records per-slot
+    want/metric traces.  All arrays are host-side copies indexed by slot;
+    slots not active this tick carry request_id -1.
+
+    `metric` is the per-slot `CachePolicy.want_metric` scalar (the value
+    the refresh decision thresholded on); None when the engine planned the
+    tick from a host-side static schedule (no device metric exists).
+    `plan_seconds` is the host time spent DECIDING the tick (the fused
+    want pass + its device_get sync for state-dependent policies; ~0 for
+    static schedules planned on the host) — the overhead the online
+    tuner's cost model charges non-static candidates per step.
+    `latents` is the pre-tick (slots, tokens, in_dim) latent batch — only
+    populated when the session was started with `capture_latents=True`
+    (it costs a device transfer per tick)."""
+    tick: int
+    modality: str
+    kind: str                       # "full" | "cond" | "skip"
+    seconds: float                  # device time of this tick's program
+    rows_computed: int
+    rows_padding: int
+    active: np.ndarray              # (S,) bool
+    request_ids: np.ndarray         # (S,) int64, -1 = free slot
+    steps: np.ndarray               # (S,) int32 per-slot step index
+    tvals: np.ndarray               # (S,) float32 model-facing timesteps
+    labels: np.ndarray              # (S,) int32 class conditioning
+    guided: np.ndarray              # (S,) bool
+    want_cond: np.ndarray           # (S,) bool, after active masking
+    want_uncond: np.ndarray         # (S,) bool, after active masking
+    plan_seconds: float = 0.0       # host time of the want/plan decision
+    metric: Optional[np.ndarray] = None     # (S,) float32 or None
+    latents: Optional[np.ndarray] = None    # (S, T, D) pre-tick, opt-in
+    admitted: List[DiffusionRequest] = field(default_factory=list)
+    finished: List[RequestRecord] = field(default_factory=list)
+
+
+#: observer hook signature: called once per tick, must not mutate the engine
+TickHook = Callable[[TickEvent], None]
+
+
 class ServeSession:
     """One in-flight batch of requests, advanced one tick at a time.
 
@@ -143,19 +189,12 @@ class ServeSession:
 
     def __init__(self, engine: "DiffusionServingEngine",
                  requests: Sequence[DiffusionRequest],
-                 telemetry: Optional[ServingTelemetry] = None):
+                 telemetry: Optional[ServingTelemetry] = None,
+                 hooks: Optional[Sequence[TickHook]] = None,
+                 capture_latents: bool = False,
+                 modality: Optional[str] = None):
         for r in requests:
-            if r.num_steps > engine.max_steps:
-                raise ValueError(f"request {r.request_id}: num_steps="
-                                 f"{r.num_steps} > max_steps={engine.max_steps}")
-            # reject malformed null-conditioning vectors before any work
-            # runs, not at admission deep inside a tick
-            if r.null_label is not None and np.ndim(r.null_label) > 0:
-                shape = np.shape(r.null_label)
-                if shape != (engine.cfg.d_model,):
-                    raise ValueError(
-                        f"request {r.request_id}: null_label vector shape "
-                        f"{shape} != (d_model={engine.cfg.d_model},)")
+            self._validate(engine, r)
         # per-slot timestep/conditioning tables live on the engine, so two
         # interleaved sessions of one engine would corrupt each other
         if engine._session_active:
@@ -165,6 +204,16 @@ class ServeSession:
         engine._session_active = True
         self.engine = engine
         self.requests = list(requests)
+        #: observer hooks, called once per tick with a TickEvent
+        self.hooks: List[TickHook] = list(hooks or ())
+        #: copy the pre-tick latent batch into each TickEvent (opt-in:
+        #: costs one device transfer per tick; the control plane's probe
+        #: logging needs it to replay the backbone offline)
+        self.capture_latents = bool(capture_latents)
+        #: modality label stamped on TickEvents (an engine hosts ONE
+        #: modality); inferred from the first request when not given
+        self.modality = (modality if modality is not None
+                         else (requests[0].modality if requests else "image"))
         self.tele = telemetry if telemetry is not None else ServingTelemetry()
         self.tele.cache_state_bytes_per_slot = cache_state_bytes(engine._fresh)
         self.tele.start()
@@ -195,9 +244,59 @@ class ServeSession:
         self.ticks = 0
         self._finished = False
 
+    @staticmethod
+    def _validate(engine: "DiffusionServingEngine",
+                  r: DiffusionRequest) -> None:
+        """Reject malformed requests before any work runs, not at admission
+        deep inside a tick."""
+        if r.num_steps > engine.max_steps:
+            raise ValueError(f"request {r.request_id}: num_steps="
+                             f"{r.num_steps} > max_steps={engine.max_steps}")
+        if r.null_label is not None and np.ndim(r.null_label) > 0:
+            shape = np.shape(r.null_label)
+            if shape != (engine.cfg.d_model,):
+                raise ValueError(
+                    f"request {r.request_id}: null_label vector shape "
+                    f"{shape} != (d_model={engine.cfg.d_model},)")
+
     @property
     def done(self) -> bool:
         return self.sched.idle()
+
+    # ------------------------------------------------------------------
+    def submit(self, request: DiffusionRequest) -> None:
+        """Mid-session admission: enqueue one more request on a live
+        session.  It is admitted at the next phase-aligned tick with a free
+        slot (reset-on-refill applies exactly as for initial requests).
+        This is what lets the control plane keep one session serving an
+        open-ended stream instead of batching requests up front."""
+        if self._finished:
+            raise RuntimeError("session already finished; submit to a new "
+                               "session instead")
+        if request.request_id in self.recs:
+            raise ValueError(f"request id {request.request_id} already "
+                             f"submitted to this session")
+        self._validate(self.engine, request)
+        self.requests.append(request)
+        self.recs[request.request_id] = RequestRecord(
+            request.request_id, request.num_steps, request.traffic_class,
+            cfg_scale=request.cfg_scale, modality=request.modality,
+            enqueue_time=time.perf_counter())
+        self.sched.submit(request)
+
+    def transfer_queued(self) -> List[DiffusionRequest]:
+        """Pop every request still waiting in the admission queue (never
+        admitted to a slot) and drop its bookkeeping here, so the caller
+        can resubmit it to another session.  The control plane's blue/green
+        rollover uses this: in-flight slots drain on this session under the
+        policy that admitted them, while the un-admitted backlog follows
+        the session that will actually admit it — otherwise a rollover
+        would strand the backlog on the outgoing policy."""
+        moved = self.sched.queue.pop_many(len(self.sched.queue))
+        for r in moved:
+            del self.recs[r.request_id]
+            self.requests.remove(r)
+        return moved
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
@@ -235,8 +334,18 @@ class ServeSession:
         # per-slot trajectory-progress weight for FasterCacheCFG's blend
         cfg_ws = idx.astype(np.float32) / np.maximum(eng._nsteps - 1, 1)
 
-        want_c = eng._plan(self.states, idx, self.xs, tvals) & active
-        want_u = eng._plan_uncond(self.states, idx, self.xs) & active
+        # per-slot request ids + optional pre-tick latents, captured BEFORE
+        # the device tick / harvest mutate them (for the TickEvent)
+        rids = np.asarray([s.request.request_id if s.busy else -1
+                           for s in sched.slots], np.int64)
+        latents = np.asarray(self.xs) if self.capture_latents else None
+
+        t_plan = now()
+        want_c, want_u, metric = eng._plan_all(self.states, idx, self.xs,
+                                               tvals)
+        plan_s = now() - t_plan
+        want_c = want_c & active
+        want_u = want_u & active
         n_c, n_u = int(want_c.sum()), int(want_u.sum())
         if n_u:
             kind = "full"          # some slot refreshes its uncond cache
@@ -261,15 +370,20 @@ class ServeSession:
                 *args, jnp.asarray(row_slot), jnp.asarray(row_uncond),
                 jnp.asarray(row_dest))
             self.xs.block_until_ready()
-            tele.record_tick(kind, now() - t0,
-                             rows_computed=n_c + n_u,
-                             rows_padding=bucket - (n_c + n_u),
-                             rows_saved=dense_rows - (n_c + n_u))
+            tick_s = now() - t0
+            rows_done = n_c + n_u
+            rows_pad = bucket - rows_done
+            tele.record_tick(kind, tick_s,
+                             rows_computed=rows_done,
+                             rows_padding=rows_pad,
+                             rows_saved=dense_rows - rows_done)
         else:
             t0 = now()
             self.xs, self.states = eng._ticks[kind](*args)
             self.xs.block_until_ready()
-            tele.record_tick(kind, now() - t0, rows_computed=dense_rows)
+            tick_s = now() - t0
+            rows_done, rows_pad = dense_rows, 0
+            tele.record_tick(kind, tick_s, rows_computed=dense_rows)
         # uncond accounting in rows actually refreshing a CFG cache: a
         # dense full tick used to add `slots`, over-counting inactive and
         # unguided slots into the autotuner's row cost
@@ -285,13 +399,29 @@ class ServeSession:
 
         # -- advance + harvest finished slots -----------------------
         sched.advance()
+        finished: List[RequestRecord] = []
         for slot, req in sched.harvest():
             rec = self.recs[req.request_id]
             rec.finish_time = now()
             rec.finish_tick = self.ticks + 1
             tele.finish_request(rec)
+            finished.append(rec)
             self.results[req.request_id] = DiffusionResult(
                 req.request_id, np.asarray(self.xs[slot.index]), rec)
+
+        if self.hooks:
+            event = TickEvent(
+                tick=self.ticks, modality=self.modality, kind=kind,
+                seconds=tick_s, plan_seconds=plan_s,
+                rows_computed=rows_done,
+                rows_padding=rows_pad, active=active, request_ids=rids,
+                steps=steps, tvals=np.asarray(tvals, np.float32),
+                labels=eng._labels.copy(), guided=eng._guided.copy(),
+                want_cond=want_c, want_uncond=want_u,
+                metric=metric, latents=latents,
+                admitted=[req for _, req in admitted], finished=finished)
+            for hook in self.hooks:
+                hook(event)
 
         self.ticks += 1
 
@@ -429,12 +559,13 @@ class DiffusionServingEngine:
         else:
             self._ticks = {kind: make_tick(kind)
                            for kind in ("full", "cond", "skip")}
-        self._want_cond = jax.jit(
-            lambda states, steps, xs, tvals, labels:
-            jax.vmap(want_cond_fn)(states, steps, xs, tvals, labels))
-        self._want_uncond = jax.jit(
-            lambda states, steps, xs, guided:
-            jax.vmap(want_uncond_fn)(states, steps, xs, guided))
+        # fused plan pass: cond want + uncond want + trace metric in ONE
+        # jitted call — the TeaCache signal is computed over the whole slot
+        # batch outside vmap (repro.diffusion.pipeline.slot_want_fns), so a
+        # signal-policy pool pays one batched embed and one device sync per
+        # tick instead of per-slot singleton embeds and two syncs
+        self._want_all = jax.jit(
+            slot_want_fns(params, cfg, self.policy, cfg_policy))
 
         def refill(xs, states, slot, noise, fresh):
             return (xs.at[slot].set(noise),
@@ -502,6 +633,11 @@ class DiffusionServingEngine:
         nm = jnp.zeros((S,), bool)
         ab = jnp.full((S,), 0.5, jnp.float32)
         args = (states, zi, xs, zf, zi, zi, nv, nm, zf, zf, ab, ab)
+        # the fused want pass also compiles on first use; without this a
+        # state-dependent policy pays that compile inside its first live tick
+        if self._static_plan is None or self._static_cfg_plan is None:
+            jax.block_until_ready(
+                self._want_all(states, zi, xs, zf, zi, nm))
         if not self.row_compaction:
             for fn in self._ticks.values():
                 fn(*args)[0].block_until_ready()
@@ -560,42 +696,58 @@ class DiffusionServingEngine:
         self._nsteps[slot] = req.num_steps
         self._guided[slot] = req.guided
 
-    def _plan(self, states, steps, xs, tvals) -> np.ndarray:
-        """Per-slot cond-branch compute decision (before masking)."""
+    def _plan_all(self, states, steps, xs, tvals):
+        """Per-slot (want_cond, want_uncond, metric) plan — before active
+        masking; want_uncond is already masked by the per-slot guided flag.
+
+        When BOTH branches admit a host-side static schedule the plan costs
+        no device round trip at all (and metric is None — nothing dynamic
+        was measured).  Otherwise one fused jit call produces both want
+        vectors and the per-slot trace metric in a single device sync; a
+        branch that is static anyway is then overridden from its host plan
+        (the device predicate for it is mirrored, so this is equivalence-
+        preserving, not a behavior switch)."""
+        if self._static_plan is not None and self._static_cfg_plan is not None:
+            return (self._static_plan[steps],
+                    self._static_cfg_plan[steps] & self._guided, None)
+        wc, wu, metric = jax.device_get(self._want_all(
+            states, jnp.asarray(steps), xs, jnp.asarray(tvals),
+            jnp.asarray(self._labels), jnp.asarray(self._guided)))
+        wc, wu = np.asarray(wc, bool), np.asarray(wu, bool)
         if self._static_plan is not None:
-            return self._static_plan[steps]
-        labels = jnp.asarray(self._labels)
-        return np.asarray(self._want_cond(states, jnp.asarray(steps), xs,
-                                          jnp.asarray(tvals), labels))
-
-    def _plan_uncond(self, states, steps, xs) -> np.ndarray:
-        """Per-slot uncond-branch compute decision (before active masking).
-
-        Already masked by the per-slot guided flag — unguided slots never
-        request an uncond compute."""
+            wc = self._static_plan[steps]
         if self._static_cfg_plan is not None:
-            return self._static_cfg_plan[steps] & self._guided
-        return np.asarray(self._want_uncond(states, jnp.asarray(steps), xs,
-                                            jnp.asarray(self._guided)))
+            wu = self._static_cfg_plan[steps] & self._guided
+        return wc, wu, np.asarray(metric, np.float32)
 
     # ------------------------------------------------------------------
     def start_session(self, requests: Sequence[DiffusionRequest],
-                      telemetry: Optional[ServingTelemetry] = None
-                      ) -> ServeSession:
+                      telemetry: Optional[ServingTelemetry] = None,
+                      hooks: Optional[Sequence[TickHook]] = None,
+                      capture_latents: bool = False,
+                      modality: Optional[str] = None) -> ServeSession:
         """Begin a tick-granular serving session (see ServeSession).
 
         At most ONE session per engine may be in flight (enforced): the
         per-slot timestep/conditioning tables live on the engine.
-        Interleaving across engines (the mixed-modality pool) is fine."""
-        return ServeSession(self, requests, telemetry)
+        Interleaving across engines (the mixed-modality pool) is fine.
+        `hooks` observe each tick (TickEvent); `capture_latents` copies the
+        pre-tick latent batch into each event (device transfer per tick)."""
+        return ServeSession(self, requests, telemetry, hooks=hooks,
+                            capture_latents=capture_latents,
+                            modality=modality)
 
     def serve(self, requests: Sequence[DiffusionRequest],
               telemetry: Optional[ServingTelemetry] = None,
-              max_ticks: Optional[int] = None) -> List[DiffusionResult]:
+              max_ticks: Optional[int] = None,
+              hooks: Optional[Sequence[TickHook]] = None,
+              capture_latents: bool = False
+              ) -> List[DiffusionResult]:
         """Run every request through the slot pool; returns results in
         request order.  With max_ticks, unfinished requests are recorded as
         preempted in telemetry (never silently dropped)."""
-        session = self.start_session(requests, telemetry)
+        session = self.start_session(requests, telemetry, hooks=hooks,
+                                     capture_latents=capture_latents)
         try:
             while not session.done:
                 session.tick()

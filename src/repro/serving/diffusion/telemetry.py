@@ -109,10 +109,29 @@ class RequestRecord:
 
 @dataclass
 class ServingTelemetry:
-    """Aggregates RequestRecords plus per-tick engine counters."""
+    """Aggregates RequestRecords plus per-tick engine counters.
+
+    `max_records` bounds the retained RequestRecord lists (a ring buffer:
+    oldest records are dropped once the cap is reached) so long-lived serve
+    sessions don't grow without limit.  Aggregate counters (request counts,
+    latency/compute-fraction/queue-wait sums, uncond savings) are kept
+    monotonically regardless of the cap, so `summary()` means and totals
+    stay exact over ALL traffic; only the percentile and per-traffic-class
+    views narrow to the retained window — which is precisely what the
+    control plane's sliding-window retuner wants.  The default (None) keeps
+    every record, matching pre-cap behavior exactly."""
     cache_state_bytes_per_slot: int = 0
+    max_records: Optional[int] = None
     records: List[RequestRecord] = field(default_factory=list)
     preempted_records: List[RequestRecord] = field(default_factory=list)
+    # monotonic aggregates: survive ring-buffer eviction
+    requests_finished: int = 0
+    requests_preempted: int = 0
+    latency_sum_s: float = 0.0
+    queue_wait_sum_s: float = 0.0
+    compute_fraction_sum: float = 0.0
+    guided_finished: int = 0
+    uncond_saved_steps_sum: int = 0
     ticks_full: int = 0          # both-branch backbone (2S rows)
     ticks_cond: int = 0          # cond-only backbone (S rows)
     ticks_skip: int = 0
@@ -167,13 +186,27 @@ class ServingTelemetry:
         self.backbone_rows_padding += int(rows_padding)
         self.backbone_rows_saved += int(rows_saved)
 
+    def _trim(self, lst: List[RequestRecord]) -> None:
+        if self.max_records is not None and len(lst) > self.max_records:
+            del lst[:len(lst) - self.max_records]
+
     def finish_request(self, rec: RequestRecord) -> None:
+        self.requests_finished += 1
+        self.latency_sum_s += rec.latency
+        self.queue_wait_sum_s += rec.queue_wait
+        self.compute_fraction_sum += rec.compute_fraction
+        if rec.guided:
+            self.guided_finished += 1
+            self.uncond_saved_steps_sum += rec.uncond_saved_steps
         self.records.append(rec)
+        self._trim(self.records)
 
     def preempt_request(self, rec: RequestRecord) -> None:
         """Record a request cut off by max_ticks instead of dropping it."""
         rec.preempted = True
+        self.requests_preempted += 1
         self.preempted_records.append(rec)
+        self._trim(self.preempted_records)
 
     # ------------------------------------------------------------------
     @property
@@ -209,22 +242,23 @@ class ServingTelemetry:
         return t_row, t_skip
 
     def summary(self) -> Dict[str, float]:
+        """Fleet summary.  Counts, means and totals come from the monotonic
+        aggregate counters (exact over all traffic, ring buffer or not);
+        latency percentiles come from the retained record window."""
         lat = [r.latency for r in self.records]
-        cf = [r.compute_fraction for r in self.records]
         ticks = self.ticks_full + self.ticks_cond + self.ticks_skip
-        n = len(self.records)
-        guided = [r for r in self.records if r.guided]
+        n = self.requests_finished
+        cf_mean = self.compute_fraction_sum / n if n else 1.0
         return {
             "requests": n,
-            "requests_preempted": len(self.preempted_records),
+            "requests_preempted": self.requests_preempted,
             "elapsed_s": self.elapsed,
             "throughput_rps": n / self.elapsed if self.elapsed > 0 else 0.0,
             "latency_p50_s": _pct(lat, 0.50),
             "latency_p95_s": _pct(lat, 0.95),
-            "queue_wait_mean_s": (sum(r.queue_wait for r in self.records) / n
-                                  if n else 0.0),
-            "compute_fraction_mean": sum(cf) / n if n else 1.0,
-            "cache_hit_rate_mean": 1.0 - (sum(cf) / n if n else 1.0),
+            "queue_wait_mean_s": self.queue_wait_sum_s / n if n else 0.0,
+            "compute_fraction_mean": cf_mean,
+            "cache_hit_rate_mean": 1.0 - cf_mean,
             "ticks": ticks,
             # fraction of ticks that ran the backbone at all (full or cond)
             "full_tick_fraction": self.ticks_backbone / ticks if ticks else 0.0,
@@ -237,7 +271,7 @@ class ServingTelemetry:
                                   self.ticks_cond if self.ticks_cond else 0.0),
             "tick_ms_skip_mean": (1e3 * self.tick_seconds_skip /
                                   self.ticks_skip if self.ticks_skip else 0.0),
-            "guided_requests": len(guided),
+            "guided_requests": self.guided_finished,
             "backbone_rows_computed": self.backbone_rows_computed,
             "backbone_rows_padding": self.backbone_rows_padding,
             "backbone_rows_saved": self.backbone_rows_saved,
@@ -246,8 +280,7 @@ class ServingTelemetry:
                  if self.ticks_backbone else 0.0),
             "uncond_rows_computed": self.uncond_rows_computed,
             "uncond_rows_saved": self.uncond_rows_saved,
-            "uncond_saved_steps_total":
-                sum(r.uncond_saved_steps for r in guided),
+            "uncond_saved_steps_total": self.uncond_saved_steps_sum,
             "cache_state_bytes_per_slot": self.cache_state_bytes_per_slot,
         }
 

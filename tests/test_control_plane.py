@@ -1,0 +1,335 @@
+"""Online control plane (repro.serving.control): telemetry windows fed by
+tick hooks, mid-session submission, retuning that never mutates in-flight
+slots, SmoothCache static baselines, signal trace logs + the learned
+want_compute predictor trained from them, and the telemetry ring buffer."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import make_policy
+from repro.core.learned import LazyDiTPolicy
+from repro.models import init_params, perturb_zero_init
+from repro.serving.control import (ControlPlane, OnlineTuner,
+                                   SignalTraceLog, SmoothCacheSchedule,
+                                   TelemetryWindow, calibration_profile,
+                                   fit_want_gate, probe_training_set)
+from repro.serving.diffusion import (SLA, DiffusionRequest,
+                                     DiffusionServingEngine, ServingTelemetry,
+                                     TickEvent)
+from repro.serving.diffusion.telemetry import RequestRecord
+
+NUM_STEPS = 8
+CANDS = [("none", {}), ("fora", {"interval": 2}),
+         ("teacache", {"threshold": 0.05})]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("dit-xl").reduced(num_layers=2, d_model=64,
+                                       num_heads=4, num_kv_heads=4,
+                                       d_ff=128, dit_patch_tokens=8,
+                                       dit_in_dim=4, dit_num_classes=10)
+    params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _requests(n=3, start=0, modality="image", guided_every=2):
+    return [DiffusionRequest(start + i, num_steps=NUM_STEPS, seed=start + i,
+                             class_label=i % 5, modality=modality,
+                             cfg_scale=2.5 if i % guided_every == 0 else 0.0)
+            for i in range(n)]
+
+
+# ----------------------------------------------------------------------
+# TelemetryWindow (synthetic events — no engine needed)
+# ----------------------------------------------------------------------
+
+def _event(tick, kind="full", seconds=0.01, rows=4, padding=0, busy=2,
+           metric=None, finished=(), modality="image", plan_s=0.0):
+    active = np.array([True] * busy + [False] * (4 - busy))
+    return TickEvent(
+        tick=tick, modality=modality, kind=kind, seconds=seconds,
+        plan_seconds=plan_s,
+        rows_computed=rows, rows_padding=padding, active=active,
+        request_ids=np.where(active, np.arange(4), -1).astype(np.int64),
+        steps=np.zeros(4, np.int32), tvals=np.zeros(4, np.float32),
+        labels=np.zeros(4, np.int32), guided=np.zeros(4, bool),
+        want_cond=active.copy(), want_uncond=np.zeros(4, bool),
+        metric=metric, latents=None, admitted=[], finished=list(finished))
+
+
+def test_window_row_time_and_occupancy():
+    w = TelemetryWindow()
+    assert w.row_time_ms() is None          # nothing to price with yet
+    assert w.occupancy() == 1
+    for t in range(4):
+        w.observe(_event(t, seconds=0.010, rows=4, padding=1))
+    w.observe(_event(4, kind="skip", seconds=0.002, rows=0))
+    t_row, t_skip = w.row_time_ms()
+    assert t_row == pytest.approx(1e3 * 0.040 / 20)   # 4 ticks x 5 rows
+    assert t_skip == pytest.approx(2.0)
+    assert w.occupancy() == 2
+    assert w.summary()["backbone_ticks"] == 4
+
+
+def test_window_is_sliding_and_counters_are_monotonic():
+    w = TelemetryWindow(max_ticks=3, max_requests=2)
+    recs = [RequestRecord(i, NUM_STEPS, computed_steps=4) for i in range(5)]
+    for t in range(10):
+        w.observe(_event(t, finished=[recs[t % 5]] if t < 5 else []))
+    assert len(w.ticks) == 3 and w.ticks_seen == 10
+    assert len(w.finished) == 2 and w.requests_seen == 5
+    assert w.compute_fraction() == pytest.approx(0.5)
+
+
+def test_window_metric_and_psnr_proxies():
+    w = TelemetryWindow()
+    w.observe(_event(0, metric=np.array([0.2, 0.4, 9.0, 9.0]), busy=2))
+    assert w.mean_metric() == pytest.approx(0.3)  # inactive slots excluded
+    w.note_psnr(0, 30.0)
+    w.note_psnr(1, 20.0)
+    assert w.psnr_mean() == pytest.approx(25.0)
+    assert w.summary()["psnr_proxy_mean"] == pytest.approx(25.0)
+
+
+# ----------------------------------------------------------------------
+# ServingTelemetry ring buffer (satellite: bounded record growth)
+# ----------------------------------------------------------------------
+
+def test_telemetry_ring_buffer_counters_stay_exact():
+    capped = ServingTelemetry(max_records=4)
+    full = ServingTelemetry()
+    for t in (capped, full):
+        t.start()
+    for i in range(12):
+        for t in (capped, full):
+            t.finish_request(RequestRecord(
+                i, NUM_STEPS, computed_steps=4, enqueue_time=0.0,
+                admit_time=1.0, finish_time=2.0))
+    for t in (capped, full):
+        t.stop()
+    assert len(capped.records) == 4
+    s = capped.summary()
+    # aggregate counters cover ALL 12 requests, not just the retained 4
+    assert s["requests"] == 12
+    assert s["compute_fraction_mean"] == pytest.approx(0.5)
+    assert s["queue_wait_mean_s"] == pytest.approx(1.0)
+    assert capped.latency_sum_s == pytest.approx(24.0)
+    assert len(full.records) == 12 and full.summary()["requests"] == 12
+
+
+# ----------------------------------------------------------------------
+# mid-session submission + engine-driven window
+# ----------------------------------------------------------------------
+
+def test_session_submit_midflight_and_window_hook(setup):
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "fora", slots=2,
+                                 max_steps=NUM_STEPS)
+    w = TelemetryWindow()
+    sess = eng.start_session(_requests(2), hooks=[w.observe])
+    for _ in range(3):
+        sess.tick()
+    late = DiffusionRequest(99, num_steps=NUM_STEPS, seed=99)
+    sess.submit(late)
+    with pytest.raises(ValueError, match="already submitted"):
+        sess.submit(late)
+    while not sess.done:
+        sess.tick()
+    res = sess.finish()
+    assert sorted(r.request_id for r in res) == [0, 1, 99]
+    assert w.ticks_seen == sess.ticks
+    assert w.row_time_ms() is not None and w.occupancy() >= 1
+    with pytest.raises(RuntimeError, match="finished"):
+        sess.submit(DiffusionRequest(100, num_steps=NUM_STEPS, seed=1))
+
+
+# ----------------------------------------------------------------------
+# OnlineTuner: retune swaps at refill boundaries, never in-flight slots
+# ----------------------------------------------------------------------
+
+def test_retune_isolates_inflight_requests(setup):
+    cfg, params = setup
+    tun = OnlineTuner(params, cfg, SLA(min_psnr=10.0), slots=2,
+                      max_steps=NUM_STEPS, candidates=CANDS,
+                      retune_every=0, seed=0,
+                      initial=("none", {}))
+    assert tun.current.policy_name == "none"
+    tun.submit_all(_requests(2, guided_every=10**9))   # unguided
+    for _ in range(3):
+        tun.tick()
+    old_session = tun.active
+    old_policy = old_session.engine.policy
+    target = [t for t in tun.swept if t.policy_name == "fora"][0]
+    assert tun.maybe_retune(force_to=target) is not None
+    # blue/green: the old session drains untouched on its original engine
+    assert tun.draining == [old_session]
+    assert old_session.engine.policy is old_policy
+    assert tun.active is not old_session
+    assert tun.active.engine is not old_session.engine
+    tun.submit_all(_requests(2, start=10, guided_every=10**9))
+    res = tun.drain()
+    by_id = {r.request_id: r.record for r in res}
+    assert sorted(by_id) == [0, 1, 10, 11]
+    # in-flight requests finish under the policy that admitted them (none:
+    # every step computes); post-swap requests run fora/2 (half the steps)
+    assert by_id[0].computed_steps == NUM_STEPS
+    assert by_id[1].computed_steps == NUM_STEPS
+    assert by_id[10].computed_steps == NUM_STEPS // 2
+    assert by_id[11].computed_steps == NUM_STEPS // 2
+    assert len(tun.swaps) == 1
+    assert tun.swaps[0]["from"][0] == "none"
+    assert tun.swaps[0]["to"][0] == "fora"
+    assert tun.summary()["policy"] == "fora"
+
+
+def test_retune_noop_cases(setup):
+    cfg, params = setup
+    tun = OnlineTuner(params, cfg, SLA(min_psnr=10.0), slots=2,
+                      max_steps=NUM_STEPS, candidates=CANDS,
+                      retune_every=0, min_window_ticks=1,
+                      initial=("none", {}))
+    assert tun.maybe_retune() is None          # empty window: nothing to price
+    assert tun.maybe_retune(force_to=tun.current) is None   # same pick: no-op
+    assert tun.swaps == [] and tun.draining == []
+    tun.finish()
+
+
+def test_tuner_priced_retune_uses_live_window(setup):
+    """Synthetic window states drive the pricing deterministically: while
+    device planning looks free the tuner swaps onto the dynamic candidate
+    with fewer rows; once the window measures the real per-tick want-pass
+    sync, the plan-time surcharge flips the pick and the tuner rolls back
+    to the static plan — the self-correction loop."""
+    cfg, params = setup
+    tun = OnlineTuner(params, cfg, SLA(min_psnr=10.0), slots=2,
+                      max_steps=NUM_STEPS, candidates=CANDS,
+                      retune_every=0, min_window_ticks=1,
+                      initial=("none", {}))
+    # warm window: 10 ms/row at occupancy 2, no device-planned ticks seen
+    # yet -> plan surcharge 0, and teacache (the only other feasible
+    # candidate; fora is below the floor) wins on rows alone
+    for t in range(4):
+        tun.window.observe(_event(t, seconds=0.080, rows=8, busy=2))
+    pick = tun.maybe_retune()
+    assert pick is not None and pick.policy_name == "teacache"
+    assert not pick.static_plan
+    assert tun.current.feasible
+    # now the window shows what rows-only pricing missed: every device-
+    # planned tick pays a fat want-pass sync (200 ms >> the rows it saves),
+    # so the static all-compute plan is cheaper end to end
+    for t in range(4, 12):
+        tun.window.observe(_event(t, seconds=0.050, rows=8, busy=2,
+                                  plan_s=0.200,
+                                  metric=np.zeros(4, np.float32)))
+    assert tun.window.plan_time_ms() == pytest.approx(200.0)
+    pick2 = tun.maybe_retune()
+    assert pick2 is not None and pick2.policy_name == "none"
+    assert len(tun.swaps) == 2
+    assert tun.swaps[1]["plan_time_ms"] == pytest.approx(200.0)
+    tun.finish()
+
+
+# ----------------------------------------------------------------------
+# SmoothCache static baseline
+# ----------------------------------------------------------------------
+
+def test_smoothcache_calibration_and_static_serving(setup):
+    cfg, params = setup
+    profile = calibration_profile(params, cfg, NUM_STEPS)
+    assert len(profile) == NUM_STEPS
+    assert profile[0] == 0.0 and all(p >= 0.0 for p in profile)
+    sc = SmoothCacheSchedule(profile, alpha=0.05)
+    sched = sc.static_schedule(NUM_STEPS)
+    assert sched[0] is True and len(sched) == NUM_STEPS
+    assert 0.0 < sc.compute_fraction <= 1.0
+    # larger alpha tolerates more accumulated drift -> not more computes
+    looser = SmoothCacheSchedule(profile, alpha=0.5)
+    assert looser.compute_fraction <= sc.compute_fraction
+    # int-step want_compute -> the engine hosts it on the static plan
+    eng = DiffusionServingEngine(params, cfg, sc, slots=2,
+                                 max_steps=NUM_STEPS)
+    assert eng._static_plan is not None
+    res = eng.serve(_requests(2, guided_every=10**9))
+    want = sum(sched)
+    assert all(r.record.computed_steps == want for r in res)
+
+
+# ----------------------------------------------------------------------
+# SignalTraceLog + learned want_compute end-to-end
+# ----------------------------------------------------------------------
+
+def test_trace_log_records_and_bounds(setup):
+    cfg, params = setup
+    trace = SignalTraceLog(max_entries=5, probe_every=0)
+    eng = DiffusionServingEngine(params, cfg, "teacache", slots=2,
+                                 max_steps=NUM_STEPS)
+    eng.serve(_requests(2, guided_every=10**9), hooks=[trace.observe])
+    assert trace.wants_latents is False
+    assert len(trace.entries) == 5               # ring-bounded
+    assert trace.entries_seen == 2 * NUM_STEPS   # but everything was seen
+    assert trace.probes == {}
+    s = trace.summary()
+    assert s["entries"] == 5 and 0.0 <= s["want_cond_rate"] <= 1.0
+
+
+def test_learned_gate_from_traces_serves_equivalently(setup):
+    cfg, params = setup
+    trace = SignalTraceLog(probe_every=1, max_probes=4)
+    eng = DiffusionServingEngine(params, cfg, "none", slots=2,
+                                 max_steps=NUM_STEPS)
+    eng.serve(_requests(3, guided_every=10**9), hooks=[trace.observe],
+              capture_latents=trace.wants_latents)
+    assert len(trace.probes) == 3
+    sets = probe_training_set(params, cfg, trace)
+    assert len(sets) == 3
+    for xs, eps in sets:
+        assert xs.shape == (NUM_STEPS, cfg.dit_tokens, cfg.dit_in_dim)
+        assert eps.shape == xs.shape
+    gate, hist = fit_want_gate(jax.random.PRNGKey(1), sets, steps=60)
+    assert hist[-1] < hist[0]
+    # the learned predictor serves through the registry on BOTH engine
+    # paths, and the row-compacted path reproduces the dense reference
+    outs = {}
+    for compact in (True, False):
+        e = DiffusionServingEngine(
+            params, cfg, make_policy("lazydit", gate=gate, threshold=0.5),
+            slots=2, max_steps=NUM_STEPS, row_compaction=compact)
+        assert isinstance(e.policy, LazyDiTPolicy)
+        outs[compact] = e.serve(_requests(3, guided_every=10**9))
+    for a, b in zip(outs[True], outs[False]):
+        assert a.record.computed_steps == b.record.computed_steps
+        np.testing.assert_allclose(a.x0, b.x0, rtol=2e-4, atol=2e-4)
+
+
+def test_fit_want_gate_requires_probes():
+    with pytest.raises(ValueError, match="probe"):
+        fit_want_gate(jax.random.PRNGKey(0), [])
+
+
+# ----------------------------------------------------------------------
+# ControlPlane: one tuner per modality
+# ----------------------------------------------------------------------
+
+def test_control_plane_routes_by_modality(setup):
+    cfg, params = setup
+    mk = lambda m: OnlineTuner(params, cfg, SLA(min_psnr=10.0), slots=2,
+                               max_steps=NUM_STEPS, modality=m,
+                               candidates=[("fora", {"interval": 2})],
+                               retune_every=0, initial=("fora", {"interval": 2}))
+    plane = ControlPlane({"image": mk("image"), "audio": mk("audio")})
+    reqs = (_requests(2, modality="image", guided_every=10**9)
+            + _requests(2, start=5, modality="audio", guided_every=10**9))
+    plane.submit_all(reqs)
+    with pytest.raises(KeyError, match="video"):
+        plane.submit(DiffusionRequest(50, num_steps=NUM_STEPS, seed=0,
+                                      modality="video"))
+    res = plane.drain()
+    assert [r.request_id for r in res] == [0, 1, 5, 6]   # submission order
+    summ = plane.summary()
+    assert set(summ) == {"image", "audio"}
+    assert summ["image"]["window"]["ticks_seen"] > 0
+    assert summ["audio"]["modality"] == "audio"
+    with pytest.raises(ValueError, match="at least one"):
+        ControlPlane({})

@@ -303,8 +303,19 @@ def test_dbcache_stack_probe_gate():
 
 
 def test_registry_builds_all():
+    # entries with no sensible default must say what's missing…
+    with pytest.raises(ValueError, match="gate"):
+        make_policy("lazydit")
+    with pytest.raises(ValueError, match="profile"):
+        make_policy("blockcache")
+    # …and every entry constructs once its required inputs are supplied
+    from repro.core.learned import init_gate
+    required = {
+        "lazydit": {"gate": init_gate(jax.random.PRNGKey(0), SHAPE[-1])},
+        "blockcache": {"profile": [0.0, 0.2, 0.05, 0.2]},
+    }
     for name in POLICY_REGISTRY:
-        pol = make_policy(name)
+        pol = make_policy(name, **required.get(name, {}))
         state = pol.init_state(SHAPE)
         assert isinstance(state, dict)
 

@@ -1,0 +1,162 @@
+"""Learned (LazyDiT gate) and predictive (forecast-basis) policies: gate
+training convergence, registry round-trips, forecast basis shapes/masking,
+and want_compute mirroring apply — the invariants the serving engine's
+fused want pass and the control plane's learned predictor lean on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_policy
+from repro.core.learned import (LazyDiTPolicy, gate_score, init_gate,
+                                lazy_trajectory_loss, train_lazy_gate)
+from repro.core.predictive import (BASES, PredictivePolicy,
+                                   forecast_from_diffs, update_diff_stack)
+
+FEAT = 6
+
+
+# ----------------------------------------------------------------------
+# gate training (learned want_compute)
+# ----------------------------------------------------------------------
+
+def _trajectory(key, T=10, tokens=4, drift=1.0):
+    """Synthetic module trajectory whose outputs drift by `drift` per step
+    (drift=0 -> perfectly cacheable)."""
+    k1, k2 = jax.random.split(key)
+    x0 = jax.random.normal(k1, (tokens, FEAT))
+    steps = drift * jax.random.normal(k2, (T, tokens, FEAT))
+    inputs = x0[None] + jnp.cumsum(steps, axis=0)
+    outputs = 2.0 * inputs + 1.0
+    return inputs, outputs
+
+
+def test_lazy_gate_training_converges():
+    inputs, outputs = _trajectory(jax.random.PRNGKey(0))
+    gate, hist = train_lazy_gate(jax.random.PRNGKey(1), inputs, outputs,
+                                 steps=120)
+    assert len(hist) == 120
+    assert np.isfinite(hist).all()
+    assert hist[-1] < hist[0]
+
+
+def test_lazy_loss_rewards_skipping_static_trajectories():
+    """On a drift-free trajectory every step is cacheable: the soft-skip
+    reward dominates, so a high-scoring gate beats a low-scoring one."""
+    inputs, outputs = _trajectory(jax.random.PRNGKey(2), drift=0.0)
+    skippy = {"w": jnp.zeros((FEAT,)), "b": jnp.full((), 8.0)}   # s ~= 1
+    eager = {"w": jnp.zeros((FEAT,)), "b": jnp.full((), -8.0)}   # s ~= 0
+    l_skip = float(lazy_trajectory_loss(skippy, inputs, outputs))
+    l_eager = float(lazy_trajectory_loss(eager, inputs, outputs))
+    assert l_skip < l_eager
+
+
+def test_lazydit_want_mirrors_apply():
+    """want_compute must predict exactly the branch apply takes — that is
+    the contract the row-compacted serving planner relies on."""
+    gate = init_gate(jax.random.PRNGKey(3), FEAT)
+    pol = LazyDiTPolicy(gate, threshold=0.5)
+    state = pol.init_state((4, FEAT))
+    # lax.cond traces both branches, so compute-vs-reuse is observed via
+    # the policy's own n_compute counter, not a Python call count
+    for step in range(6):
+        x = jax.random.normal(jax.random.PRNGKey(10 + step), (4, FEAT))
+        before = int(state["n_compute"])
+        want = bool(pol.want_compute(state, step, x))
+        y, state = pol.apply(state, step, x, lambda v: 2.0 * v)
+        assert (int(state["n_compute"]) - before == 1) == want
+        if want:
+            np.testing.assert_allclose(np.asarray(y), np.asarray(2.0 * x),
+                                       rtol=1e-6)
+    assert bool(pol.want_compute(pol.init_state((4, FEAT)), 0, x))  # first step
+
+
+def test_lazydit_want_metric_is_gate_score():
+    gate = init_gate(jax.random.PRNGKey(4), FEAT)
+    pol = LazyDiTPolicy(gate, threshold=0.5)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, FEAT))
+    m = pol.want_metric(pol.init_state((4, FEAT)), 0, x)
+    assert m.shape == () and m.dtype == jnp.float32
+    np.testing.assert_allclose(float(m), float(gate_score(gate, x)),
+                               rtol=1e-6)
+
+
+def test_lazydit_registry_requires_gate():
+    with pytest.raises(ValueError, match="gate"):
+        make_policy("lazydit")
+    gate = init_gate(jax.random.PRNGKey(6), FEAT)
+    pol = make_policy("lazydit", gate=gate, threshold=0.25)
+    assert isinstance(pol, LazyDiTPolicy)
+    assert pol.threshold == 0.25
+    assert pol.gate is gate
+
+
+# ----------------------------------------------------------------------
+# predictive forecasting (TaylorSeer family)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("basis", BASES)
+def test_forecast_shapes_and_finiteness(basis):
+    diffs = jnp.zeros((3, 4, FEAT))
+    for y in [jnp.ones((4, FEAT)), 2.0 * jnp.ones((4, FEAT)),
+              4.0 * jnp.ones((4, FEAT))]:
+        diffs = update_diff_stack(diffs, y)
+    out = forecast_from_diffs(diffs, 0.5, 3, basis=basis)
+    assert out.shape == (4, FEAT)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("basis", [b for b in BASES if b != "foca"])
+def test_forecast_masks_unobserved_orders(basis):
+    """With one observed compute, every basis must degrade to plain reuse
+    (higher-order terms are built from differences that don't exist yet)."""
+    diffs = update_diff_stack(jnp.zeros((3, 4, FEAT)),
+                              5.0 * jnp.ones((4, FEAT)))
+    out = forecast_from_diffs(diffs, 2.0, 1, basis=basis)
+    np.testing.assert_allclose(np.asarray(out), 5.0, rtol=1e-6)
+
+
+def test_foca_falls_back_to_reuse_below_two_computes():
+    diffs = update_diff_stack(jnp.zeros((3, 4, FEAT)),
+                              3.0 * jnp.ones((4, FEAT)))
+    out = forecast_from_diffs(diffs, 1.0, 1, basis="foca")
+    np.testing.assert_allclose(np.asarray(out), 3.0, rtol=1e-6)
+
+
+def test_taylor_forecast_extrapolates_linear_sequence():
+    """A linear sequence's first difference is constant: a first-order
+    Taylor step must extrapolate it exactly."""
+    diffs = jnp.zeros((2, 1, 1))
+    for v in (1.0, 2.0, 3.0):
+        diffs = update_diff_stack(diffs, jnp.full((1, 1), v))
+    out = forecast_from_diffs(diffs, 2.0, 3, basis="taylor")
+    np.testing.assert_allclose(np.asarray(out), 5.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name,basis", [
+    ("taylorseer", "taylor"), ("newtonseer", "newton"),
+    ("hicache", "hermite"), ("abcache", "ab"), ("foca", "foca")])
+def test_predictive_registry_round_trip(name, basis):
+    pol = make_policy(name, interval=3)
+    assert isinstance(pol, PredictivePolicy)
+    assert pol.basis == basis
+    assert pol.interval == 3
+    assert pol.name == name
+    # int-step want_compute mirrors the static schedule — what lets the
+    # serving engine host these policies on the zero-sync static plan
+    sched = pol.static_schedule(7)
+    assert sched == [s % 3 == 0 for s in range(7)]
+    state = pol.init_state((2, FEAT))
+    for s in range(7):
+        assert bool(pol.want_compute(state, s, None)) == sched[s]
+
+
+def test_predictive_want_mirrors_apply():
+    pol = PredictivePolicy(interval=2, order=2, basis="taylor")
+    state = pol.init_state((2, FEAT))
+    for step in range(6):
+        x = jnp.ones((2, FEAT)) * (step + 1)
+        before = int(state["n_valid"])
+        want = bool(pol.want_compute(state, step, x))
+        _, state = pol.apply(state, step, x, lambda v: v * 1.5)
+        assert (int(state["n_valid"]) - before == 1) == want == (step % 2 == 0)

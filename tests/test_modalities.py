@@ -11,6 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import (POLICY_REGISTRY, FasterCacheCFG, TemporalPABStack,
                         TemporalTeaCachePolicy, make_policy)
+from repro.core.learned import init_gate
 from repro.diffusion import ddim_step, linear_schedule, sample
 from repro.diffusion.pipeline import backbone_fns, cfg_denoise_fn
 from repro.modalities import (MODALITIES, MixedModalityEngine, get_modality,
@@ -41,6 +42,14 @@ ALWAYS_COMPUTE = {
     "clusca": {"interval": 1},
     "speca": {"interval": 1},
     "fastercache_cfg": {"interval": 1},
+    # constructor-argument policies: callable entries get the workload so
+    # the gate/profile can match its latent shapes.  threshold=1.0 makes
+    # the learned gate refresh every step (sigmoid <= 1); delta=0.0 under
+    # a strictly positive profile recomputes at every calibrated step.
+    "lazydit": lambda wl: {"gate": init_gate(jax.random.PRNGKey(0),
+                                             wl.latent_dim),
+                           "threshold": 1.0},
+    "blockcache": lambda wl: {"profile": [1.0] * NUM_STEPS, "delta": 0.0},
 }
 
 
@@ -104,7 +113,10 @@ def test_always_compute_policies_match_uncached(workloads, exact_cache,
     must reproduce the exact uncached trajectory on every modality's shapes
     — image latents, video clips (frame axis), audio mel-spectrograms."""
     wl = workloads[modality]
-    pol = wl.make_policy(name, num_steps=NUM_STEPS, **ALWAYS_COMPUTE[name])
+    extras = ALWAYS_COMPUTE[name]
+    if callable(extras):
+        extras = extras(wl)
+    pol = wl.make_policy(name, num_steps=NUM_STEPS, **extras)
     if name == "fastercache_cfg":
         # CFG-branch policy: exercise it in its slot (uncond gate) instead
         exact = _exact(exact_cache, workloads, modality, cfg_scale=2.0)

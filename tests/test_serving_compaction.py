@@ -9,6 +9,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import POLICY_REGISTRY, FasterCacheCFG, make_policy
+from repro.core.learned import init_gate
 from repro.models import init_params, perturb_zero_init
 from repro.serving.diffusion import (SLA, DiffusionRequest,
                                      DiffusionServingEngine, autotune,
@@ -110,9 +111,17 @@ def test_compacted_matches_dense_engine(setup, name):
     never the per-slot policy step."""
     cfg, params = setup
     reqs = _mixed_requests()
+    # the learned gate has no untrained default and the calibrated schedule
+    # no default profile: give them fixed stand-ins (the decision sequence
+    # is deterministic either way, which is all the equivalence check needs)
+    extra = {"lazydit": {"gate": init_gate(jax.random.PRNGKey(7),
+                                           cfg.dit_in_dim)},
+             "blockcache": {"profile": [0.0, 0.08, 0.02, 0.08, 0.02, 0.08,
+                                        0.02, 0.08], "delta": 0.09}
+             }.get(name, {})
     results = {}
     for compact in (True, False):
-        pol = make_policy(name, num_steps=NUM_STEPS)
+        pol = make_policy(name, num_steps=NUM_STEPS, **extra)
         _, results[compact] = _serve(cfg, params, pol, reqs, compact=compact,
                                      cfg_policy=FasterCacheCFG(3, NUM_STEPS))
     for a, b in zip(results[True], results[False]):

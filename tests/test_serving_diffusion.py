@@ -494,6 +494,16 @@ def test_policy_registry_covers_taxonomy():
     assert "dbcache" in STRUCTURAL_POLICIES
     with pytest.raises(KeyError, match="structural"):
         make_policy("dbcache")
-    # every registry entry constructs
+    # every registry entry constructs (the learned gate needs its trained
+    # params and the calibrated schedule its measured profile — neither has
+    # a meaningful default, and the registry says so instead of silently
+    # serving a random gate / an uncalibrated schedule)
+    from repro.core.learned import init_gate
+    with pytest.raises(ValueError, match="gate"):
+        make_policy("lazydit")
+    with pytest.raises(ValueError, match="profile"):
+        make_policy("blockcache")
+    required = {"lazydit": {"gate": init_gate(jax.random.PRNGKey(0), 4)},
+                "blockcache": {"profile": [0.0, 0.2, 0.05, 0.2]}}
     for name in POLICY_REGISTRY:
-        assert make_policy(name) is not None
+        assert make_policy(name, **required.get(name, {})) is not None
