@@ -235,7 +235,7 @@ def run_mixed_serving(workloads, *, num_steps, num_requests, slots, smoke):
             "summaries": out}, failures
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, json_out: bool = False):
     workloads = _workloads(smoke)
     if smoke:
         traj_rows, fails = run_trajectories(workloads, num_steps=8,
@@ -249,8 +249,11 @@ def run(smoke: bool = False):
         mixed, mfails = run_mixed_serving(workloads, num_steps=16,
                                           num_requests=12, slots=4,
                                           smoke=False)
-    save_result("modalities", {"trajectories": traj_rows, "mixed": mixed,
-                               "smoke": smoke})
+    payload = {"trajectories": traj_rows, "mixed": mixed,
+               "smoke": smoke, "failures": fails + mfails}
+    save_result("modalities", payload)
+    if json_out:
+        save_result("BENCH_modalities", payload)
     if fails or mfails:
         raise AssertionError("; ".join(fails + mfails))
 
@@ -259,5 +262,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config + few ticks (CI per-PR run)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write results/BENCH_modalities.json (the "
+                         "stable-name copy CI uploads as an artifact)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, json_out=args.json)

@@ -203,8 +203,13 @@ def run_cfg(cfg, params, *, num_requests, steps, slots, smoke):
 def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
     """Row-compacted vs dense whole-pool ticks on a mixed TeaCache + CFG
     pool: equal per-request output, strictly fewer backbone rows, req/s no
-    worse (timing claim skipped in smoke mode)."""
+    worse (timing claim skipped in smoke mode).  Also reports the measured
+    redundancy ratio (FLOPs avoided / dense FLOPs, priced from warmup's
+    per-bucket XLA cost analysis) and bounds the observability overhead:
+    serving the same queue with a TraceRecorder + MetricsRegistry attached
+    must stay within 5% req/s of hooks-off serving."""
     from repro.core import FasterCacheCFG
+    from repro.obs import (MetricsRegistry, TraceRecorder, redundancy_ratio)
     from repro.serving.diffusion import (DiffusionRequest,
                                          DiffusionServingEngine)
 
@@ -215,7 +220,8 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
     reqs = [DiffusionRequest(i, num_steps=steps, seed=i, class_label=i % 10,
                              cfg_scale=CFG_SCALE if i % 2 == 0 else 0.0)
             for i in range(num_requests)]
-    out, results = {}, {}
+    out, results, profiles = {}, {}, {}
+    engines = {}
     for mode, compact in (("compacted", True), ("dense", False)):
         eng = DiffusionServingEngine(params, cfg, "teacache", slots=slots,
                                      max_steps=steps,
@@ -223,8 +229,9 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
                                                                steps),
                                      row_compaction=compact)
         # compile every bucket program up front (state-dependent policies
-        # surface new bucket sizes mid-run), then warm the host paths
-        eng.warmup()
+        # surface new bucket sizes mid-run), then warm the host paths;
+        # warmup doubles as the program profiler (compile time + FLOPs)
+        profiles[mode] = eng.warmup()
         eng.serve([DiffusionRequest(10_000 + i, num_steps=steps, seed=i,
                                     cfg_scale=CFG_SCALE)
                    for i in range(slots)])
@@ -232,13 +239,50 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
         assert len(res) == num_requests
         assert all(np.isfinite(r.x0).all() for r in res)
         s = eng.telemetry.summary()
-        out[mode], results[mode] = s, res
+        out[mode], results[mode], engines[mode] = s, res, eng
         print(f"{mode:12s} {s['throughput_rps']:8.2f} "
               f"{s['latency_p50_s']:8.3f}s {s['backbone_rows_computed']:7d} "
               f"{s['backbone_rows_padding']:5d} "
               f"{s['backbone_rows_saved']:7d}")
 
+    # measured redundancy ratio: the survey's step-redundancy claim in
+    # FLOPs, priced from the compacted engine's warmup cost cards
+    s_c = out["compacted"]
+    redundancy = redundancy_ratio(profiles["compacted"],
+                                  s_c["backbone_rows_computed"],
+                                  s_c["backbone_rows_padding"],
+                                  s_c["backbone_rows_saved"])
+    print(f"redundancy ratio: {redundancy['redundancy_ratio']:.3f} "
+          f"({redundancy['flops_avoided']:.3g} of "
+          f"{redundancy['dense_flops']:.3g} dense FLOPs avoided, "
+          f"{redundancy['flops_per_row']:.3g} FLOPs/row)")
+
+    # observability overhead: same queue, hooks on (trace + metrics)
+    eng = engines["compacted"]
+    recorder = TraceRecorder(policy=eng.policy)
+    registry = MetricsRegistry()
+    res = eng.serve(reqs, hooks=[recorder], metrics=registry)
+    assert len(res) == num_requests
+    recorder.finish()
+    s_obs = eng.telemetry.summary()
+    obs_ratio = (s_obs["throughput_rps"] /
+                 max(s_c["throughput_rps"], 1e-9))
+    print(f"hooks-on (trace+metrics) vs hooks-off req/s: {obs_ratio:.3f}x "
+          f"({len(recorder.events)} trace events, "
+          f"{len(recorder.cache_events)} cache events)")
+
     failures = []
+    # the recorder must reconcile with telemetry even under refill churn
+    rec_rows = int(registry.counter(
+        "repro_engine_rows_computed_total").value(modality="image"))
+    if rec_rows != s_obs["backbone_rows_computed"]:
+        failures.append(f"metrics/telemetry row mismatch: {rec_rows} vs "
+                        f"{s_obs['backbone_rows_computed']}")
+    # timing claim (skipped in smoke mode — tiny models are noise-bound):
+    # observability must cost <= 5% req/s
+    if not smoke and obs_ratio < 0.95:
+        failures.append(f"observability overhead exceeded 5% req/s: "
+                        f"{obs_ratio:.3f}x")
     # equal output: compaction only changes which rows are batched, never
     # the per-slot policy step
     for a, b in zip(results["compacted"], results["dense"]):
@@ -265,6 +309,11 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
     return {"throughput_ratio": ratio,
             "backbone_rows": {"compacted": rows_compact,
                               "dense": rows_dense},
+            "redundancy": redundancy,
+            "program_profiles": {
+                mode: [p.as_dict() for _, p in sorted(prof.items(), key=str)]
+                for mode, prof in profiles.items()},
+            "observability_overhead_ratio": obs_ratio,
             "summaries": out}, failures
 
 
@@ -282,9 +331,8 @@ def run_control(cfg, params, *, num_requests, steps, slots, smoke,
     Both choose from the same schedule family (CONTROL_ALPHAS) plus the
     dynamic CONTROL_POLICIES, making the measured gap the value of live
     re-pricing itself."""
-    import time
-
     from benchmarks.common import run_policy, trajectory_reference
+    from repro.obs.clock import monotonic
     from repro.core.metrics import psnr
     from repro.serving.control import (OnlineTuner, SmoothCacheSchedule,
                                        calibration_profile)
@@ -362,10 +410,10 @@ def run_control(cfg, params, *, num_requests, steps, slots, smoke,
     tuner.submit_all([replace(r, request_id=10_000 + r.request_id)
                       for r in warm])
     tuner.drain()
-    t0 = time.perf_counter()
+    t0 = monotonic()
     tuner.submit_all(reqs)
     tun_res = [r for r in tuner.drain() if r.request_id < 10_000]
-    elapsed = time.perf_counter() - t0
+    elapsed = monotonic() - t0
     tun_psnr = quality(tun_res)
     for rid, db in tun_psnr.items():
         tuner.window.note_psnr(rid, db)
@@ -404,7 +452,8 @@ def run_control(cfg, params, *, num_requests, steps, slots, smoke,
     return {"throughput_ratio": ratio, **out}, failures
 
 
-def run(smoke: bool = False, mode: str = "all"):
+def run(smoke: bool = False, mode: str = "all", json_out: bool = False,
+        profile_dir: str = None):
     if smoke:
         cfg, params = small_dit(layers=2, d_model=64, tokens=16, in_dim=8)
         sizes = dict(num_requests=4, steps=8, slots=2, smoke=True)
@@ -416,30 +465,39 @@ def run(smoke: bool = False, mode: str = "all"):
         sizes = dict(num_requests=12, steps=16, slots=4, smoke=False)
         control_kw = dict(psnr_floor=5.0, retune_every=16)
 
+    from repro.obs import profiler_trace
+
     payload, fails = {"smoke": smoke, "mode": mode}, []
-    if mode in ("all", "throughput"):
-        if smoke:
-            rows, comparisons, f = run_unguided(cfg, params, num_requests=6,
-                                                budgets=(4, 8),
-                                                slot_counts=(2,), smoke=True)
-        else:
-            rows, comparisons, f = run_unguided(
-                cfg, params, num_requests=NUM_REQUESTS, budgets=BUDGETS,
-                slot_counts=SLOT_COUNTS, smoke=False)
-        payload.update(rows=rows, throughput_vs_none=comparisons)
-        fails += f
-    if mode in ("all", "cfg"):
-        payload["cfg"], f = run_cfg(cfg, params, **sizes)
-        fails += f
-    if mode in ("all", "compaction"):
-        payload["compaction"], f = run_compaction(cfg, params, **sizes)
-        fails += f
-    if mode in ("all", "online-tuner"):
-        payload["control"], f = run_control(cfg, params, **sizes,
-                                            **control_kw)
-        fails += f
+    with profiler_trace(profile_dir):
+        if mode in ("all", "throughput"):
+            if smoke:
+                rows, comparisons, f = run_unguided(
+                    cfg, params, num_requests=6, budgets=(4, 8),
+                    slot_counts=(2,), smoke=True)
+            else:
+                rows, comparisons, f = run_unguided(
+                    cfg, params, num_requests=NUM_REQUESTS, budgets=BUDGETS,
+                    slot_counts=SLOT_COUNTS, smoke=False)
+            payload.update(rows=rows, throughput_vs_none=comparisons)
+            fails += f
+        if mode in ("all", "cfg"):
+            payload["cfg"], f = run_cfg(cfg, params, **sizes)
+            fails += f
+        if mode in ("all", "compaction"):
+            payload["compaction"], f = run_compaction(cfg, params, **sizes)
+            fails += f
+        if mode in ("all", "online-tuner"):
+            payload["control"], f = run_control(cfg, params, **sizes,
+                                                **control_kw)
+            fails += f
+    payload["failures"] = fails
     # save the payload before raising so a failed claim is still diagnosable
     save_result("serving" if mode == "all" else f"serving_{mode}", payload)
+    if json_out:
+        # the CI-artifact / seed-comparison copy: a stable BENCH_* name the
+        # workflow uploads and the repo pins a seed snapshot of
+        save_result("BENCH_serving" if mode == "all"
+                    else f"BENCH_serving_{mode.replace('-', '_')}", payload)
     if fails:
         raise AssertionError("; ".join(fails))
 
@@ -452,5 +510,12 @@ if __name__ == "__main__":
                     choices=("all", "throughput", "cfg", "compaction",
                              "online-tuner"),
                     help="run one benchmark section instead of all of them")
+    ap.add_argument("--json", action="store_true",
+                    help="also write results/BENCH_serving*.json (the "
+                         "stable-name copy CI uploads as an artifact)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the whole run "
+                         "into this directory (TensorBoard/Perfetto)")
     args = ap.parse_args()
-    run(smoke=args.smoke, mode=args.mode)
+    run(smoke=args.smoke, mode=args.mode, json_out=args.json,
+        profile_dir=args.profile_dir)

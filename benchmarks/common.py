@@ -3,11 +3,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.clock import monotonic
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
@@ -82,7 +83,7 @@ def run_policy(policy, params, cfg, sched, ts, xT, granularity="model",
 def timeit(fn, *args, reps: int = 3, warmup: int = 1):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    t0 = monotonic()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
+    return (monotonic() - t0) / reps

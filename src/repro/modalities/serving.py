@@ -22,10 +22,10 @@ back to back.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence
 
+from repro.obs.clock import monotonic
 from repro.serving.diffusion import (SLA, DiffusionRequest, DiffusionResult,
                                      DiffusionServingEngine, ServingTelemetry,
                                      autotune)
@@ -108,24 +108,28 @@ class MixedModalityEngine:
             for name, wl in workloads.items()})
 
     # ------------------------------------------------------------------
-    def warmup(self) -> None:
+    def warmup(self) -> Dict[str, Dict]:
         """Pre-compile every sub-pool's tick programs (one bucket set per
-        modality shape) so the first mixed tick runs at steady state."""
-        for eng in self.pools.values():
-            eng.warmup()
+        modality shape) so the first mixed tick runs at steady state.
+        Returns {modality: program_profile} — each sub-pool's per-program
+        compile-time / FLOPs cost cards (see engine.warmup)."""
+        return {m: eng.warmup() for m, eng in self.pools.items()}
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[DiffusionRequest],
               max_ticks: Optional[int] = None,
-              hooks: Optional[Mapping[str, Sequence]] = None
-              ) -> List[DiffusionResult]:
+              hooks: Optional[Mapping[str, Sequence]] = None,
+              metrics=None) -> List[DiffusionResult]:
         """Route requests to their modality sub-pools and interleave the
         sessions until all are done; results come back in request order.
         `max_ticks` bounds the OUTER loop (each sub-pool advances at most
         that many ticks); cut-off requests are recorded as preempted in
         their pool's telemetry.  `hooks` maps modality -> TickHook list so
         a control plane can watch each sub-pool's ticks (each hook sees
-        TickEvents tagged with that pool's modality)."""
+        TickEvents tagged with that pool's modality).  `metrics` (a
+        repro.obs MetricsRegistry) is shared across sub-pools — every
+        sample carries a modality label, so one registry serves the whole
+        mixed pool."""
         by_mod: Dict[str, List[DiffusionRequest]] = {}
         for r in requests:
             if r.modality not in self.pools:
@@ -134,13 +138,13 @@ class MixedModalityEngine:
                                f"(pools: {sorted(self.pools)})")
             by_mod.setdefault(r.modality, []).append(r)
 
-        t0 = time.perf_counter()
+        t0 = monotonic()
         sessions: Dict[str, object] = {}
         try:
             hooks = dict(hooks or {})
             for m, rs in by_mod.items():
                 sessions[m] = self.pools[m].start_session(
-                    rs, hooks=hooks.get(m), modality=m)
+                    rs, hooks=hooks.get(m), modality=m, metrics=metrics)
             ticks = 0
             while any(not s.done for s in sessions.values()):
                 for s in sessions.values():
@@ -162,7 +166,7 @@ class MixedModalityEngine:
         self.telemetry = MixedTelemetry(
             pools={m: s.tele for m, s in sessions.items()},
             row_tokens={m: self.pools[m].tokens for m in sessions},
-            elapsed_s=time.perf_counter() - t0)
+            elapsed_s=monotonic() - t0)
         return [results[r.request_id] for r in requests
                 if r.request_id in results]
 

@@ -31,9 +31,9 @@ loop per sub-pool.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+from repro.obs.clock import monotonic
 from repro.serving.diffusion import (SLA, DiffusionRequest, DiffusionResult,
                                      DiffusionServingEngine, ServeSession,
                                      TunedPolicy, price_and_pick,
@@ -66,7 +66,8 @@ class OnlineTuner:
                  trace: Optional[SignalTraceLog] = None,
                  initial: Union[TunedPolicy, Tuple[str, Dict], None] = None,
                  engine_kw: Optional[Dict] = None,
-                 warmup: bool = False, verbose: bool = False):
+                 warmup: bool = False, verbose: bool = False,
+                 registry=None):
         self.params, self.cfg, self.sla = params, cfg, sla
         self.slots, self.max_steps = slots, max_steps
         self.modality = modality
@@ -77,6 +78,10 @@ class OnlineTuner:
         self.engine_kw = dict(engine_kw or {})
         self._warmup = bool(warmup)
         self.verbose = bool(verbose)
+        #: optional repro.obs MetricsRegistry: retune decisions become
+        #: repro_control_* counters and blue/green swaps land in the event
+        #: ring; sessions opened by this tuner publish repro_engine_* too
+        self.registry = registry
 
         # 1. quality sweep once: PSNR / compute fractions are
         # traffic-independent, so retunes only ever re-PRICE this list
@@ -88,7 +93,8 @@ class OnlineTuner:
         if initial is None:
             # no live timings yet: pick on quality/compute alone
             self.current = price_and_pick(self.swept, sla,
-                                          num_steps=max_steps)
+                                          num_steps=max_steps,
+                                          registry=self.registry)
         elif isinstance(initial, TunedPolicy):
             self.current = initial
         else:                              # ("name", {kwargs}) shorthand
@@ -146,7 +152,7 @@ class OnlineTuner:
             capture = self.trace.wants_latents
         return self._engine_for(tuned).start_session(
             [], hooks=hooks, capture_latents=capture,
-            modality=self.modality)
+            modality=self.modality, metrics=self.registry)
 
     # ------------------------------------------------------------------
     def submit(self, request: DiffusionRequest) -> None:
@@ -227,7 +233,15 @@ class OnlineTuner:
                                   num_steps=self.max_steps,
                                   row_time_ms=row_time, occupancy=occ,
                                   plan_ms=self.window.plan_time_ms(),
-                                  verbose=self.verbose)
+                                  verbose=self.verbose,
+                                  registry=self.registry)
+            if self.registry is not None:
+                self.registry.counter(
+                    "repro_control_retunes_total",
+                    "Window re-pricings of the candidate sweep."
+                ).inc(modality=self.modality,
+                      swapped=str(_policy_key(pick)
+                                  != _policy_key(self.current)).lower())
         if _policy_key(pick) == _policy_key(self.current):
             return None
         self._swap(pick, row_time, occ)
@@ -248,7 +262,7 @@ class OnlineTuner:
         for r in old.transfer_queued():
             self.active.submit(r)
         self.swaps.append({
-            "tick": self.ticks, "time": time.perf_counter(),
+            "tick": self.ticks, "time": monotonic(),
             "from": (self.current.policy_name, dict(self.current.kwargs),
                      self.current.cfg_interval),
             "to": (pick.policy_name, dict(pick.kwargs), pick.cfg_interval),
@@ -256,6 +270,17 @@ class OnlineTuner:
             "plan_time_ms": self.window.plan_time_ms(),
             "est_latency_ms": pick.est_latency_ms,
         })
+        if self.registry is not None:
+            self.registry.counter(
+                "repro_control_swaps_total",
+                "Blue/green session rollovers applied by the online tuner."
+            ).inc(modality=self.modality, to=pick.policy_name)
+            self.registry.event(
+                "control.swap", modality=self.modality, tick=self.ticks,
+                policy_from=self.current.policy_name,
+                policy_to=pick.policy_name,
+                row_time_ms=row_time, occupancy=occ,
+                est_latency_ms=pick.est_latency_ms)
         self.current = pick
         if self.verbose:
             print(f"[control:{self.modality}] tick {self.ticks}: "
@@ -283,11 +308,19 @@ class OnlineTuner:
 class ControlPlane:
     """Per-modality OnlineTuners behind one submit/tick/drain surface."""
 
-    def __init__(self, tuners: Mapping[str, OnlineTuner]):
+    def __init__(self, tuners: Mapping[str, OnlineTuner],
+                 registry=None):
         if not tuners:
             raise ValueError("ControlPlane needs at least one tuner")
         self.tuners: Dict[str, OnlineTuner] = dict(tuners)
         self._order: List[int] = []
+        #: optional repro.obs MetricsRegistry; also handed to tuners that
+        #: don't already publish somewhere
+        self.registry = registry
+        if registry is not None:
+            for t in self.tuners.values():
+                if t.registry is None:
+                    t.registry = registry
 
     def submit(self, request: DiffusionRequest) -> None:
         if request.modality not in self.tuners:
@@ -295,6 +328,12 @@ class ControlPlane:
                            f"modality '{request.modality}' "
                            f"(tuners: {sorted(self.tuners)})")
         self._order.append(request.request_id)
+        if self.registry is not None:
+            self.registry.counter(
+                "repro_control_submitted_total",
+                "Requests submitted through the control plane."
+            ).inc(modality=request.modality,
+                  traffic_class=request.traffic_class)
         self.tuners[request.modality].submit(request)
 
     def submit_all(self, requests: Sequence[DiffusionRequest]) -> None:

@@ -163,3 +163,15 @@ class TelemetryWindow:
             "mean_metric": self.mean_metric(),
             "psnr_proxy_mean": self.psnr_mean() or 0.0,
         }
+
+    def publish(self, registry, modality: Optional[str] = None) -> None:
+        """Export the window's summary as `repro_window_*` gauges into a
+        repro.obs MetricsRegistry — the sliding-window view joins the same
+        scrape surface as the engine counters (gauges because the window
+        slides: each publish is a level reading, not an increment)."""
+        labels = {"modality": modality} if modality is not None else {}
+        for key, value in self.summary().items():
+            registry.gauge(
+                f"repro_window_{key}",
+                f"TelemetryWindow.summary()['{key}'] (published view)."
+            ).set(float(value), **labels)

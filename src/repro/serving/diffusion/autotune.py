@@ -241,8 +241,13 @@ def price_and_pick(evaluated: Sequence[TunedPolicy], sla: SLA,
                    row_time_ms: Optional[Tuple[float, float]] = None,
                    occupancy: int = 1,
                    plan_ms: float = 0.0,
-                   verbose: bool = False) -> TunedPolicy:
+                   verbose: bool = False,
+                   registry=None) -> TunedPolicy:
     """Price swept candidates against live timings and pick for the SLA.
+
+    registry: optional repro.obs MetricsRegistry — each pricing run lands
+    in its event ring (winner, feasible count, timing inputs) so retune
+    decisions are auditable alongside the serving metrics.
 
     Pure host-side arithmetic over the `sweep_candidates` output — cheap
     enough to run on every control-plane retune window with fresh
@@ -293,13 +298,23 @@ def price_and_pick(evaluated: Sequence[TunedPolicy], sla: SLA,
             # surcharge); quality breaks ties.  Without the surcharge this
             # ordering coincides with compute_fraction, so the objective
             # only *diverges* when a candidate needs device-planned ticks.
-            return min(feasible,
+            pick = min(feasible,
                        key=lambda t: (t.est_latency_ms, -t.psnr))
-        # no timings: cheapest feasible by rows; quality breaks ties
-        return min(feasible, key=lambda t: (t.compute_fraction, -t.psnr))
-    # nothing meets the SLA: serve the closest-to-exact candidate
-    best = max(priced, key=lambda t: t.psnr)
-    return replace(best, feasible=False)
+        else:
+            # no timings: cheapest feasible by rows; quality breaks ties
+            pick = min(feasible, key=lambda t: (t.compute_fraction, -t.psnr))
+    else:
+        # nothing meets the SLA: serve the closest-to-exact candidate
+        best = max(priced, key=lambda t: t.psnr)
+        pick = replace(best, feasible=False)
+    if registry is not None:
+        registry.event(
+            "autotune.price_and_pick", sla=sla.name,
+            picked=pick.policy_name, feasible=pick.feasible,
+            n_candidates=len(priced), n_feasible=len(feasible),
+            est_latency_ms=pick.est_latency_ms,
+            row_time_ms=row_time_ms, occupancy=occupancy, plan_ms=plan_ms)
+    return pick
 
 
 def autotune(params, cfg, sla: SLA,

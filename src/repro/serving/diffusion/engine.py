@@ -63,7 +63,6 @@ different timesteps of *different* step-budget grids within one program.
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
@@ -75,6 +74,8 @@ from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
                         make_policy)
 from repro.diffusion import NoiseSchedule, linear_schedule
 from repro.diffusion.pipeline import slot_compact_denoise_fns, slot_want_fns
+from repro.obs.clock import monotonic
+from repro.obs.profiling import ProgramProfile, compile_program
 
 from .scheduler import DiffusionRequest, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
@@ -192,7 +193,8 @@ class ServeSession:
                  telemetry: Optional[ServingTelemetry] = None,
                  hooks: Optional[Sequence[TickHook]] = None,
                  capture_latents: bool = False,
-                 modality: Optional[str] = None):
+                 modality: Optional[str] = None,
+                 metrics=None):
         for r in requests:
             self._validate(engine, r)
         # per-slot timestep/conditioning tables live on the engine, so two
@@ -217,9 +219,15 @@ class ServeSession:
         self.tele = telemetry if telemetry is not None else ServingTelemetry()
         self.tele.cache_state_bytes_per_slot = cache_state_bytes(engine._fresh)
         self.tele.start()
+        #: opt-in repro.obs.MetricsRegistry — tick paths, scheduler
+        #: admission, and request lifecycle publish into it; None costs
+        #: nothing (naming: repro_<subsystem>_<metric>_<unit>)
+        self.metrics = metrics
 
         self.sched = SlotScheduler(engine.slots, engine.align)
-        now = time.perf_counter
+        if metrics is not None:
+            self.sched.bind_metrics(metrics, modality=self.modality)
+        now = monotonic
         self.recs: Dict[int, RequestRecord] = {
             r.request_id: RequestRecord(r.request_id, r.num_steps,
                                         r.traffic_class,
@@ -281,7 +289,7 @@ class ServeSession:
         self.recs[request.request_id] = RequestRecord(
             request.request_id, request.num_steps, request.traffic_class,
             cfg_scale=request.cfg_scale, modality=request.modality,
-            enqueue_time=time.perf_counter())
+            enqueue_time=monotonic())
         self.sched.submit(request)
 
     def transfer_queued(self) -> List[DiffusionRequest]:
@@ -306,7 +314,7 @@ class ServeSession:
             raise RuntimeError("session already finished; the engine's "
                                "per-slot tables may belong to a new session")
         eng, sched, tele = self.engine, self.sched, self.tele
-        now = time.perf_counter
+        now = monotonic
         T, D = eng.tokens, eng.in_dim
 
         # -- refill free slots from the queue (phase-aligned) -------
@@ -409,6 +417,12 @@ class ServeSession:
             self.results[req.request_id] = DiffusionResult(
                 req.request_id, np.asarray(self.xs[slot.index]), rec)
 
+        if self.metrics is not None:
+            self._publish_tick(kind, tick_s, plan_s, rows_done, rows_pad,
+                               dense_rows - rows_done
+                               if eng.row_compaction else 0,
+                               n_u, int(active.sum()), len(finished))
+
         if self.hooks:
             event = TickEvent(
                 tick=self.ticks, modality=self.modality, kind=kind,
@@ -425,6 +439,41 @@ class ServeSession:
 
         self.ticks += 1
 
+    def _publish_tick(self, kind: str, tick_s: float, plan_s: float,
+                      rows_done: int, rows_pad: int, rows_saved: int,
+                      n_u: int, occupancy: int, finished: int) -> None:
+        """One tick's worth of registry updates (metric names follow
+        repro_<subsystem>_<metric>_<unit>, labels carry dimensions)."""
+        m, mod = self.metrics, self.modality
+        m.counter("repro_engine_ticks_total",
+                  "engine ticks by program kind").inc(
+            kind=kind, modality=mod)
+        m.counter("repro_engine_tick_seconds_total",
+                  "device seconds of dispatched tick programs").inc(
+            tick_s, kind=kind, modality=mod)
+        m.counter("repro_engine_plan_seconds_total",
+                  "host seconds spent deciding ticks (want pass)").inc(
+            plan_s, modality=mod)
+        m.counter("repro_engine_rows_computed_total",
+                  "backbone rows carrying real per-slot work").inc(
+            rows_done, modality=mod)
+        m.counter("repro_engine_rows_padding_total",
+                  "pow-2 bucket padding rows dispatched").inc(
+            rows_pad, modality=mod)
+        m.counter("repro_engine_rows_saved_total",
+                  "rows a dense whole-pool tick would have added").inc(
+            rows_saved, modality=mod)
+        m.counter("repro_engine_uncond_rows_computed_total",
+                  "uncond rows refreshing a CFG cache").inc(
+            n_u, modality=mod)
+        m.counter("repro_engine_requests_finished_total",
+                  "requests completed").inc(finished, modality=mod)
+        m.gauge("repro_engine_occupancy_slots",
+                "busy slots at the latest tick").set(occupancy, modality=mod)
+        m.histogram("repro_engine_tick_seconds",
+                    "device tick time distribution").observe(
+            tick_s, modality=mod)
+
     # ------------------------------------------------------------------
     def finish(self) -> List[DiffusionResult]:
         """Close the session: preempted accounting, telemetry stop, results
@@ -436,6 +485,11 @@ class ServeSession:
             for r in self.requests:
                 if r.request_id not in self.results:
                     self.tele.preempt_request(self.recs[r.request_id])
+                    if self.metrics is not None:
+                        self.metrics.counter(
+                            "repro_engine_requests_preempted_total",
+                            "requests cut off before completion").inc(
+                            modality=self.modality)
             self.tele.stop()
             self.engine.telemetry = self.tele
             self.engine._session_active = False
@@ -603,6 +657,10 @@ class DiffusionServingEngine:
         self.telemetry: Optional[ServingTelemetry] = None
         # guards the one-live-session invariant (see ServeSession)
         self._session_active = False
+        #: per-program cost cards filled by warmup() — keyed by bucket size
+        #: (row-compacted), tick kind (dense), plus "want" for the plan pass
+        self.program_profile: Dict[object, ProgramProfile] = {}
+        self._warmed = False
 
     def _compact_tick(self, bucket: int):
         """The jit'd row-compacted program for one bucket size (lazy; at most
@@ -612,15 +670,27 @@ class DiffusionServingEngine:
             fn = self._compact_ticks[bucket] = self._make_compact_tick(bucket)
         return fn
 
-    def warmup(self) -> None:
-        """Compile every tick program on dummy inputs before serving.
+    def warmup(self) -> Dict[object, ProgramProfile]:
+        """Compile every tick program on dummy inputs before serving, and
+        profile each one while at it.
 
         Row compaction spreads the engine across one program per bucket size;
         without warmup each first-seen bucket pays its XLA compile inside a
         live tick (state-dependent policies like TeaCache surface new bucket
         sizes mid-run, long after admission warmed the common ones).  The
         mixed-modality engine calls this on every sub-pool so the first
-        mixed tick doesn't pay several modality-shaped compiles at once."""
+        mixed tick doesn't pay several modality-shaped compiles at once.
+
+        Each program is AOT-compiled (repro.obs.profiling.compile_program)
+        so the per-program compile time and the XLA cost model's FLOPs /
+        bytes are captured into `self.program_profile` — keyed by bucket
+        size (compacted), tick kind (dense), plus "want" for the fused
+        plan pass — and the compiled executable is swapped into the tick
+        cache so serving never re-pays the compile.  Returns the profile
+        dict; `repro.obs.profiling.redundancy_ratio` combines it with
+        telemetry row counters into measured-FLOPs-saved."""
+        if self._warmed:
+            return self.program_profile
         S = self.slots
         T, D = self.tokens, self.in_dim
         xs = jnp.zeros((S, T, D), jnp.float32)
@@ -636,12 +706,17 @@ class DiffusionServingEngine:
         # the fused want pass also compiles on first use; without this a
         # state-dependent policy pays that compile inside its first live tick
         if self._static_plan is None or self._static_cfg_plan is None:
-            jax.block_until_ready(
-                self._want_all(states, zi, xs, zf, zi, nm))
+            self._want_all, prof = compile_program(
+                self._want_all, states, zi, xs, zf, zi, nm, key="want")
+            self.program_profile["want"] = prof
         if not self.row_compaction:
-            for fn in self._ticks.values():
-                fn(*args)[0].block_until_ready()
-            return
+            for kind in ("full", "cond", "skip"):
+                self._ticks[kind], prof = compile_program(
+                    self._ticks[kind], *args, key=kind)
+                self.program_profile[kind] = prof
+                self._ticks[kind](*args)[0].block_until_ready()
+            self._warmed = True
+            return self.program_profile
         # every bucket a tick can request, mirroring compact_rows exactly:
         # cond-only ticks pad n in 1..S capped at S, ticks with uncond rows
         # pad n in 1..2S capped at 2S
@@ -654,8 +729,17 @@ class DiffusionServingEngine:
             row_slot = jnp.zeros((bucket,), jnp.int32)
             row_uncond = jnp.zeros((bucket,), bool)
             row_dest = jnp.full((bucket,), 2 * S, jnp.int32)
-            fn = self._compact_tick(bucket)
-            fn(*args, row_slot, row_uncond, row_dest)[0].block_until_ready()
+            fn = self._make_compact_tick(bucket)
+            compiled, prof = compile_program(
+                fn, *args, row_slot, row_uncond, row_dest, key=bucket)
+            self._compact_ticks[bucket] = compiled
+            self.program_profile[bucket] = prof
+            # run once: validates the compiled avals against real-shaped
+            # operands now instead of inside the first live tick
+            compiled(*args, row_slot, row_uncond, row_dest)[0] \
+                .block_until_ready()
+        self._warmed = True
+        return self.program_profile
 
     def _probe_static_plan(self, policy: CachePolicy) -> Optional[np.ndarray]:
         try:
@@ -725,29 +809,33 @@ class DiffusionServingEngine:
                       telemetry: Optional[ServingTelemetry] = None,
                       hooks: Optional[Sequence[TickHook]] = None,
                       capture_latents: bool = False,
-                      modality: Optional[str] = None) -> ServeSession:
+                      modality: Optional[str] = None,
+                      metrics=None) -> ServeSession:
         """Begin a tick-granular serving session (see ServeSession).
 
         At most ONE session per engine may be in flight (enforced): the
         per-slot timestep/conditioning tables live on the engine.
         Interleaving across engines (the mixed-modality pool) is fine.
         `hooks` observe each tick (TickEvent); `capture_latents` copies the
-        pre-tick latent batch into each event (device transfer per tick)."""
+        pre-tick latent batch into each event (device transfer per tick);
+        `metrics` (a repro.obs MetricsRegistry) opts the session into
+        publishing the repro_engine_* / repro_scheduler_* instrument set."""
         return ServeSession(self, requests, telemetry, hooks=hooks,
                             capture_latents=capture_latents,
-                            modality=modality)
+                            modality=modality, metrics=metrics)
 
     def serve(self, requests: Sequence[DiffusionRequest],
               telemetry: Optional[ServingTelemetry] = None,
               max_ticks: Optional[int] = None,
               hooks: Optional[Sequence[TickHook]] = None,
-              capture_latents: bool = False
-              ) -> List[DiffusionResult]:
+              capture_latents: bool = False,
+              metrics=None) -> List[DiffusionResult]:
         """Run every request through the slot pool; returns results in
         request order.  With max_ticks, unfinished requests are recorded as
         preempted in telemetry (never silently dropped)."""
         session = self.start_session(requests, telemetry, hooks=hooks,
-                                     capture_latents=capture_latents)
+                                     capture_latents=capture_latents,
+                                     metrics=metrics)
         try:
             while not session.done:
                 session.tick()

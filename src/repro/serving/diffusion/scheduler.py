@@ -88,6 +88,16 @@ class SlotScheduler:
         self.slots: List[Slot] = [Slot(i) for i in range(num_slots)]
         self.align = align
         self.queue: RequestQueue = RequestQueue()
+        self._metrics = None
+        self._metric_labels = {}
+
+    def bind_metrics(self, registry, **labels) -> None:
+        """Opt this scheduler into publishing repro_scheduler_* metrics
+        (admissions by traffic class, queue depth) into a repro.obs
+        MetricsRegistry.  `labels` (e.g. modality=...) tag every sample."""
+        self._metrics = registry
+        self._metric_labels = {k: str(v) for k, v in labels.items()
+                               if v is not None}
 
     # -- queue ----------------------------------------------------------
     def submit(self, request: DiffusionRequest) -> None:
@@ -111,6 +121,19 @@ class SlotScheduler:
             slot.step = 0
             slot.admit_tick = tick
             admitted.append((slot, req))
+        if self._metrics is not None:
+            reg, lbl = self._metrics, self._metric_labels
+            if admitted:
+                adm = reg.counter(
+                    "repro_scheduler_admitted_total",
+                    "Requests admitted into a slot, by traffic class.")
+                for _, req in admitted:
+                    adm.inc(traffic_class=req.traffic_class,
+                            guided=str(req.guided).lower(), **lbl)
+            reg.gauge(
+                "repro_scheduler_queue_depth",
+                "Requests waiting in the admission queue."
+            ).set(len(self.queue), **lbl)
         return admitted
 
     def advance(self) -> None:

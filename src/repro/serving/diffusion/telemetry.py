@@ -29,9 +29,11 @@ have dispatched on top).
 """
 from __future__ import annotations
 
-import time
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+from repro.obs.clock import monotonic
 
 TICK_KINDS = ("full", "cond", "skip")
 
@@ -42,9 +44,11 @@ def _pct(xs: List[float], q: float) -> float:
     Nearest-rank via int(q * (len-1)) truncates DOWN, so p95 over a small
     fleet (10 requests -> index int(8.55) = 8) silently reported the ~p89
     sample; interpolating between the bracketing order statistics matches
-    np.percentile exactly (tests/test_serving_compaction.py asserts so)."""
+    np.percentile exactly (tests/test_serving_compaction.py asserts so).
+    An empty window has no percentile: nan, never a fake 0.0 an SLA check
+    could mistake for "infinitely fast"."""
     if not xs:
-        return 0.0
+        return math.nan
     xs = sorted(xs)
     pos = q * (len(xs) - 1)
     lo = int(pos)
@@ -164,10 +168,10 @@ class ServingTelemetry:
 
     # ------------------------------------------------------------------
     def start(self) -> None:
-        self._t0 = time.perf_counter()
+        self._t0 = monotonic()
 
     def stop(self) -> None:
-        self._t1 = time.perf_counter()
+        self._t1 = monotonic()
 
     def record_tick(self, kind: str, seconds: float, *,
                     rows_computed: int = 0, rows_padding: int = 0,
@@ -211,7 +215,7 @@ class ServingTelemetry:
     # ------------------------------------------------------------------
     @property
     def elapsed(self) -> float:
-        t1 = self._t1 if self._t1 is not None else time.perf_counter()
+        t1 = self._t1 if self._t1 is not None else monotonic()
         return (t1 - self._t0) if self._t0 is not None else 0.0
 
     @property
@@ -283,6 +287,19 @@ class ServingTelemetry:
             "uncond_saved_steps_total": self.uncond_saved_steps_sum,
             "cache_state_bytes_per_slot": self.cache_state_bytes_per_slot,
         }
+
+    def publish(self, registry, modality: Optional[str] = None) -> None:
+        """Export this telemetry's aggregates as `repro_serving_*` gauges
+        into a repro.obs MetricsRegistry — the telemetry becomes a VIEW
+        over the unified metrics surface instead of a fourth export format.
+        Gauges, not counters: `summary()` values are level readings of this
+        object (re-publishing overwrites, never double-counts)."""
+        labels = {"modality": modality} if modality is not None else {}
+        for key, value in self.summary().items():
+            registry.gauge(
+                f"repro_serving_{key}",
+                f"ServingTelemetry.summary()['{key}'] (published view)."
+            ).set(float(value), **labels)
 
     def by_traffic_class(self) -> Dict[str, Dict[str, float]]:
         out: Dict[str, Dict[str, float]] = {}

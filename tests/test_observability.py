@@ -1,0 +1,338 @@
+"""repro.obs: metrics registry semantics, golden Chrome-trace/JSONL
+reconciliation against ServingTelemetry, warmup program profiling, the
+redundancy ratio, mixed-modality row invariants, and the clock lint."""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import FasterCacheCFG
+from repro.models import init_params, perturb_zero_init
+from repro.obs import (MetricsRegistry, ProgramProfile, TraceRecorder,
+                       flops_per_row, load_cache_events, monotonic,
+                       redundancy_ratio, signal_trace_from_files,
+                       validate_chrome_trace)
+from repro.serving.diffusion import (DiffusionRequest,
+                                     DiffusionServingEngine)
+
+NUM_STEPS = 8
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("dit-xl").reduced(num_layers=2, d_model=64,
+                                       num_heads=4, num_kv_heads=4,
+                                       d_ff=128, dit_patch_tokens=8,
+                                       dit_in_dim=4, dit_num_classes=10)
+    params = perturb_zero_init(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _mixed_requests(n=4):
+    """Mixed guided/unguided, mixed budgets (the golden-session shape)."""
+    return [DiffusionRequest(i, num_steps=(NUM_STEPS, NUM_STEPS - 2)[i % 2],
+                             seed=i, class_label=i % 5,
+                             cfg_scale=2.5 if i % 2 == 0 else 0.0)
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def golden_session(setup):
+    """One 2-slot teacache + FasterCacheCFG session observed by every
+    surface at once: TraceRecorder, MetricsRegistry, ServingTelemetry."""
+    cfg, params = setup
+    eng = DiffusionServingEngine(params, cfg, "teacache", slots=SLOTS,
+                                 max_steps=NUM_STEPS,
+                                 cfg_policy=FasterCacheCFG(3, NUM_STEPS))
+    profiles = eng.warmup()
+    recorder = TraceRecorder(policy=eng.policy)
+    registry = MetricsRegistry()
+    results = eng.serve(_mixed_requests(), hooks=[recorder],
+                        metrics=registry)
+    recorder.finish()
+    return eng, results, recorder, registry, profiles
+
+
+# ----------------------------------------------------------------------
+# clock
+# ----------------------------------------------------------------------
+
+def test_monotonic_clock_advances():
+    a = monotonic()
+    b = monotonic()
+    assert b >= a
+
+
+def test_clock_lint_passes():
+    """src/repro/serving and src/repro/modalities must route every wall
+    time through repro.obs.clock (tools/check_clock.py, also run in CI)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "check_clock.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ----------------------------------------------------------------------
+# metrics registry
+# ----------------------------------------------------------------------
+
+def test_counter_gauge_histogram_semantics():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_test_things_total", "things")
+    c.inc(kind="a")
+    c.inc(2, kind="a")
+    c.inc(kind="b")
+    assert c.value(kind="a") == 3 and c.value(kind="b") == 1
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("repro_test_depth")
+    g.set(5)
+    g.add(-2)
+    assert g.value() == 3
+    h = reg.histogram("repro_test_seconds", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.count() == 3
+    assert h.sum() == pytest.approx(5.55)
+    counts, _, _ = h.values[()]
+    assert counts == [1, 2, 3]        # cumulative, +Inf == total
+    # get-or-create returns the same instrument; type clashes raise
+    assert reg.counter("repro_test_things_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("repro_test_things_total")
+
+
+def test_prometheus_text_and_snapshot_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("repro_t_total", "help text").inc(3, modality="video")
+    reg.gauge("repro_t_depth").set(2.5)
+    reg.histogram("repro_t_s", buckets=(1.0,)).observe(0.5)
+    reg.event("control.swap", policy_to="fora")
+    text = reg.prometheus_text()
+    assert '# TYPE repro_t_total counter' in text
+    assert 'repro_t_total{modality="video"} 3' in text
+    assert '# HELP repro_t_total help text' in text
+    assert 'repro_t_s_bucket{le="+Inf"} 1' in text
+    assert 'repro_t_s_count 1' in text
+    snap = reg.snapshot()
+    json.dumps(snap)                  # JSON-able as claimed
+    assert snap["metrics"]["repro_t_depth"]["values"][0]["value"] == 2.5
+    assert snap["events"][0]["event"] == "control.swap"
+    assert snap["events_seen"] == 1
+
+
+# ----------------------------------------------------------------------
+# golden trace + JSONL reconciliation
+# ----------------------------------------------------------------------
+
+def test_chrome_trace_is_valid(golden_session):
+    """Schema, monotonic per-track timestamps, span nesting — the trace
+    must load in Perfetto without repair."""
+    _, _, recorder, _, _ = golden_session
+    trace = recorder.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    events = trace["traceEvents"]
+    phases = {e["ph"] for e in events}
+    assert {"M", "X", "B", "E"} <= phases
+    names = {e["name"] for e in events}
+    assert "plan" in names and any(n.startswith("tick:") for n in names)
+    # every request opened AND closed a lifecycle span
+    begins = [e for e in events if e["ph"] == "B"]
+    ends = [e for e in events if e["ph"] == "E"]
+    assert len(begins) == len(ends) == 4
+    # cache spans carry the signal-vs-threshold annotation
+    cache = [e for e in events if e.get("cat") == "cache"]
+    assert cache and all("signal" in e["args"] and "threshold" in e["args"]
+                         for e in cache)
+
+
+def test_validate_chrome_trace_flags_problems():
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 0, "ts": 10.0, "dur": 1},
+        {"ph": "X", "name": "b", "pid": 1, "tid": 0, "ts": 5.0, "dur": 1},
+        {"ph": "B", "name": "req 1", "pid": 1, "tid": 2, "ts": 6.0},
+        {"ph": "E", "name": "req 2", "pid": 1, "tid": 2, "ts": 7.0},
+        {"ph": "X", "name": "c", "pid": 1, "tid": 3},
+    ]}
+    problems = validate_chrome_trace(bad)
+    assert any("backwards" in p for p in problems)
+    assert any("crosses" in p for p in problems)
+    assert any("without ts" in p for p in problems)
+    assert validate_chrome_trace({}) == ["traceEvents missing or not a list"]
+
+
+def test_jsonl_reconciles_with_telemetry_exactly(golden_session, tmp_path):
+    """The cache-event log's per-request computed-step counts must equal
+    ServingTelemetry's RequestRecord counters EXACTLY — both for the cond
+    branch and the uncond (CFG) branch."""
+    eng, results, recorder, _, _ = golden_session
+    path = tmp_path / "cache_events.jsonl"
+    recorder.write_cache_events(str(path))
+    events = load_cache_events(str(path))
+    assert events == recorder.cache_events
+    by_req = recorder.computed_steps_by_request()
+    uncond_by_req = recorder.uncond_steps_by_request()
+    assert len(eng.telemetry.records) == len(results) == 4
+    for rec in eng.telemetry.records:
+        assert by_req[rec.request_id] == rec.computed_steps
+        assert uncond_by_req[rec.request_id] == rec.uncond_computed_steps
+    # every (request, step) pair appears exactly once
+    seen = {(e["request_id"], e["step"]) for e in events}
+    assert len(seen) == len(events)
+    assert len(events) == sum(r.num_steps for r in _mixed_requests())
+
+
+def test_metrics_match_telemetry(golden_session):
+    eng, _, _, registry, _ = golden_session
+    tele = eng.telemetry
+    rows = registry.counter("repro_engine_rows_computed_total")
+    assert int(sum(rows.values.values())) == tele.backbone_rows_computed
+    fin = registry.counter("repro_engine_requests_finished_total")
+    assert int(sum(fin.values.values())) == tele.requests_finished
+    ticks = registry.counter("repro_engine_ticks_total")
+    assert int(sum(ticks.values.values())) == \
+        tele.ticks_full + tele.ticks_cond + tele.ticks_skip
+    uncond = registry.counter("repro_engine_uncond_rows_computed_total")
+    assert int(sum(uncond.values.values())) == tele.uncond_rows_computed
+
+
+def test_signal_trace_rebuilds_from_files(golden_session, tmp_path):
+    """The JSONL is the durable SignalTraceLog: rebuilt entries must carry
+    the same want decisions the in-memory ring would have recorded."""
+    _, _, recorder, _, _ = golden_session
+    path = tmp_path / "cache_events.jsonl"
+    recorder.write_cache_events(str(path))
+    log = signal_trace_from_files(str(path))
+    assert len(log.entries) == len(recorder.cache_events)
+    assert sum(e.want_cond for e in log.entries) == \
+        sum(ev["want_compute"] for ev in recorder.cache_events)
+    per_req = {}
+    for e in log.entries:
+        per_req[e.request_id] = per_req.get(e.request_id, 0) + int(e.want_cond)
+    assert per_req == recorder.computed_steps_by_request()
+
+
+def test_telemetry_publish_view(golden_session):
+    eng, _, _, _, _ = golden_session
+    reg = MetricsRegistry()
+    eng.telemetry.publish(reg, modality="image")
+    s = eng.telemetry.summary()
+    g = reg.gauge("repro_serving_backbone_rows_computed")
+    assert g.value(modality="image") == s["backbone_rows_computed"]
+    assert reg.gauge("repro_serving_requests").value(modality="image") == \
+        s["requests"]
+    # re-publishing overwrites (a view, not an accumulator)
+    eng.telemetry.publish(reg, modality="image")
+    assert g.value(modality="image") == s["backbone_rows_computed"]
+
+
+# ----------------------------------------------------------------------
+# program profiling + redundancy
+# ----------------------------------------------------------------------
+
+def test_warmup_profiles_programs(golden_session):
+    eng, _, _, _, profiles = golden_session
+    # bucket 0 (skip), every pow-2 bucket up to 2*slots, and the want pass
+    assert {0, 1, 2, 4, "want"} <= set(profiles)
+    for key, p in profiles.items():
+        assert isinstance(p, ProgramProfile)
+        assert p.compile_seconds > 0.0
+        assert p.flops > 0 or math.isnan(p.flops)
+    # on CPU the cost model reports flops; larger buckets cost more
+    if not math.isnan(profiles[1].flops):
+        assert profiles[4].flops > profiles[1].flops > profiles[0].flops
+    # warmup is idempotent: second call returns the same dict, no recompile
+    assert eng.warmup() is profiles
+
+
+def test_redundancy_ratio_math():
+    profiles = {0: ProgramProfile(0, 0.1, 100.0, 0.0),
+                4: ProgramProfile(4, 0.1, 500.0, 0.0)}
+    assert flops_per_row(profiles) == pytest.approx(100.0)
+    rr = redundancy_ratio(profiles, rows_computed=60, rows_padding=10,
+                          rows_saved=40)
+    assert rr["flops_per_row"] == pytest.approx(100.0)
+    assert rr["dense_flops"] == pytest.approx(100.0 * 100)
+    assert rr["flops_avoided"] == pytest.approx(100.0 * 30)
+    assert rr["redundancy_ratio"] == pytest.approx(0.30)
+    # no cost model -> nan, never a made-up number
+    nan_prof = {0: ProgramProfile(0, 0.1, math.nan, math.nan),
+                4: ProgramProfile(4, 0.1, math.nan, math.nan)}
+    assert math.isnan(redundancy_ratio(nan_prof, 1, 0, 1)
+                      ["redundancy_ratio"])
+
+
+# ----------------------------------------------------------------------
+# row invariants (single-pool and mixed-modality)
+# ----------------------------------------------------------------------
+
+def test_uncond_rows_equal_sum_of_uncond_steps(golden_session):
+    """uncond_rows_computed counts exactly the per-request uncond-branch
+    refreshes — no slot-count inflation, no padding leakage."""
+    eng, results, _, _, _ = golden_session
+    tele = eng.telemetry
+    assert tele.uncond_rows_computed == \
+        sum(r.record.uncond_computed_steps for r in results)
+    assert tele.backbone_rows_computed == \
+        sum(r.record.computed_steps + r.record.uncond_computed_steps
+            for r in results)
+
+
+def test_mixed_modality_token_weighted_totals(setup):
+    """MixedTelemetry's token-weighted totals must equal the per-pool
+    rows x that pool's tokens-per-row, summed — the invariant that keeps
+    wide video rows from hiding inside raw row counts."""
+    pytest.importorskip("repro.modalities")
+    from repro.modalities import MixedModalityEngine, make_workload
+    workloads = {m: make_workload(m, smoke=True)
+                 for m in ("image", "audio")}
+    pools = {name: wl.engine("fora", slots=SLOTS, max_steps=NUM_STEPS)
+             for name, wl in workloads.items()}
+    engine = MixedModalityEngine(pools)
+    reg = MetricsRegistry()
+    mods = ("image", "audio")
+    reqs = [DiffusionRequest(i, num_steps=NUM_STEPS, seed=i,
+                             modality=mods[i % 2]) for i in range(4)]
+    results = engine.serve(reqs, metrics=reg)
+    assert len(results) == 4
+    mixed = engine.telemetry
+    s = mixed.summary()
+    per = {m: t for m, t in mixed.pools.items()}
+    assert s["backbone_rows_computed"] == \
+        sum(t.backbone_rows_computed for t in per.values())
+    assert s["backbone_tokens_computed"] == sum(
+        t.backbone_rows_computed * mixed.row_tokens[m]
+        for m, t in per.items())
+    assert s["backbone_tokens_saved"] == sum(
+        t.backbone_rows_saved * mixed.row_tokens[m]
+        for m, t in per.items())
+    # per-pool: rows == sum of per-request computed steps (fora is
+    # unguided here, so no uncond term)
+    for m, t in per.items():
+        assert t.backbone_rows_computed == \
+            sum(r.computed_steps for r in t.records)
+        assert t.uncond_rows_computed == 0
+    # the shared registry kept the pools apart by modality label
+    rows = reg.counter("repro_engine_rows_computed_total")
+    for m, t in per.items():
+        assert int(rows.value(modality=m)) == t.backbone_rows_computed
+
+
+# ----------------------------------------------------------------------
+# empty-window percentile contract
+# ----------------------------------------------------------------------
+
+def test_summary_empty_window_is_nan():
+    from repro.serving.diffusion import ServingTelemetry
+    tele = ServingTelemetry()
+    s = tele.summary()
+    assert math.isnan(s["latency_p50_s"]) and math.isnan(s["latency_p95_s"])
+    assert s["requests"] == 0

@@ -3,6 +3,8 @@ dense whole-pool engine (per-slot outputs within fp tolerance, computed-step
 counts exactly) for every registry policy, bucket planning must handle the
 edge cases, refill isolation must survive compaction, and the telemetry /
 percentile fixes that rode along with it."""
+import math
+
 import jax
 import numpy as np
 import pytest
@@ -302,4 +304,5 @@ def test_pct_matches_np_percentile():
         for q in (0.0, 0.5, 0.9, 0.95, 0.99, 1.0):
             np.testing.assert_allclose(
                 _pct(xs, q), np.percentile(xs, 100 * q), rtol=1e-12)
-    assert _pct([], 0.95) == 0.0
+    # an empty window has no percentile — nan, not a fake "fast" 0.0
+    assert math.isnan(_pct([], 0.95))

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Clock-discipline lint: serving code must use repro.obs.clock.
+
+Every wall time measured under `src/repro/serving/` and
+`src/repro/modalities/` must go through `repro.obs.clock.monotonic()` (one
+clock source -> cross-subsystem timestamps are comparable and trace spans
+never go backwards).  This lint fails CI on any direct `time.time()` or
+`time.perf_counter()` call in those trees; `repro/obs/clock.py` itself is
+the single allowed call site.
+
+Usage:  python tools/check_clock.py   (exit 1 on violations, listing them)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINTED_TREES = ("src/repro/serving", "src/repro/modalities")
+PATTERN = re.compile(r"\btime\.(time|perf_counter|monotonic)\s*\(")
+
+
+def violations():
+    out = []
+    for tree in LINTED_TREES:
+        root = os.path.join(REPO, tree)
+        for dirpath, _, filenames in os.walk(root):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    for lineno, line in enumerate(f, 1):
+                        code = line.split("#", 1)[0]   # ignore comments
+                        if PATTERN.search(code):
+                            rel = os.path.relpath(path, REPO)
+                            out.append((rel, lineno, line.rstrip()))
+    return out
+
+
+def main() -> int:
+    bad = violations()
+    if not bad:
+        print(f"clock lint: OK ({', '.join(LINTED_TREES)} use "
+              f"repro.obs.clock)")
+        return 0
+    print("clock lint: direct time.* calls in serving code — use "
+          "repro.obs.clock.monotonic() instead:", file=sys.stderr)
+    for rel, lineno, line in bad:
+        print(f"  {rel}:{lineno}: {line.strip()}", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
