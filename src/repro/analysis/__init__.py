@@ -1,0 +1,56 @@
+"""repro.analysis — AST lint framework enforcing the serving stack's JAX
+discipline.
+
+The survey's training-free caching paradigm only pays off if the serving
+hot loop stays free of silent performance and correctness hazards: one
+hidden host sync per tick erases the row savings that row compaction and
+TeaCache-style reuse buy, and a reused PRNG key makes "distinct" requests
+produce identical samples.  The equivalence tests
+(tests/test_serving_compaction.py) verify the contracts dynamically; this
+package checks them statically, at review time, in CI.
+
+Rules (each one module under `repro.analysis.rules`):
+
+  host-sync-in-hot-path        float()/int()/bool()/.item()/.tolist()/
+                               np.asarray()/jax.device_get() on device
+                               values inside serving/ modalities/ core/ —
+                               each is a blocking device->host round trip.
+  clock-discipline             wall time in serving code must go through
+                               repro.obs.clock (one clock source), never
+                               time.time()/perf_counter()/monotonic().
+  rng-key-reuse                the same PRNG key consumed by two or more
+                               jax.random.* draws without an intervening
+                               split — the PR-3 identical-default-seeds
+                               bug class.
+  jit-hygiene                  jax.jit sites with mutable default args,
+                               closures over mutable module globals, or
+                               jit-inside-a-loop recompilation hazards.
+  pytree-registration          dataclass instances flowing into jitted
+                               programs must be registered pytrees.
+  policy-registry-conformance  import-time introspection: every
+                               make_policy registry entry implements the
+                               want_compute mirror-predicate +
+                               reset-on-refill contract the compaction
+                               engine assumes.
+
+Usage:
+
+  python -m repro.analysis                      # lint the repo, exit 1 on
+                                                # unsuppressed findings
+  python -m repro.analysis --rule clock-discipline
+  python -m repro.analysis --json report.json   # machine-readable output
+  repro-lint                                    # console entry point
+
+Suppression: append `# repro-lint: disable=<rule>[,<rule>...]` to the
+offending line (or `disable-next-line=` on the line above) with a short
+justification.  Grandfathered findings live in `tools/lint_baseline.json`;
+`--write-baseline` regenerates it.  See README "Static analysis".
+"""
+from .base import Finding, ProjectRule, Rule, all_rules, get_rule
+from .runner import RunResult, run_analysis
+from .report import to_json, to_text
+
+__all__ = [
+    "Finding", "Rule", "ProjectRule", "all_rules", "get_rule",
+    "RunResult", "run_analysis", "to_json", "to_text",
+]

@@ -1,0 +1,6 @@
+"""`python -m repro.analysis` — see repro.analysis.cli."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,95 @@
+"""Command-line entry point: `python -m repro.analysis` / `repro-lint`.
+
+Exit status: 0 when every finding is suppressed or baselined, 1 otherwise
+(what the CI step keys on), 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .base import all_rules, get_rule
+from .baseline import Baseline
+from .report import to_text, write_json
+from .runner import find_repo_root, run_analysis
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST lint for the repro serving stack's JAX discipline "
+                    "(host syncs, clock sources, PRNG keys, jit hygiene, "
+                    "pytree registration, policy-registry contracts)")
+    p.add_argument("paths", nargs="*",
+                   help="files/dirs to lint (default: src/repro)")
+    p.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                   help="run only this rule (repeatable)")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: auto-detect from cwd)")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help="baseline file (default: tools/lint_baseline.json)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="grandfather current findings into the baseline "
+                        "file and exit 0")
+    p.add_argument("--json", default=None, metavar="FILE",
+                   help="also write the full JSON report to FILE "
+                        "('-' for stdout)")
+    p.add_argument("--no-scope", action="store_true",
+                   help="apply every rule to every file, ignoring per-rule "
+                        "tree scoping (fixture/debug use)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule table and exit")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress the text report (exit status only)")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also list suppressed findings")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id:32s} {r.description}")
+        return 0
+
+    try:
+        rules = ([get_rule(rid) for rid in args.rules]
+                 if args.rules else None)
+    except KeyError as e:
+        print(e.args[0], file=sys.stderr)
+        return 2
+
+    root = args.root or find_repo_root()
+    result = run_analysis(root=root, paths=args.paths or None, rules=rules,
+                          baseline_path=args.baseline,
+                          force_scope=args.no_scope)
+
+    if args.write_baseline:
+        import os
+        from .baseline import DEFAULT_BASELINE
+        path = args.baseline or os.path.join(root, DEFAULT_BASELINE)
+        # grandfather what is currently actionable on top of what is
+        # already baselined, so rewriting is idempotent
+        Baseline.write(path, result.findings + result.baselined,
+                       justification="grandfathered; justify or fix")
+        print(f"wrote {len(result.findings) + len(result.baselined)} "
+              f"finding(s) to {path}")
+        return 0
+
+    if args.json == "-":
+        import json as _json
+        from .report import to_json
+        print(_json.dumps(to_json(result), indent=2))
+    elif args.json:
+        write_json(result, args.json)
+
+    if not args.quiet:
+        print(to_text(result, verbose=args.verbose))
+    return result.exit_code
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

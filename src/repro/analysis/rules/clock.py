@@ -1,0 +1,48 @@
+"""clock-discipline: wall-clock reads in serving/modalities code.
+
+Successor of the old tools/check_clock.py regex script, now AST-based
+(no false positives on `time.time` inside strings or comment prose).
+
+The serving stack runs on an injected `clock` callable so simulations,
+tests and the replay harness control time deterministically.  A stray
+`time.time()` (or perf_counter/monotonic) in serving/ or modalities/
+reads the REAL clock, which desynchronizes simulated traces and makes
+latency accounting nondeterministic under test.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..base import Finding, Rule, register
+from ..source import ModuleSource
+from ..taint import attr_chain
+
+_BANNED = {"time.time", "time.perf_counter", "time.monotonic",
+           "time.monotonic_ns", "time.perf_counter_ns", "time.time_ns"}
+
+
+@register
+class ClockRule(Rule):
+    id = "clock-discipline"
+    description = ("direct wall-clock read (time.time/perf_counter/"
+                   "monotonic) instead of the injected clock")
+    rationale = ("serving and modalities code must read time through the "
+                 "injected clock callable so simulated traces, tests and "
+                 "benchmarks stay deterministic; a raw time.time() "
+                 "desynchronizes them from the virtual timeline")
+    trees = ("src/repro/serving/", "src/repro/modalities/")
+
+    def check_module(self, module: ModuleSource) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if chain in _BANNED:
+                findings.append(self.finding(
+                    module, node.lineno, node.col_offset,
+                    f"{chain}() reads the wall clock; use the injected "
+                    f"`clock` callable so simulation/replay stay "
+                    f"deterministic"))
+        return findings

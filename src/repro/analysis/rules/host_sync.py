@@ -1,0 +1,112 @@
+"""host-sync-in-hot-path: blocking device->host transfers on tick paths.
+
+Every `float(x)`, `.item()`, `np.asarray(x)` or `jax.device_get(x)` on a
+device value stalls the Python thread until the device catches up — on
+the serving tick path that serializes the pipeline and shows up directly
+as req/s.  The engine's design confines host syncs to ONE priced
+device_get per tick (`_plan_all`); this rule keeps it that way.
+
+Fires only when the argument is provably device-tainted (see
+analysis.taint) or, for `jax.device_get`, unconditionally — device_get
+has no other purpose than a transfer, so every call site must either be
+the priced sync (inline-suppressed with its justification) or a bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..base import Finding, Rule, register
+from ..source import ModuleSource
+from ..taint import TaintScope, attr_chain, build_scope, expr_tainted
+
+#: builtins that force a sync when handed a device value
+_CONVERSIONS = {"float", "int", "bool"}
+#: np entry points that copy device arrays to host
+_NP_SINKS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+#: array methods that force a sync
+_METHOD_SINKS = {"item", "tolist"}
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _iter_scope_nodes(owner: ast.AST):
+    """Nodes of `owner`'s scope, not descending into nested defs."""
+    for child in ast.iter_child_nodes(owner):
+        yield child
+        if not isinstance(child, _DEFS):
+            yield from _iter_scope_nodes(child)
+
+
+def _direct_nested_defs(owner: ast.AST):
+    """Function defs whose nearest enclosing scope is `owner`."""
+    for node in _iter_scope_nodes(owner):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+@register
+class HostSyncRule(Rule):
+    id = "host-sync-in-hot-path"
+    description = ("blocking device->host sync (float/int/bool/.item()/"
+                   ".tolist()/np.asarray/jax.device_get on device values) "
+                   "in tick-path code")
+    rationale = ("each sync stalls the host until the device drains; the "
+                 "serving design allows exactly one priced device_get per "
+                 "tick, so any other sync silently serializes the pipeline "
+                 "and caps req/s")
+    trees = ("src/repro/serving/", "src/repro/modalities/",
+             "src/repro/core/")
+
+    def check_module(self, module: ModuleSource) -> List[Finding]:
+        findings: List[Finding] = []
+        self._visit_scope(module, module.tree, None, findings)
+        findings.sort(key=lambda f: f.key())
+        return findings
+
+    def _visit_scope(self, module, owner, parent_scope, findings):
+        scope = build_scope(owner, parent_scope)
+        for node in _iter_scope_nodes(owner):
+            if isinstance(node, ast.Call):
+                f = self._check_call(module, node, scope)
+                if f is not None:
+                    findings.append(f)
+        for fn in _direct_nested_defs(owner):
+            self._visit_scope(module, fn, scope, findings)
+
+    def _check_call(self, module, call: ast.Call, scope: TaintScope):
+        chain = attr_chain(call.func)
+        # unconditional: device_get IS a transfer
+        if chain == "jax.device_get":
+            return self.finding(
+                module, call.lineno, call.col_offset,
+                "jax.device_get forces a blocking device->host transfer; "
+                "if this is the one priced per-tick sync, suppress with a "
+                "justification")
+        # x.item() / x.tolist() on a device value
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr in _METHOD_SINKS
+                and expr_tainted(call.func.value, scope)):
+            return self.finding(
+                module, call.lineno, call.col_offset,
+                f".{call.func.attr}() on a device value blocks until the "
+                f"device drains; keep it on-device or batch the transfer")
+        args = list(call.args)
+        if not args:
+            return None
+        # float(x) / int(x) / bool(x)
+        if isinstance(call.func, ast.Name) and call.func.id in _CONVERSIONS:
+            if expr_tainted(args[0], scope):
+                return self.finding(
+                    module, call.lineno, call.col_offset,
+                    f"{call.func.id}() on a device value blocks until the "
+                    f"device drains; keep it on-device (jnp) or batch the "
+                    f"transfer")
+        # np.asarray(x) / np.array(x)
+        if chain in _NP_SINKS and expr_tainted(args[0], scope):
+            return self.finding(
+                module, call.lineno, call.col_offset,
+                f"{chain}() on a device value copies it to host "
+                f"synchronously; hoist out of the per-tick loop or "
+                f"batch into one transfer")
+        return None

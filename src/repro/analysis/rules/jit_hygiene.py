@@ -1,0 +1,156 @@
+"""jit-hygiene: patterns that silently defeat jax.jit.
+
+Three sub-checks, one rule id:
+
+  * mutable default args on a jitted function — the default is traced
+    once and baked into the compiled program; later mutation is invisible
+    to every cached executable.
+  * jax.jit(...) inside a loop body — re-wrapping per iteration defeats
+    the compile cache (a fresh wrapper means a fresh cache), so every
+    iteration pays dispatch overhead or a retrace.  Hoist the wrapper.
+  * a jitted function closing over a mutable module-level global — the
+    global's VALUE is captured at trace time; mutating the list/dict
+    later does not retrigger tracing, so the program keeps running with
+    stale data.  Pass it as an argument (pytree) or mark it static.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..base import Finding, Rule, register
+from ..source import ModuleSource
+from ..taint import attr_chain
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+_MUTABLE_CTORS = {"list", "dict", "set", "defaultdict", "OrderedDict",
+                  "Counter", "deque"}
+
+
+def _is_mutable_value(node: ast.AST) -> bool:
+    if isinstance(node, _MUTABLE_LITERALS):
+        return True
+    if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain and chain.split(".")[-1] in _MUTABLE_CTORS:
+            return True
+    return False
+
+
+def _jit_decorator(dec: ast.AST) -> bool:
+    """@jax.jit, @jax.jit(...), @partial(jax.jit, ...)."""
+    chain = attr_chain(dec)
+    if chain == "jax.jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fchain = attr_chain(dec.func)
+        if fchain == "jax.jit":
+            return True
+        if fchain in ("partial", "functools.partial") and dec.args:
+            return attr_chain(dec.args[0]) == "jax.jit"
+    return False
+
+
+def _bound_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside the function (params + assignment targets)."""
+    out: Set[str] = set()
+    a = fn.args
+    for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+        out.add(arg.arg)
+    if a.vararg:
+        out.add(a.vararg.arg)
+    if a.kwarg:
+        out.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node is not fn:
+            out.add(node.name)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+    return out
+
+
+@register
+class JitHygieneRule(Rule):
+    id = "jit-hygiene"
+    description = ("jax.jit misuse: mutable default args, jit() wrapped "
+                   "inside a loop, jitted closure over a mutable module "
+                   "global")
+    rationale = ("jit bakes trace-time values into the compiled program "
+                 "and keys its cache on the wrapper object — each of these "
+                 "patterns either runs on stale data or recompiles every "
+                 "iteration")
+    trees = ("src/repro/",)
+
+    def check_module(self, module: ModuleSource) -> List[Finding]:
+        findings: List[Finding] = []
+        tree = module.tree
+
+        # module-level mutable globals (for the closure check)
+        mutable_globals: Set[str] = set()
+        for stmt in tree.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                targets = [stmt.target]
+            else:
+                continue
+            if _is_mutable_value(stmt.value):
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        mutable_globals.add(t.id)
+
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_jit_decorator(d) for d in node.decorator_list):
+                    self._check_jitted_fn(module, node, mutable_globals,
+                                          findings)
+            if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                self._check_loop(module, node, findings)
+
+        findings.sort(key=lambda f: f.key())
+        return findings
+
+    def _check_jitted_fn(self, module, fn, mutable_globals, findings):
+        # mutable defaults
+        a = fn.args
+        for default in list(a.defaults) + [d for d in a.kw_defaults if d]:
+            if _is_mutable_value(default):
+                findings.append(self.finding(
+                    module, default.lineno, default.col_offset,
+                    f"jitted function '{fn.name}' has a mutable default "
+                    f"argument; jit traces it once and never sees later "
+                    f"mutation — use None + in-function init"))
+        # closure over mutable module globals
+        if not mutable_globals:
+            return
+        local = _bound_names(fn)
+        reported: Set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id in mutable_globals
+                    and node.id not in local
+                    and node.id not in reported):
+                reported.add(node.id)
+                findings.append(self.finding(
+                    module, node.lineno, node.col_offset,
+                    f"jitted function '{fn.name}' closes over mutable "
+                    f"module global '{node.id}'; its value is baked in at "
+                    f"trace time — pass it as an argument instead"))
+
+    def _check_loop(self, module, loop, findings):
+        for part in loop.body:
+            for node in ast.walk(part):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    continue
+                if (isinstance(node, ast.Call)
+                        and attr_chain(node.func) == "jax.jit"):
+                    findings.append(self.finding(
+                        module, node.lineno, node.col_offset,
+                        "jax.jit() called inside a loop body creates a "
+                        "fresh wrapper (and compile-cache entry) every "
+                        "iteration; hoist the jit out of the loop"))

@@ -1,0 +1,153 @@
+"""policy-registry-conformance: drive every make_policy entry through the
+serving contract at import time.
+
+The serving engine trusts three things about every policy it hosts:
+
+  * `want_compute` mirrors `apply`'s refresh decision — at minimum, a
+    FRESH state must want a compute (the cache is empty; reusing it would
+    serve zeros), and `apply` at step 0 must actually run compute_fn.
+  * reset-on-refill — `init_state` is a pure function of (shape, dtype):
+    two refills produce identical states, so a slot refill fully isolates
+    requests (no state bleed across the requests that share a slot).
+  * `static_schedule`, when offered, is coherent: length == num_steps and
+    step 0 computes (the engine's zero-sync static plan trusts it blindly).
+
+This rule is not an AST pass: it imports `repro.core` and drives each
+registry entry with small dummy inputs, so a policy merged without the
+serving contract fails lint before it ever reaches an engine.  Findings
+anchor on the entry's line in core/__init__.py.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from ..base import Finding, ProjectRule, register
+
+def _dummy_kwargs(name: str) -> Dict:
+    """Constructor kwargs that let every registry entry build: generic
+    knobs all lambdas absorb via **kw, plus the two entries that refuse
+    to default (lazydit's trained gate, blockcache's measured profile)."""
+    import jax.numpy as jnp
+    base = {"num_steps": 8, "frames": 2}
+    if name == "lazydit":
+        base["gate"] = {"w": jnp.zeros((4,), jnp.float32),
+                       "b": jnp.zeros((), jnp.float32)}
+    if name == "blockcache":
+        base["profile"] = [0.0] * 8
+    return base
+
+
+def _entry_line(source_lines: List[str], name: str) -> int:
+    needle = f'"{name}":'
+    for i, line in enumerate(source_lines, 1):
+        if needle in line:
+            return i
+    return 1
+
+
+@register
+class PolicyConformanceRule(ProjectRule):
+    id = "policy-registry-conformance"
+    description = ("make_policy registry entry violates the serving "
+                   "contract (want_compute mirror, reset-on-refill, "
+                   "static_schedule coherence)")
+    rationale = ("the serving engine trusts want_compute to mirror apply "
+                 "and init_state to be a pure refill; a policy that "
+                 "breaks either serves stale zeros or bleeds state across "
+                 "requests sharing a slot")
+
+    REL_PATH = "src/repro/core/__init__.py"
+
+    def check_project(self, root: str) -> List[Finding]:
+        try:
+            import jax.numpy as jnp
+            import numpy as np
+            from repro.core import CachePolicy, POLICY_REGISTRY, make_policy
+        except Exception as e:  # pragma: no cover - broken checkout
+            return [Finding(self.id, self.REL_PATH, 1, 0,
+                            f"cannot import repro.core to introspect the "
+                            f"policy registry: {e!r}")]
+
+        src = os.path.join(root, self.REL_PATH)
+        try:
+            with open(src, encoding="utf-8") as f:
+                lines = f.read().splitlines()
+        except OSError:
+            lines = []
+
+        findings: List[Finding] = []
+
+        def fail(name, msg):
+            line = _entry_line(lines, name)
+            snippet = lines[line - 1].strip() if lines else ""
+            findings.append(Finding(self.id, self.REL_PATH, line, 0,
+                                    f"policy '{name}': {msg}",
+                                    snippet=snippet))
+
+        x = jnp.ones((2, 4), jnp.float32)
+        for name in sorted(POLICY_REGISTRY):
+            try:
+                policy = make_policy(name, **_dummy_kwargs(name))
+            except Exception as e:
+                fail(name, f"not constructible with generic kwargs "
+                           f"(num_steps/frames/gate/profile): {e!r}")
+                continue
+            if not isinstance(policy, CachePolicy):
+                fail(name, f"make_policy returned {type(policy).__name__}, "
+                           f"not a CachePolicy")
+                continue
+            try:
+                s1 = policy.init_state(x.shape)
+                s2 = policy.init_state(x.shape)
+            except Exception as e:
+                fail(name, f"init_state(shape) raised: {e!r}")
+                continue
+            import jax
+            same = jax.tree_util.tree_all(jax.tree_util.tree_map(
+                lambda a, b: jnp.array_equal(jnp.asarray(a),
+                                             jnp.asarray(b)), s1, s2))
+            if not bool(same):
+                fail(name, "init_state is not a pure refill: two calls "
+                           "with the same shape produced different states "
+                           "(slot refills would bleed state)")
+            try:
+                wc0 = policy.want_compute(s1, 0, x, signal=x)
+            except Exception as e:
+                fail(name, f"want_compute(fresh_state, step=0) raised: "
+                           f"{e!r}")
+                continue
+            if not bool(np.asarray(wc0)):
+                fail(name, "want_compute is False on a FRESH state at "
+                           "step 0 — the engine would reuse an empty "
+                           "cache and serve zeros")
+            try:
+                y, _ = policy.apply(s1, 0, x, lambda v: v * 2.0, signal=x)
+            except Exception as e:
+                fail(name, f"apply(fresh_state, step=0) raised: {e!r}")
+                continue
+            if not bool(np.allclose(np.asarray(y), 2.0 * np.asarray(x),
+                                    atol=1e-5)):
+                fail(name, "apply at step 0 did not run compute_fn "
+                           "(output != compute_fn(x)) — want_compute's "
+                           "mirror promise is broken on the first tick")
+            try:
+                wm = policy.want_metric(s1, 0, x, signal=x)
+                float(np.asarray(wm))
+            except Exception as e:
+                fail(name, f"want_metric(fresh_state, step=0) is not a "
+                           f"float scalar: {e!r}")
+            try:
+                sched = policy.static_schedule(8)
+            except Exception as e:
+                fail(name, f"static_schedule(8) raised: {e!r}")
+                continue
+            if sched is not None:
+                if len(sched) != 8:
+                    fail(name, f"static_schedule(8) returned "
+                               f"{len(sched)} entries, expected 8")
+                elif not sched[0]:
+                    fail(name, "static_schedule()[0] is falsy — the "
+                               "zero-sync static plan would skip the "
+                               "first step against an empty cache")
+        return findings

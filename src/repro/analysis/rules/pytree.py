@@ -1,0 +1,133 @@
+"""pytree-registration: dataclass instances handed to jitted callables.
+
+A plain `@dataclass` is an opaque leaf to JAX: passing one into a jitted
+function either throws at trace time or — worse, with static hashable
+fields — silently retraces per instance.  Any dataclass that flows into a
+jitted program must be registered (`jax.tree_util.register_dataclass`,
+`register_pytree_node`, or the `register_pytree_node_class` decorator).
+
+Heuristic scope: the rule fires when, within one module, it can see all
+three of (a) the dataclass definition, (b) a jitted callable (a `jax.jit`
+decorated def or a name assigned from `jax.jit(...)`), and (c) an
+instance of (a) passed as an argument at a call of (b) — and no
+registration for the class anywhere in the module.  Cross-module flows
+are out of scope (bias to no false positives).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from ..base import Finding, Rule, register
+from ..source import ModuleSource
+from ..taint import attr_chain
+from .host_sync import _direct_nested_defs, _iter_scope_nodes
+from .jit_hygiene import _jit_decorator
+
+_REGISTER_FNS = {"register_pytree_node", "register_pytree_with_keys",
+                 "register_dataclass", "register_static",
+                 "register_pytree_node_class",
+                 "register_pytree_with_keys_class"}
+
+
+def _is_dataclass_decorator(dec: ast.AST) -> bool:
+    chain = attr_chain(dec.func if isinstance(dec, ast.Call) else dec)
+    return chain in ("dataclass", "dataclasses.dataclass")
+
+
+def _registration_decorator(dec: ast.AST) -> bool:
+    chain = attr_chain(dec.func if isinstance(dec, ast.Call) else dec)
+    return bool(chain) and chain.split(".")[-1] in _REGISTER_FNS
+
+
+@register
+class PytreeRegistrationRule(Rule):
+    id = "pytree-registration"
+    description = ("unregistered @dataclass instance passed into a jitted "
+                   "callable")
+    rationale = ("an unregistered dataclass is an opaque jit argument: "
+                 "trace error at best, a silent per-instance retrace at "
+                 "worst; register it as a pytree so jit sees its leaves")
+    trees = ("src/repro/",)
+
+    def check_module(self, module: ModuleSource) -> List[Finding]:
+        tree = module.tree
+        dataclasses: Set[str] = set()
+        registered: Set[str] = set()
+        jitted: Set[str] = set()
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                if any(_is_dataclass_decorator(d)
+                       for d in node.decorator_list):
+                    dataclasses.add(node.name)
+                if any(_registration_decorator(d)
+                       for d in node.decorator_list):
+                    registered.add(node.name)
+            elif isinstance(node, ast.Call):
+                chain = attr_chain(node.func)
+                if (chain and chain.split(".")[-1] in _REGISTER_FNS
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)):
+                    registered.add(node.args[0].id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_jit_decorator(d) for d in node.decorator_list):
+                    jitted.add(node.name)
+            elif isinstance(node, ast.Assign):
+                if (isinstance(node.value, ast.Call)
+                        and attr_chain(node.value.func) == "jax.jit"):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            jitted.add(t.id)
+
+        unregistered = dataclasses - registered
+        if not unregistered or not jitted:
+            return []
+
+        findings: List[Finding] = []
+        self._visit_scope(module, tree, {}, unregistered, jitted, findings)
+        findings.sort(key=lambda f: f.key())
+        return findings
+
+    def _visit_scope(self, module, owner, inherited, unregistered, jitted,
+                     findings):
+        # name -> dataclass class name, for `s = State(...)` assignments
+        instances: Dict[str, str] = dict(inherited)
+        for node in _iter_scope_nodes(owner):
+            if isinstance(node, ast.Assign):
+                cls = self._ctor_class(node.value, unregistered)
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        if cls is not None:
+                            instances[t.id] = cls
+                        else:
+                            instances.pop(t.id, None)
+        for node in _iter_scope_nodes(owner):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = None
+            if isinstance(node.func, ast.Name) and node.func.id in jitted:
+                fname = node.func.id
+            if fname is None:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                cls = self._ctor_class(arg, unregistered)
+                if cls is None and isinstance(arg, ast.Name):
+                    cls = instances.get(arg.id)
+                if cls is not None:
+                    findings.append(self.finding(
+                        module, node.lineno, node.col_offset,
+                        f"unregistered dataclass '{cls}' passed into "
+                        f"jitted '{fname}'; register it with "
+                        f"jax.tree_util.register_dataclass (or "
+                        f"register_pytree_node) first"))
+        for fn in _direct_nested_defs(owner):
+            self._visit_scope(module, fn, instances, unregistered, jitted,
+                              findings)
+
+    @staticmethod
+    def _ctor_class(node: ast.AST, unregistered: Set[str]):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in unregistered):
+            return node.func.id
+        return None

@@ -1,0 +1,199 @@
+"""rng-key-reuse: the same PRNG key consumed by two jax.random calls.
+
+JAX keys are not stateful seeds: passing the same key to two sampling
+calls yields CORRELATED (often identical) draws.  The bug class shipped
+once already — per-slot noise that was supposed to be i.i.d. came out
+identical across slots because one key fed every `jax.random.normal`.
+
+The rule tracks key identities (a bare name, or `name[const]`) through
+each function body in statement order: the first jax.random consumer of
+an identity marks it consumed; a second consumer without an intervening
+re-binding (`key, sub = jax.random.split(key)`) fires.  Loop bodies are
+walked twice so a consume-without-resplit inside a loop is caught on the
+second pass; if/else branches run on forked states that are union-merged
+afterwards.
+
+`jax.random.fold_in(key, data)` is deliberately NOT a consumer: deriving
+many streams from one base key via fold_in with distinct data is the
+recommended idiom (the engine's request_noise_key does exactly this).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from ..base import Finding, Rule, register
+from ..source import ModuleSource
+from ..taint import attr_chain
+
+#: jax.random.* that create or derive keys without "using them up"
+_NON_CONSUMERS = {"PRNGKey", "key", "fold_in", "key_data",
+                  "wrap_key_data", "clone"}
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _identity(node: ast.AST) -> Optional[str]:
+    """Trackable key identity: `key` or `keys[0]` (constant index)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)):
+        return f"{node.value.id}[{node.slice.value!r}]"
+    return None
+
+
+def _is_random_call(call: ast.Call) -> Optional[str]:
+    """Return the jax.random function name, or None."""
+    chain = attr_chain(call.func)
+    if not chain:
+        return None
+    parts = chain.split(".")
+    if len(parts) >= 2 and parts[-2] == "random":
+        return parts[-1]
+    return None
+
+
+def _reset_identity(name: str, state: Dict[str, int]) -> None:
+    """Re-binding a name refreshes the key it holds (and any tracked
+    subscripts rooted at it)."""
+    for ident in [k for k in state
+                  if k == name or k.startswith(name + "[")]:
+        del state[ident]
+
+
+def _assigned_names(stmt: ast.AST):
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        yield from _target_names(t)
+
+
+def _target_names(target: ast.AST):
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            yield from _target_names(el)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+    elif isinstance(target, ast.Subscript):
+        ident = _identity(target)
+        if ident:
+            yield ident
+
+
+@register
+class RngKeyReuseRule(Rule):
+    id = "rng-key-reuse"
+    description = ("same PRNG key consumed by two or more jax.random "
+                   "calls without an intervening split")
+    rationale = ("reusing a key makes 'independent' draws identical — "
+                 "per-slot noise collapses to one stream; always thread "
+                 "keys through jax.random.split (or fold_in with distinct "
+                 "data)")
+    trees = ("src/repro/",)
+
+    def check_module(self, module: ModuleSource) -> List[Finding]:
+        findings: List[Finding] = []
+        # module top level, then every function body independently
+        self._process_body(
+            module, [s for s in module.tree.body
+                     if not isinstance(s, _DEFS)], {}, findings)
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._process_body(module, node.body, {}, findings)
+        uniq, seen = [], set()
+        for f in sorted(findings, key=lambda f: f.key()):
+            if f.key() not in seen:
+                seen.add(f.key())
+                uniq.append(f)
+        return uniq
+
+    # -- statement-order interpreter ------------------------------------
+
+    def _process_body(self, module, body, state, findings):
+        for stmt in body:
+            self._process_stmt(module, stmt, state, findings)
+
+    def _process_stmt(self, module, stmt, state, findings):
+        if isinstance(stmt, _DEFS):
+            return  # own pass, own state
+        if isinstance(stmt, ast.If):
+            self._process_expr(module, stmt.test, state, findings)
+            s_then, s_else = dict(state), dict(state)
+            self._process_body(module, stmt.body, s_then, findings)
+            self._process_body(module, stmt.orelse, s_else, findings)
+            state.clear()
+            for s in (s_then, s_else):
+                for k, v in s.items():
+                    state[k] = min(state.get(k, v), v)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._process_expr(module, stmt.iter, state, findings)
+            for name in _target_names(stmt.target):
+                _reset_identity(name.split("[")[0], state)
+            for _ in range(2):  # second pass catches loop-carried reuse
+                self._process_body(module, stmt.body, state, findings)
+                for name in _target_names(stmt.target):
+                    _reset_identity(name.split("[")[0], state)
+            self._process_body(module, stmt.orelse, state, findings)
+            return
+        if isinstance(stmt, ast.While):
+            for _ in range(2):
+                self._process_expr(module, stmt.test, state, findings)
+                self._process_body(module, stmt.body, state, findings)
+            self._process_body(module, stmt.orelse, state, findings)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._process_expr(module, item.context_expr, state,
+                                   findings)
+                if item.optional_vars is not None:
+                    for name in _target_names(item.optional_vars):
+                        _reset_identity(name.split("[")[0], state)
+            self._process_body(module, stmt.body, state, findings)
+            return
+        if isinstance(stmt, ast.Try):
+            self._process_body(module, stmt.body, state, findings)
+            for handler in stmt.handlers:
+                self._process_body(module, handler.body, dict(state),
+                                   findings)
+            self._process_body(module, stmt.orelse, state, findings)
+            self._process_body(module, stmt.finalbody, state, findings)
+            return
+        # simple statement: evaluate expressions, then apply re-bindings
+        self._process_expr(module, stmt, state, findings)
+        for name in _assigned_names(stmt):
+            _reset_identity(name.split("[")[0], state)
+
+    def _process_expr(self, module, node, state, findings):
+        calls = []
+        for sub in ast.walk(node):
+            if isinstance(sub, _DEFS + (ast.Lambda,)):
+                continue
+            if isinstance(sub, ast.Call):
+                calls.append(sub)
+        calls.sort(key=lambda c: (c.lineno, c.col_offset))
+        for call in calls:
+            fname = _is_random_call(call)
+            if fname is None or fname in _NON_CONSUMERS:
+                continue
+            if not call.args:
+                continue
+            ident = _identity(call.args[0])
+            if ident is None:
+                continue
+            first = state.get(ident)
+            if first is not None:
+                findings.append(self.finding(
+                    module, call.lineno, call.col_offset,
+                    f"PRNG key '{ident}' was already consumed at line "
+                    f"{first}; reusing it makes the draws correlated — "
+                    f"split (or fold_in with distinct data) first"))
+            elif first is None:
+                state[ident] = call.lineno

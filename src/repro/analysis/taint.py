@@ -1,0 +1,234 @@
+"""Function-scope device-value taint analysis.
+
+The host-sync rule must tell `float(n)` on a Python int (fine) apart from
+`float(metric)` on a jax array (a blocking device->host round trip).  A
+type checker could do this with annotations; the codebase has none, so we
+approximate with a deliberately simple, flow-insensitive taint pass per
+function scope:
+
+  Sources (expression produces a device value):
+    * calls into jnp.* and device-producing jax.* namespaces
+      (jax.random/lax/nn/numpy/scipy/image), jax.vmap(...)(...) etc.
+    * calls of names that were assigned a transform result — `f =
+      jax.jit(g)` makes every `f(...)` a device-producing call
+  Propagation:
+    * through names (a name EVER assigned a tainted value is tainted —
+      flow-insensitive, so loops need no fixpoint over orderings),
+      tuple-unpack, binary/unary/compare ops, subscripts, conditionals
+    * through attribute access and method calls on tainted objects,
+      except host metadata (.shape/.dtype/.ndim/.size)
+  Sinks (clear the taint — the value is host-side afterwards):
+    * jax.device_get, np.asarray/np.array, float/int/bool, .item(),
+      .tolist()
+
+False-negative bias is intentional: an unknown call (`self._decode(...)`)
+is NOT treated as a source even when it returns device arrays, because
+treating every unknown as a source would drown the report in noise.  The
+rule catches the syncs whose device origin is visible in the same
+function — which covers every hot-path sync this repo has shipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+#: jax submodules whose calls produce device arrays
+_JAX_DEVICE_NS = {"random", "lax", "nn", "numpy", "scipy", "image", "ops"}
+#: jax.* callables whose RESULT is a device-producing callable
+_JAX_TRANSFORMS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                   "checkpoint", "remat"}
+#: jax.* namespaces/functions that stay host-side
+_JAX_HOST = {"tree_util", "tree", "eval_shape", "ShapeDtypeStruct",
+             "debug", "profiler", "device_get", "devices", "device_count",
+             "local_device_count"}
+#: attribute reads that return host metadata, not device values
+_HOST_META_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "name",
+                    "sharding"}
+#: methods whose result is host-side (they are also host-sync sinks)
+_HOST_RESULT_METHODS = {"item", "tolist"}
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """'jax.random.normal' for nested Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class TaintScope:
+    """Taint facts for one function (or module) scope."""
+
+    def __init__(self, tainted: Set[str], callables: Set[str]):
+        #: names holding (or having held) device values
+        self.tainted = tainted
+        #: names holding device-producing callables (jit/vmap results)
+        self.device_callables = callables
+
+
+def _is_device_call(call: ast.Call, scope: TaintScope) -> bool:
+    """Does this call produce a device value?"""
+    func = call.func
+    chain = attr_chain(func)
+    if chain:
+        head, *rest = chain.split(".")
+        if head == "jnp":
+            return True
+        if head == "jax":
+            if not rest or rest[0] in _JAX_HOST:
+                return False
+            if rest[0] in _JAX_DEVICE_NS:
+                return True
+            if rest[0] in _JAX_TRANSFORMS:
+                # jax.vmap(f)(x) — transform called, result NOT yet applied
+                # produces a callable; the callable itself is handled below
+                return False
+        if chain in scope.device_callables:
+            return True
+    # jax.jit(f)(x) / jax.value_and_grad(f)(x): func is itself a call of a
+    # transform — the application produces device values
+    if isinstance(func, ast.Call):
+        inner = attr_chain(func.func)
+        if inner:
+            parts = inner.split(".")
+            if parts[0] == "jax" and len(parts) > 1 \
+                    and parts[1] in _JAX_TRANSFORMS:
+                return True
+    # method call on a tainted object: x.sum(), x.astype(...)
+    if isinstance(func, ast.Attribute):
+        if func.attr in _HOST_RESULT_METHODS:
+            return False
+        if _expr_tainted(func.value, scope):
+            return True
+    return False
+
+
+def _is_transform_call(call: ast.Call) -> bool:
+    """Is this `jax.jit(...)`-style — result is a device-producing fn?"""
+    chain = attr_chain(call.func)
+    if not chain:
+        return False
+    parts = chain.split(".")
+    return parts[0] == "jax" and len(parts) > 1 \
+        and parts[1] in _JAX_TRANSFORMS
+
+
+def _is_host_conversion(call: ast.Call) -> bool:
+    """float()/int()/bool()/np.asarray()/np.array()/jax.device_get() —
+    result is host-side regardless of the argument."""
+    func = call.func
+    if isinstance(func, ast.Name) and func.id in ("float", "int", "bool",
+                                                  "str", "len"):
+        return True
+    chain = attr_chain(func)
+    return chain in ("np.asarray", "np.array", "numpy.asarray",
+                     "numpy.array", "jax.device_get")
+
+
+def _expr_tainted(node: ast.AST, scope: TaintScope) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in scope.tainted
+    if isinstance(node, ast.Call):
+        if _is_host_conversion(node):
+            return False
+        return _is_device_call(node, scope)
+    if isinstance(node, ast.Attribute):
+        if node.attr in _HOST_META_ATTRS:
+            return False
+        return _expr_tainted(node.value, scope)
+    if isinstance(node, ast.Subscript):
+        return _expr_tainted(node.value, scope)
+    if isinstance(node, ast.BinOp):
+        return (_expr_tainted(node.left, scope)
+                or _expr_tainted(node.right, scope))
+    if isinstance(node, ast.UnaryOp):
+        return _expr_tainted(node.operand, scope)
+    if isinstance(node, ast.Compare):
+        return (_expr_tainted(node.left, scope)
+                or any(_expr_tainted(c, scope) for c in node.comparators))
+    if isinstance(node, ast.IfExp):
+        return (_expr_tainted(node.body, scope)
+                or _expr_tainted(node.orelse, scope))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_expr_tainted(e, scope) for e in node.elts)
+    if isinstance(node, ast.Starred):
+        return _expr_tainted(node.value, scope)
+    return False
+
+
+def _assign_targets(target: ast.AST):
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            yield from _assign_targets(el)
+    elif isinstance(target, ast.Starred):
+        yield from _assign_targets(target.value)
+    # attribute/subscript targets (self.x = ...) are not tracked
+
+
+def build_scope(fn: ast.AST, parent: Optional[TaintScope] = None
+                ) -> TaintScope:
+    """Flow-insensitive fixpoint over one function body (nested function
+    bodies excluded — they get their own scope seeded from this one)."""
+    scope = TaintScope(set(parent.tainted) if parent else set(),
+                       set(parent.device_callables) if parent else set())
+
+    own_body = list(ast.iter_child_nodes(fn))
+
+    def walk_no_nested(node):
+        """Yield nodes in this scope, not descending into nested defs."""
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            yield from walk_no_nested(child)
+
+    nodes = [n for top in own_body for n in walk_no_nested(top)]
+
+    for _ in range(4):  # tiny fixpoint; chains are short
+        changed = False
+        for node in nodes:
+            targets, value = (), None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AugAssign):
+                targets, value = (node.target,), node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = (node.target,), node.value
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                targets, value = (node.target,), node.iter
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                targets, value = (node.optional_vars,), node.context_expr
+            elif isinstance(node, ast.NamedExpr):
+                targets, value = (node.target,), node.value
+            if value is None:
+                continue
+            names = list(_assign_targets(t) for t in targets)
+            flat = [n for sub in names for n in sub]
+            if not flat:
+                continue
+            if isinstance(value, ast.Call) and _is_transform_call(value):
+                for n in flat:
+                    if n not in scope.device_callables:
+                        scope.device_callables.add(n)
+                        changed = True
+                continue
+            if _expr_tainted(value, scope):
+                for n in flat:
+                    if n not in scope.tainted:
+                        scope.tainted.add(n)
+                        changed = True
+        if not changed:
+            break
+    return scope
+
+
+def expr_tainted(node: ast.AST, scope: TaintScope) -> bool:
+    """Public wrapper: is this expression device-tainted in `scope`?"""
+    return _expr_tainted(node, scope)

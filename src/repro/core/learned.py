@@ -113,9 +113,11 @@ def train_lazy_gate(key, inputs, outputs, *, steps: int = 200, lr: float = 0.05,
     Returns (gate, loss_history)."""
     gate = init_gate(key, inputs.shape[-1])
     loss_fn = lambda g: lazy_trajectory_loss(g, inputs, outputs, rho=rho)
+    step_fn = jax.jit(jax.value_and_grad(loss_fn))
     hist = []
     for _ in range(steps):
-        loss, grads = jax.value_and_grad(loss_fn)(gate)
+        loss, grads = step_fn(gate)
         gate = jax.tree_util.tree_map(lambda p, g: p - lr * g, gate, grads)
+        # repro-lint: disable-next-line=host-sync-in-hot-path -- offline training loop, not a tick path
         hist.append(float(loss))
     return gate, hist

@@ -7,7 +7,7 @@ instrumentation surface and adds what none of them provided:
 
   clock      — the one monotonic clock helper (`monotonic()`); every wall
                time measured under serving/ and modalities/ goes through
-               it (tools/check_clock.py lints this in CI)
+               it (repro.analysis' clock-discipline rule lints this in CI)
   trace      — TraceRecorder: TickEvents -> Chrome/Perfetto trace (per
                sub-pool tracks, plan/backbone phases, per-slot cache
                lifecycle spans annotated with signal vs threshold) + a

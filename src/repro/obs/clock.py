@@ -3,8 +3,9 @@
 Every wall-time measurement in `repro.serving` and `repro.modalities` —
 engine tick device seconds, TickEvent plan_seconds, TelemetryWindow
 statistics, benchmark harness timings — must come from this module, not
-from ad-hoc `time.time()` / `time.perf_counter()` calls (a CI lint,
-tools/check_clock.py, enforces this for serving/ and modalities/).
+from ad-hoc `time.time()` / `time.perf_counter()` calls (the CI lint's
+clock-discipline rule, repro.analysis, enforces this for serving/ and
+modalities/).
 
 Why one helper instead of "everyone calls perf_counter":
 

@@ -179,5 +179,6 @@ def fit_want_gate(key, trajectories, *, steps: int = 150, lr: float = 0.05,
     for _ in range(steps):
         loss, grads = grad_fn(gate)
         gate = jax.tree_util.tree_map(lambda p, g: p - lr * g, gate, grads)
+        # repro-lint: disable-next-line=host-sync-in-hot-path -- offline gate training, not a tick path
         hist.append(float(loss))
     return gate, hist

@@ -794,6 +794,7 @@ class DiffusionServingEngine:
         if self._static_plan is not None and self._static_cfg_plan is not None:
             return (self._static_plan[steps],
                     self._static_cfg_plan[steps] & self._guided, None)
+        # repro-lint: disable-next-line=host-sync-in-hot-path -- THE one priced per-tick sync: fused want-pass, surcharged in plan cost
         wc, wu, metric = jax.device_get(self._want_all(
             states, jnp.asarray(steps), xs, jnp.asarray(tvals),
             jnp.asarray(self._labels), jnp.asarray(self._guided)))

@@ -41,12 +41,15 @@ class ServingEngine:
 
     def __init__(self, params, cfg, *, slots: int = 8, cache_len: int = 1024,
                  max_prompt: int = 256, temperature: float = 0.0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, sync_every: int = 8):
         self.params, self.cfg = params, cfg
         self.slots, self.cache_len = slots, cache_len
         self.max_prompt = max_prompt
         self.temperature = temperature
         self.eos_id = eos_id
+        #: decode steps between early-exit probes; each probe is a scalar
+        #: host sync, so probing every step would serialize the decode loop
+        self.sync_every = max(1, sync_every)
 
         def _pf(p, toks):
             logits, _, cache = prefill(p, toks, cfg, cache_len)
@@ -88,21 +91,38 @@ class ServingEngine:
             else:
                 tok = jnp.argmax(logits, -1)
             tok = tok.astype(jnp.int32)
-            done = np.zeros(self.slots, bool)
-            done[len(chunk):] = True
-            for _ in range(max_new_tokens):
-                tok_np = np.asarray(tok)
+            # The decode loop stays sync-free: tokens accumulate as device
+            # arrays and the done mask lives on-device, so back-to-back
+            # decode steps pipeline instead of round-tripping every token.
+            done = jnp.asarray(np.arange(self.slots) >= len(chunk))
+            emitted = []
+            since_probe = 0
+            for step in range(max_new_tokens):
+                emitted.append(tok)
+                if self.eos_id is not None:
+                    done = done | (tok == self.eos_id)
+                    since_probe += 1
+                    if (since_probe >= self.sync_every
+                            and step + 1 < max_new_tokens):
+                        since_probe = 0
+                        # repro-lint: disable-next-line=host-sync-in-hot-path -- strided early-exit probe: one scalar sync per sync_every steps
+                        if bool(done.all()):
+                            break
+                if step + 1 < max_new_tokens:
+                    key, sub = jax.random.split(key)
+                    tok, cache = self._decode(self.params, tok, pos, cache,
+                                              sub)
+                    pos = pos + 1
+            if emitted:
+                # repro-lint: disable-next-line=host-sync-in-hot-path -- one bulk transfer per chunk, outside the per-token loop
+                toks_host = np.asarray(jnp.stack(emitted, axis=1))
                 for row, ridx in enumerate(chunk):
-                    if not done[row]:
-                        t = int(tok_np[row])
-                        results[ridx].tokens.append(t)
-                        if self.eos_id is not None and t == self.eos_id:
-                            done[row] = True
-                if done.all():
-                    break
-                key, sub = jax.random.split(key)
-                tok, cache = self._decode(self.params, tok, pos, cache, sub)
-                pos = pos + 1
+                    row_toks = toks_host[row]
+                    if self.eos_id is not None:
+                        hits = np.nonzero(row_toks == self.eos_id)[0]
+                        if hits.size:          # keep through the first EOS
+                            row_toks = row_toks[:hits[0] + 1]
+                    results[ridx].tokens.extend(int(t) for t in row_toks)
             del cache
         return results
 

@@ -1,0 +1,30 @@
+"""Shared pytest plumbing.
+
+XLA's CPU backend JIT-compiles every program into the live process and
+never unloads the code.  A full suite run compiles thousands of programs
+(84 modality cases alone re-trace the pipeline per policy x modality),
+and on some hosts the accumulated executables eventually push the
+in-process compiler into a native crash (segfault inside
+``backend_compile``, site varies run to run).  Dropping the compilation
+caches every few dozen tests releases the executables and keeps the
+process well under the cliff; the cost is a handful of re-compiles per
+boundary, which is noise next to the suite's runtime.
+"""
+import gc
+import os
+
+import jax
+import pytest
+
+#: tests between cache drops; 0 disables (REPRO_TEST_CLEAR_EVERY overrides)
+_CLEAR_EVERY = int(os.environ.get("REPRO_TEST_CLEAR_EVERY", "50"))
+_counter = {"n": 0}
+
+
+@pytest.fixture(autouse=True)
+def _periodic_jax_cache_clear():
+    yield
+    _counter["n"] += 1
+    if _CLEAR_EVERY and _counter["n"] % _CLEAR_EVERY == 0:
+        jax.clear_caches()
+        gc.collect()

@@ -1,0 +1,572 @@
+"""repro.analysis: rule fixtures, suppressions, baseline, CLI, repo run.
+
+Every rule gets a firing fixture AND a matched non-firing fixture (the
+negative is the same shape as the positive minus the defect), so a rule
+that degenerates into "always fire" or "never fire" breaks a test either
+way.  The whole-repo test is the enforcement point: the tree must lint
+clean with zero unsuppressed, unbaselined findings.
+"""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import all_rules, get_rule, run_analysis
+from repro.analysis.baseline import Baseline
+from repro.analysis.cli import main as cli_main
+from repro.analysis.report import to_json, to_text
+from repro.analysis.source import ModuleSource
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def lint_snippet(tmp_path, code, rule_id, relpath="src/repro/serving/snip.py"):
+    """Write `code` at `relpath` under a scratch root and run one rule."""
+    path = tmp_path / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    result = run_analysis(root=str(tmp_path), paths=[str(path)],
+                          rules=[get_rule(rule_id)],
+                          baseline_path=str(tmp_path / "no_baseline.json"))
+    return result
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-hot-path
+# ---------------------------------------------------------------------------
+
+def test_host_sync_fires_on_tainted_conversions(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax, jax.numpy as jnp, numpy as np
+
+        def tick(x):
+            y = jnp.sum(x)
+            a = float(y)            # sync: jnp-derived
+            b = np.asarray(y * 2)   # sync: propagated through BinOp
+            c = y.item()            # sync: method sink
+            d = jax.device_get(x)   # sync: unconditional
+            return a, b, c, d
+    """, "host-sync-in-hot-path")
+    lines = sorted(f.line for f in res.findings)
+    assert len(res.findings) == 4, to_text(res)
+    assert lines == [6, 7, 8, 9]
+
+
+def test_host_sync_silent_on_host_values(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import numpy as np, jax.numpy as jnp
+
+        def tick(n, xs):
+            a = float(n)                  # python scalar
+            b = np.asarray(xs)            # host list/array
+            y = jnp.zeros((4,))
+            c = int(y.shape[0])           # host metadata attr
+            hist = [1.0, 2.0]
+            d = float(np.percentile(hist, 99))  # host-side telemetry
+            return a, b, c, d
+    """, "host-sync-in-hot-path")
+    assert res.findings == [], to_text(res)
+
+
+def test_host_sync_taints_through_jitted_callable(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def run(params, x):
+            step = jax.jit(lambda p, v: v)
+            out = step(params, x)
+            return float(out)
+    """, "host-sync-in-hot-path")
+    assert len(res.findings) == 1
+    assert res.findings[0].line == 7
+
+
+def test_host_sync_scoped_to_hot_trees(tmp_path):
+    code = """
+        import jax.numpy as jnp
+
+        def f(x):
+            return float(jnp.sum(x))
+    """
+    hot = lint_snippet(tmp_path, code, "host-sync-in-hot-path",
+                       relpath="src/repro/core/snip.py")
+    cold = lint_snippet(tmp_path, code, "host-sync-in-hot-path",
+                        relpath="src/repro/diffusion/snip.py")
+    assert len(hot.findings) == 1
+    assert cold.findings == []  # benchmarks/diffusion may sync freely
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline
+# ---------------------------------------------------------------------------
+
+def test_clock_fires_on_wall_clock_reads(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import time
+
+        def tick(self):
+            t0 = time.perf_counter()
+            t1 = time.time()
+            return t1 - t0
+    """, "clock-discipline")
+    assert len(res.findings) == 2
+
+
+def test_clock_silent_on_injected_clock_and_strings(tmp_path):
+    res = lint_snippet(tmp_path, """
+        def tick(self, clock):
+            now = clock()
+            msg = "never call time.time() here"  # prose, not a call
+            return now, msg
+    """, "clock-discipline")
+    assert res.findings == []
+
+
+def test_clock_not_scoped_to_core(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import time
+
+        def f():
+            return time.time()
+    """, "clock-discipline", relpath="src/repro/core/snip.py")
+    assert res.findings == []  # core/ is allowed to read the wall clock
+
+
+# ---------------------------------------------------------------------------
+# rng-key-reuse
+# ---------------------------------------------------------------------------
+
+def test_rng_fires_on_reused_key(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape):
+            a = jax.random.normal(key, shape)
+            b = jax.random.uniform(key, shape)  # reuse!
+            return a + b
+    """, "rng-key-reuse")
+    assert len(res.findings) == 1
+    assert res.findings[0].line == 6
+    assert "'key'" in res.findings[0].message
+
+
+def test_rng_silent_with_split(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape):
+            key, sub = jax.random.split(key)
+            a = jax.random.normal(sub, shape)
+            key, sub = jax.random.split(key)
+            b = jax.random.uniform(sub, shape)
+            return a + b
+    """, "rng-key-reuse")
+    assert res.findings == [], to_text(res)
+
+
+def test_rng_fires_on_loop_carried_reuse(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape):
+            out = []
+            for _ in range(4):
+                out.append(jax.random.normal(key, shape))  # no resplit
+            return out
+    """, "rng-key-reuse")
+    assert len(res.findings) == 1
+
+
+def test_rng_silent_on_loop_with_split_or_fold_in(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape):
+            out = []
+            for i in range(4):
+                key, sub = jax.random.split(key)
+                out.append(jax.random.normal(sub, shape))
+            for i in range(4):
+                k = jax.random.fold_in(key, i)   # idiomatic stream derive
+                out.append(jax.random.normal(k, shape))
+            return out
+    """, "rng-key-reuse")
+    assert res.findings == [], to_text(res)
+
+
+def test_rng_branches_do_not_conflict(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape, greedy):
+            if greedy:
+                x = jax.random.normal(key, shape)
+            else:
+                x = jax.random.uniform(key, shape)  # exclusive branch: ok
+            return x
+    """, "rng-key-reuse")
+    assert res.findings == []
+
+
+def test_rng_fires_after_either_branch_consumed(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        def sample(key, shape, greedy):
+            if greedy:
+                x = jax.random.normal(key, shape)
+            else:
+                x = jax.random.uniform(key, shape)
+            y = jax.random.normal(key, shape)  # key spent on every path
+            return x + y
+    """, "rng-key-reuse")
+    assert len(res.findings) == 1
+    assert res.findings[0].line == 9
+
+
+# ---------------------------------------------------------------------------
+# jit-hygiene
+# ---------------------------------------------------------------------------
+
+def test_jit_hygiene_fires_on_all_three_patterns(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        _CACHE = {}
+
+        @jax.jit
+        def f(x, opts=[]):       # mutable default
+            return x, _CACHE     # closure over mutable global
+
+        def loop(xs):
+            out = []
+            for x in xs:
+                g = jax.jit(lambda v: v + 1)   # jit per iteration
+                out.append(g(x))
+            return out
+    """, "jit-hygiene")
+    msgs = " ".join(f.message for f in res.findings)
+    assert len(res.findings) == 3, to_text(res)
+    assert "mutable default" in msgs
+    assert "mutable module global" in msgs
+    assert "inside a loop" in msgs
+
+
+def test_jit_hygiene_silent_on_clean_patterns(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+
+        _SCALE = 2.0          # immutable global: fine
+
+        @jax.jit
+        def f(x, opts=None):
+            return x * _SCALE
+
+        g = jax.jit(lambda v: v + 1)   # hoisted: fine
+
+        def loop(xs):
+            return [g(x) for x in xs]
+    """, "jit-hygiene")
+    assert res.findings == [], to_text(res)
+
+
+# ---------------------------------------------------------------------------
+# pytree-registration
+# ---------------------------------------------------------------------------
+
+def test_pytree_fires_on_unregistered_dataclass_into_jit(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+        from dataclasses import dataclass
+
+        @dataclass
+        class State:
+            x: float
+
+        @jax.jit
+        def step(s):
+            return s
+
+        def run():
+            s = State(1.0)
+            return step(s), step(State(2.0))
+    """, "pytree-registration")
+    assert len(res.findings) == 2, to_text(res)
+    assert "State" in res.findings[0].message
+
+
+def test_pytree_silent_when_registered(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+        from dataclasses import dataclass
+
+        @dataclass
+        class State:
+            x: float
+
+        jax.tree_util.register_dataclass(State)
+
+        @jax.jit
+        def step(s):
+            return s
+
+        def run():
+            return step(State(1.0))
+    """, "pytree-registration")
+    assert res.findings == [], to_text(res)
+
+
+def test_pytree_silent_when_not_passed_to_jit(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax
+        from dataclasses import dataclass
+
+        @dataclass
+        class Config:          # host-side config object: fine
+            n: int
+
+        @jax.jit
+        def step(x):
+            return x
+
+        def run(cfg: Config, x):
+            return step(x)
+    """, "pytree-registration")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# policy-registry-conformance (runtime introspection)
+# ---------------------------------------------------------------------------
+
+def test_policy_conformance_clean_on_real_registry():
+    rule = get_rule("policy-registry-conformance")
+    findings = rule.check_project(REPO_ROOT)
+    assert findings == [], [f.message for f in findings]
+
+
+def test_policy_conformance_catches_broken_policy(monkeypatch):
+    import jax.numpy as jnp
+    import repro.core as core
+
+    class NeverComputes(core.CachePolicy):
+        name = "never"
+
+        def init_state(self, shape, dtype=jnp.float32):
+            return {"cache": jnp.zeros(shape, dtype)}
+
+        def apply(self, state, step, x, compute_fn, **signals):
+            return state["cache"], state      # serves zeros forever
+
+        def want_compute(self, state, step, x, **signals):
+            return jnp.asarray(False)         # fresh state refuses compute
+
+    monkeypatch.setitem(core.POLICY_REGISTRY, "never",
+                        lambda **kw: NeverComputes())
+    rule = get_rule("policy-registry-conformance")
+    findings = [f for f in rule.check_project(REPO_ROOT)
+                if "'never'" in f.message]
+    assert findings, "synthetic contract-breaking policy must fail lint"
+    msgs = " ".join(f.message for f in findings)
+    assert "FRESH state" in msgs or "compute_fn" in msgs
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_same_line_and_next_line_suppressions(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def f(x):
+            y = jnp.sum(x)
+            a = float(y)  # repro-lint: disable=host-sync-in-hot-path -- why
+            # repro-lint: disable-next-line=host-sync-in-hot-path -- why
+            b = float(y * 2)
+            c = float(y * 3)   # NOT suppressed
+            return a, b, c
+    """, "host-sync-in-hot-path")
+    assert len(res.findings) == 1
+    assert res.findings[0].line == 9
+    assert len(res.suppressed) == 2
+
+
+def test_disable_all_suppresses_every_rule(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def f(x):
+            return float(jnp.sum(x))  # repro-lint: disable=all -- escape hatch
+    """, "host-sync-in-hot-path")
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+
+
+def test_suppression_for_other_rule_does_not_mask(tmp_path):
+    res = lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def f(x):
+            return float(jnp.sum(x))  # repro-lint: disable=clock-discipline
+    """, "host-sync-in-hot-path")
+    assert len(res.findings) == 1
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+BASELINE_SNIPPET = """
+    import jax.numpy as jnp
+
+    def f(x):
+        return float(jnp.sum(x))
+"""
+
+
+def test_baseline_filters_and_survives_line_drift(tmp_path):
+    res = lint_snippet(tmp_path, BASELINE_SNIPPET, "host-sync-in-hot-path")
+    assert len(res.findings) == 1
+    bl_path = tmp_path / "baseline.json"
+    Baseline.write(str(bl_path), res.findings, justification="test fixture")
+
+    # same file: finding is baselined, run is clean
+    snip = tmp_path / "src/repro/serving/snip.py"
+    res2 = run_analysis(root=str(tmp_path), paths=[str(snip)],
+                        rules=[get_rule("host-sync-in-hot-path")],
+                        baseline_path=str(bl_path))
+    assert res2.findings == [] and len(res2.baselined) == 1
+    assert res2.exit_code == 0
+
+    # unrelated lines added above: fingerprint (content-keyed) still matches
+    snip.write_text("import os\nimport sys\n" + snip.read_text())
+    res3 = run_analysis(root=str(tmp_path), paths=[str(snip)],
+                        rules=[get_rule("host-sync-in-hot-path")],
+                        baseline_path=str(bl_path))
+    assert res3.findings == [] and len(res3.baselined) == 1
+
+
+def test_baseline_invalidated_by_editing_the_offending_line(tmp_path):
+    res = lint_snippet(tmp_path, BASELINE_SNIPPET, "host-sync-in-hot-path")
+    bl_path = tmp_path / "baseline.json"
+    Baseline.write(str(bl_path), res.findings)
+
+    snip = tmp_path / "src/repro/serving/snip.py"
+    snip.write_text(snip.read_text().replace(
+        "float(jnp.sum(x))", "float(jnp.sum(x) * 2)"))
+    res2 = run_analysis(root=str(tmp_path), paths=[str(snip)],
+                        rules=[get_rule("host-sync-in-hot-path")],
+                        baseline_path=str(bl_path))
+    # edited line -> new fingerprint -> finding resurfaces + entry stale
+    assert len(res2.findings) == 1
+    assert len(res2.stale_baseline) == 1
+    assert res2.exit_code == 1
+
+
+def test_repo_baseline_has_no_unjustified_entries():
+    path = os.path.join(REPO_ROOT, "tools", "lint_baseline.json")
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    for entry in data["findings"]:
+        assert entry.get("justification"), f"unjustified: {entry}"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exits_1_on_synthetic_violation_and_writes_json(tmp_path):
+    snip = tmp_path / "src/repro/serving/snip.py"
+    snip.parent.mkdir(parents=True)
+    snip.write_text(textwrap.dedent(BASELINE_SNIPPET))
+    report = tmp_path / "report.json"
+    rc = cli_main(["--root", str(tmp_path), "--baseline",
+                   str(tmp_path / "none.json"), "--json", str(report),
+                   "--rule", "host-sync-in-hot-path", "-q", str(snip)])
+    assert rc == 1
+    data = json.loads(report.read_text())
+    assert data["exit_code"] == 1
+    assert data["findings"][0]["rule"] == "host-sync-in-hot-path"
+    assert data["findings"][0]["fingerprint"]
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    snip = tmp_path / "src/repro/serving/snip.py"
+    snip.parent.mkdir(parents=True)
+    snip.write_text(textwrap.dedent(BASELINE_SNIPPET))
+    bl = tmp_path / "bl.json"
+    rc = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                   "--write-baseline", "--rule", "host-sync-in-hot-path",
+                   str(snip)])
+    assert rc == 0 and bl.exists()
+    rc2 = cli_main(["--root", str(tmp_path), "--baseline", str(bl),
+                    "--rule", "host-sync-in-hot-path", "-q", str(snip)])
+    assert rc2 == 0
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    assert cli_main(["--rule", "no-such-rule"]) == 2
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    snip = tmp_path / "src/repro/serving/broken.py"
+    snip.parent.mkdir(parents=True)
+    snip.write_text("def f(:\n")
+    res = run_analysis(root=str(tmp_path), paths=[str(snip)],
+                       rules=[get_rule("clock-discipline")],
+                       baseline_path=str(tmp_path / "none.json"))
+    assert len(res.findings) == 1
+    assert res.findings[0].rule == "syntax-error"
+
+
+# ---------------------------------------------------------------------------
+# framework plumbing
+# ---------------------------------------------------------------------------
+
+def test_all_six_rules_registered_with_metadata():
+    rules = {r.id: r for r in all_rules()}
+    expected = {"host-sync-in-hot-path", "clock-discipline",
+                "rng-key-reuse", "jit-hygiene", "pytree-registration",
+                "policy-registry-conformance"}
+    assert expected <= set(rules)
+    for rid in expected:
+        assert rules[rid].description and rules[rid].rationale
+
+
+def test_report_json_roundtrip(tmp_path):
+    res = lint_snippet(tmp_path, BASELINE_SNIPPET, "host-sync-in-hot-path")
+    data = to_json(res)
+    assert data["version"] == 1 and len(data["findings"]) == 1
+    text = to_text(res)
+    assert "host-sync-in-hot-path" in text
+
+
+def test_suppression_parser_ignores_justification_text():
+    mod = ModuleSource(
+        "x.py", "x.py",
+        "a = 1  # repro-lint: disable=rule-a,rule-b -- because reasons\n")
+    assert mod.suppressed(1, "rule-a") and mod.suppressed(1, "rule-b")
+    assert not mod.suppressed(1, "because")
+
+
+# ---------------------------------------------------------------------------
+# the enforcement point: the repo itself must lint clean
+# ---------------------------------------------------------------------------
+
+def test_whole_repo_lints_clean():
+    result = run_analysis(root=REPO_ROOT)
+    assert result.findings == [], to_text(result)
+    assert result.exit_code == 0
+    # the rules actually looked at the tree
+    assert result.files_scanned > 50
+    # every inline suppression in the repo carries a justification comment
+    for f in result.suppressed:
+        src = os.path.join(REPO_ROOT, f.path)
+        with open(src, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+        window = "\n".join(lines[max(0, f.line - 2):f.line])
+        assert "--" in window.split("repro-lint:")[-1], (
+            f"{f.path}:{f.line} suppression lacks a -- justification")

@@ -72,12 +72,15 @@ def test_monotonic_clock_advances():
 
 def test_clock_lint_passes():
     """src/repro/serving and src/repro/modalities must route every wall
-    time through repro.obs.clock (tools/check_clock.py, also run in CI)."""
+    time through repro.obs.clock (the clock-discipline rule of
+    repro.analysis, also run in CI)."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     proc = subprocess.run(
-        [sys.executable, os.path.join(root, "tools", "check_clock.py")],
-        capture_output=True, text=True)
-    assert proc.returncode == 0, proc.stderr
+        [sys.executable, "-m", "repro.analysis",
+         "--rule", "clock-discipline", "-q"],
+        capture_output=True, text=True, cwd=root,
+        env={**os.environ, "PYTHONPATH": os.path.join(root, "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
 
 
 # ----------------------------------------------------------------------
