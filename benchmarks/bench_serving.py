@@ -208,6 +208,7 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
     per-bucket XLA cost analysis) and bounds the observability overhead:
     serving the same queue with a TraceRecorder + MetricsRegistry attached
     must stay within 5% req/s of hooks-off serving."""
+    from repro.analysis.ir import RetraceSentinel
     from repro.core import FasterCacheCFG
     from repro.obs import (MetricsRegistry, TraceRecorder, redundancy_ratio)
     from repro.serving.diffusion import (DiffusionRequest,
@@ -221,7 +222,7 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
                              cfg_scale=CFG_SCALE if i % 2 == 0 else 0.0)
             for i in range(num_requests)]
     out, results, profiles = {}, {}, {}
-    engines = {}
+    engines, recompiles = {}, {}
     for mode, compact in (("compacted", True), ("dense", False)):
         eng = DiffusionServingEngine(params, cfg, "teacache", slots=slots,
                                      max_steps=steps,
@@ -235,7 +236,14 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
         eng.serve([DiffusionRequest(10_000 + i, num_steps=steps, seed=i,
                                     cfg_scale=CFG_SCALE)
                    for i in range(slots)])
-        res = eng.serve(reqs)
+        # retrace sentinel: warmup promises the complete program set, so
+        # the measured serve must trigger ZERO jit compiles (a silent
+        # retrace pays an XLA compile inside a live tick and invalidates
+        # the timing claim on top of the latency SLA)
+        with RetraceSentinel() as sentinel:
+            res = eng.serve(reqs)
+        recompiles[mode] = {"count": sentinel.count,
+                            "programs": sorted(set(sentinel.compiled_names))}
         assert len(res) == num_requests
         assert all(np.isfinite(r.x0).all() for r in res)
         s = eng.telemetry.summary()
@@ -272,6 +280,14 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
           f"{len(recorder.cache_events)} cache events)")
 
     failures = []
+    # steady-state serving must never retrace (a compile mid-session means
+    # warmup's program-set promise is broken — checked in smoke mode too,
+    # the claim is about program identity, not timing)
+    for mode, rec in recompiles.items():
+        if rec["count"] != 0:
+            failures.append(
+                f"{mode} engine retraced during steady-state serving: "
+                f"{rec['count']} compile(s) ({', '.join(rec['programs'])})")
     # the recorder must reconcile with telemetry even under refill churn
     rec_rows = int(registry.counter(
         "repro_engine_rows_computed_total").value(modality="image"))
@@ -314,6 +330,7 @@ def run_compaction(cfg, params, *, num_requests, steps, slots, smoke):
                 mode: [p.as_dict() for _, p in sorted(prof.items(), key=str)]
                 for mode, prof in profiles.items()},
             "observability_overhead_ratio": obs_ratio,
+            "recompiles": recompiles,
             "summaries": out}, failures
 
 

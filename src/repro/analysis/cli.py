@@ -24,7 +24,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("paths", nargs="*",
                    help="files/dirs to lint (default: src/repro)")
     p.add_argument("--rule", action="append", dest="rules", metavar="ID",
-                   help="run only this rule (repeatable)")
+                   help="run only this rule (repeatable; glob patterns "
+                        "like 'ir-*' expand against registered ids)")
     p.add_argument("--root", default=None,
                    help="repo root (default: auto-detect from cwd)")
     p.add_argument("--baseline", default=None, metavar="FILE",
@@ -47,6 +48,30 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def resolve_rules(patterns: List[str]) -> List:
+    """Rule ids / glob patterns -> rule objects.  A pattern matching
+    nothing is an error, not a silent no-op lint."""
+    import fnmatch
+    out, seen = [], set()
+    for pat in patterns:
+        if any(ch in pat for ch in "*?["):
+            matched = [r for r in all_rules()
+                       if fnmatch.fnmatchcase(r.id, pat)]
+            if not matched:
+                raise KeyError(f"--rule pattern '{pat}' matches no "
+                               f"registered rule")
+            for r in matched:
+                if r.id not in seen:
+                    seen.add(r.id)
+                    out.append(r)
+        else:
+            r = get_rule(pat)
+            if r.id not in seen:
+                seen.add(r.id)
+                out.append(r)
+    return out
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
 
@@ -56,8 +81,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
 
     try:
-        rules = ([get_rule(rid) for rid in args.rules]
-                 if args.rules else None)
+        rules = resolve_rules(args.rules) if args.rules else None
     except KeyError as e:
         print(e.args[0], file=sys.stderr)
         return 2

@@ -1,0 +1,98 @@
+"""The golden mixed-modality session: the lint-time serving fixture the
+ir-* rules (and the sentinel tests) share.
+
+One cached context per process builds a tiny image + video engine pair
+(signal policies + a CFG branch, so the fused want pass, the uncond rows
+and every bucket program all exist), warms them with IR capture, runs
+`verify_programs` over both, then serves a mixed guided/unguided queue
+through a MixedModalityEngine under a RetraceSentinel — steady-state
+serving after warmup must compile NOTHING.
+
+Tiny is load-bearing: the context compiles ~a dozen programs, so the
+configs are reduced to 1 layer / 32 dims and the checks run in seconds
+inside `repro-lint`.  The contracts checked are size-independent.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+__all__ = ["GoldenContext", "golden_context", "build_golden_engines",
+           "golden_requests"]
+
+
+@dataclass
+class GoldenContext:
+    """Everything the ir-* rules consult, built once per process."""
+    engines: Dict[str, object] = field(default_factory=dict)
+    program_findings: List = field(default_factory=list)   # verify_programs
+    retrace_count: int = -1             # -1 = session did not run
+    retrace_names: List[str] = field(default_factory=list)
+    sentinel_live: bool = False         # selftest: sentinel can see compiles
+    requests_served: int = 0
+    error: str = ""                     # non-empty = context build failed
+
+
+def build_golden_engines() -> Dict[str, object]:
+    """Tiny image + video engines with state-dependent policies and a CFG
+    branch — the program-surface-maximizing configuration: want pass +
+    every bucket + uncond rows all compile at warmup."""
+    from repro.core import FasterCacheCFG
+    from repro.modalities import get_modality, make_workload
+
+    engines = {}
+    for modality, policy in (("image", "teacache"),
+                             ("video", "teacache_video")):
+        cfg = get_modality(modality).config(smoke=True).reduced(
+            num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64)
+        wl = make_workload(modality, cfg=cfg)
+        engines[modality] = wl.engine(
+            policy, slots=2, max_steps=6, cfg_policy=FasterCacheCFG(2, 6))
+    return engines
+
+
+def golden_requests(num_steps: int = 6):
+    """A mixed queue: guided + unguided, image + video, enough requests
+    that slots refill mid-flight (the refill path must also be warm)."""
+    from repro.serving.diffusion import DiffusionRequest
+    reqs = []
+    rid = 0
+    for modality, n in (("image", 3), ("video", 2)):
+        for i in range(n):
+            reqs.append(DiffusionRequest(
+                rid, num_steps=num_steps, seed=rid, class_label=i % 3,
+                cfg_scale=2.0 if i % 2 == 0 else 0.0, modality=modality))
+            rid += 1
+    return reqs
+
+
+@functools.lru_cache(maxsize=1)
+def golden_context() -> GoldenContext:
+    ctx = GoldenContext()
+    try:
+        from repro.modalities import MixedModalityEngine
+        from .retrace import RetraceSentinel
+        from .verify import verify_programs
+
+        engines = build_golden_engines()
+        ctx.engines = engines
+        for eng in engines.values():
+            eng.warmup(verify=True)
+        for eng in engines.values():
+            ctx.program_findings.extend(eng.ir_findings)
+
+        # prove the sentinel's detection channels work BEFORE trusting a
+        # zero from the session (run outside the session sentinel so the
+        # probe compile is not counted against serving)
+        ctx.sentinel_live = RetraceSentinel().selftest()
+
+        mixed = MixedModalityEngine(engines)
+        with RetraceSentinel() as sentinel:
+            results = mixed.serve(golden_requests())
+        ctx.retrace_count = sentinel.count
+        ctx.retrace_names = list(sentinel.compiled_names)
+        ctx.requests_served = len(results)
+    except Exception as e:  # pragma: no cover - broken checkout
+        ctx.error = repr(e)
+    return ctx

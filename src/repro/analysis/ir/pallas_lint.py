@@ -1,0 +1,269 @@
+"""Pallas kernel lints: structural checks on every `pl.pallas_call` in
+src/repro/kernels/, without executing a single kernel.
+
+The kernels ship with `interpret=True` on CPU, so a malformed BlockSpec
+often *runs* (the interpreter is forgiving) and only explodes on a real
+TPU.  These lints catch the TPU-fatal classes statically:
+
+  * grid sanity — a tuple of positive ints;
+  * BlockSpec arity — block_shape rank == operand rank, index_map takes
+    exactly len(grid) args and returns one index per block dim;
+  * divisibility — every integer block dim divides its operand dim (the
+    kernels pad/cap so this must hold; a remainder tile is silent garbage
+    on TPU);
+  * dtype consistency — no f64 operands/outputs, and all floating
+    operands of one call agree (an f32/bf16 mix inside one kernel is
+    almost always an accidental upcast on the MXU path).
+
+Mechanics: each kernel wrapper is invoked on representative driver shapes
+with `pl.pallas_call` monkeypatched to *capture* (grid, specs, out_shape,
+operand avals) and return zeros — the checks then run on the captured
+call descriptions.  Findings anchor on the wrapper's call site inside
+src/repro/kernels/.
+"""
+from __future__ import annotations
+
+import inspect
+import traceback
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from .jaxpr_checks import IRIssue
+
+__all__ = ["PallasCallCapture", "intercept_pallas_calls", "check_capture",
+           "lint_pallas_kernels", "KERNEL_DRIVERS"]
+
+
+@dataclass
+class PallasCallCapture:
+    """One intercepted pl.pallas_call: everything the checks need."""
+    kernel_name: str
+    grid: object
+    in_specs: Sequence
+    out_specs: object
+    out_shape: object
+    operands: Tuple = ()               # ShapeDtypeStruct-likes per operand
+    file: str = ""                     # call site inside kernels/
+    line: int = 0
+
+
+def _call_site() -> Tuple[str, int]:
+    for frame in reversed(traceback.extract_stack()):
+        fn = frame.filename.replace("\\", "/")
+        if "/kernels/" in fn and not fn.endswith("pallas_lint.py"):
+            return frame.filename, frame.lineno
+    return "", 0
+
+
+@contextmanager
+def intercept_pallas_calls(records: List[PallasCallCapture]):
+    """Monkeypatch jax.experimental.pallas.pallas_call to record each call
+    and return correctly-shaped zeros instead of building the kernel —
+    the wrappers run end to end with no Pallas lowering at all."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    real = pl.pallas_call
+
+    def fake_pallas_call(kernel, *call_args, grid=None, in_specs=None,
+                         out_specs=None, out_shape=None, **kwargs):
+        cap = PallasCallCapture(
+            kernel_name=getattr(kernel, "__name__", None) or getattr(
+                getattr(kernel, "func", None), "__name__", "<kernel>"),
+            grid=grid, in_specs=in_specs or (), out_specs=out_specs,
+            out_shape=out_shape)
+        cap.file, cap.line = _call_site()
+        records.append(cap)
+
+        def run(*operands):
+            cap.operands = tuple(
+                jax.ShapeDtypeStruct(o.shape, o.dtype) for o in operands)
+            shapes = (out_shape if isinstance(out_shape, (list, tuple))
+                      else [out_shape])
+            outs = [jnp.zeros(s.shape, s.dtype) for s in shapes]
+            return outs if isinstance(out_shape, (list, tuple)) else outs[0]
+
+        return run
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        yield records
+    finally:
+        pl.pallas_call = real
+
+
+# ----------------------------------------------------------------------
+def _norm_grid(grid) -> Optional[Tuple[int, ...]]:
+    if grid is None:
+        return ()
+    if isinstance(grid, int):
+        return (grid,)
+    try:
+        return tuple(int(g) for g in grid)
+    except (TypeError, ValueError):
+        return None
+
+
+def _norm_specs(specs) -> List:
+    if specs is None:
+        return []
+    return list(specs) if isinstance(specs, (list, tuple)) else [specs]
+
+
+def _check_spec(cap: PallasCallCapture, role: str, spec, operand,
+                grid: Tuple[int, ...], issues: List[IRIssue]) -> None:
+    name = cap.kernel_name
+
+    def issue(msg):
+        issues.append(IRIssue("pallas", f"{name}: {role}: {msg}",
+                              cap.file, cap.line))
+
+    block = getattr(spec, "block_shape", None)
+    if block is None:                     # whole-array spec — nothing to do
+        return
+    shape = tuple(operand.shape)
+    if len(block) != len(shape):
+        issue(f"block_shape rank {len(block)} != operand rank "
+              f"{len(shape)} (operand {shape})")
+        return
+    for d, (b, s) in enumerate(zip(block, shape)):
+        if b is None:
+            continue                      # squeezed singleton dim
+        b = int(b)
+        if b <= 0:
+            issue(f"block dim {d} is {b} (must be positive)")
+        elif s % b != 0:
+            issue(f"block dim {d} = {b} does not divide operand dim "
+                  f"{s} — the remainder tile is silent garbage on TPU")
+    index_map = getattr(spec, "index_map", None)
+    if index_map is None:
+        return
+    try:
+        arity = len(inspect.signature(index_map).parameters)
+    except (TypeError, ValueError):
+        return
+    if arity != len(grid):
+        issue(f"index_map takes {arity} args but the grid has "
+              f"{len(grid)} dims")
+        return
+    try:
+        idx = index_map(*(0 for _ in grid))
+    except Exception as e:
+        issue(f"index_map raised on zero indices: {e!r}")
+        return
+    idx = idx if isinstance(idx, tuple) else (idx,)
+    if len(idx) != len(block):
+        issue(f"index_map returns {len(idx)} indices for a "
+              f"{len(block)}-dim block_shape")
+
+
+def check_capture(cap: PallasCallCapture) -> List[IRIssue]:
+    """All structural checks over one captured pallas_call."""
+    issues: List[IRIssue] = []
+    name = cap.kernel_name
+    grid = _norm_grid(cap.grid)
+    if grid is None:
+        issues.append(IRIssue(
+            "pallas", f"{name}: grid {cap.grid!r} is not a tuple of ints",
+            cap.file, cap.line))
+        return issues
+    if any(g <= 0 for g in grid):
+        issues.append(IRIssue(
+            "pallas", f"{name}: grid {grid} has a non-positive dim",
+            cap.file, cap.line))
+
+    in_specs = _norm_specs(cap.in_specs)
+    if in_specs and len(in_specs) != len(cap.operands):
+        issues.append(IRIssue(
+            "pallas", f"{name}: {len(in_specs)} in_specs for "
+            f"{len(cap.operands)} operands", cap.file, cap.line))
+    for i, (spec, op) in enumerate(zip(in_specs, cap.operands)):
+        _check_spec(cap, f"in_specs[{i}]", spec, op, grid, issues)
+
+    out_shapes = (cap.out_shape if isinstance(cap.out_shape, (list, tuple))
+                  else [cap.out_shape])
+    out_specs = _norm_specs(cap.out_specs)
+    for i, (spec, sh) in enumerate(zip(out_specs, out_shapes)):
+        _check_spec(cap, f"out_specs[{i}]", spec, sh, grid, issues)
+
+    # dtype consistency: no f64 anywhere; floating operand dtypes agree
+    float_dtypes = set()
+    for i, op in enumerate(tuple(cap.operands) + tuple(out_shapes)):
+        dt = str(op.dtype)
+        if dt in ("float64", "complex128"):
+            issues.append(IRIssue(
+                "pallas", f"{name}: operand/output #{i} is {dt} — wide "
+                f"dtypes have no TPU tile layout", cap.file, cap.line))
+        if dt.startswith(("float", "bfloat")):
+            float_dtypes.add(dt)
+    if len(float_dtypes) > 1:
+        issues.append(IRIssue(
+            "pallas", f"{name}: mixed floating dtypes "
+            f"{sorted(float_dtypes)} in one kernel call — accidental "
+            f"upcast on the MXU path", cap.file, cap.line))
+    return issues
+
+
+# ----------------------------------------------------------------------
+# representative driver shapes per repo kernel: small but structurally
+# faithful (GQA group > 1 for flash attention, multi-chunk scan for ssd,
+# padded tail for forecast) so the specs exercise their real index maps
+def _drive_flash_attention():
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.flash_attention import (
+        flash_attention_pallas)
+    q = jnp.zeros((2, 256, 4, 64), jnp.float32)
+    kv = jnp.zeros((2, 256, 2, 64), jnp.float32)
+    flash_attention_pallas(q, kv, kv, causal=True, block_q=128, block_k=128)
+
+
+def _drive_forecast():
+    import jax.numpy as jnp
+    from repro.kernels.forecast.forecast import forecast_pallas
+    diffs = jnp.zeros((4, 8, 8, 7), jnp.float32)    # pads 448 -> 512
+    coeffs = jnp.zeros((4,), jnp.float32)
+    forecast_pallas(diffs, coeffs, block_n=512)
+
+
+def _drive_ssd():
+    import jax.numpy as jnp
+    from repro.kernels.ssd.ssd import ssd_pallas
+    x = jnp.zeros((1, 128, 2, 8), jnp.float32)
+    dt = jnp.zeros((1, 128, 2), jnp.float32)
+    A = jnp.zeros((2,), jnp.float32)
+    B_ = jnp.zeros((1, 128, 4), jnp.float32)
+    ssd_pallas(x, dt, A, B_, B_, chunk=64)          # 2 chunks
+
+
+KERNEL_DRIVERS = {
+    "flash_attention": _drive_flash_attention,
+    "forecast": _drive_forecast,
+    "ssd": _drive_ssd,
+}
+
+
+def lint_pallas_kernels() -> List[IRIssue]:
+    """Run every repo kernel's driver under interception and check each
+    captured pallas_call.  A driver that errors (import break, wrapper
+    crash) is itself a finding — a kernel the lint cannot reach is not a
+    kernel the lint vouches for."""
+    issues: List[IRIssue] = []
+    for name, driver in sorted(KERNEL_DRIVERS.items()):
+        records: List[PallasCallCapture] = []
+        try:
+            with intercept_pallas_calls(records):
+                driver()
+        except Exception as e:
+            issues.append(IRIssue(
+                "pallas", f"{name}: driver failed under interception "
+                f"({e!r}) — kernel unlintable"))
+            continue
+        if not records:
+            issues.append(IRIssue(
+                "pallas", f"{name}: driver made no pallas_call — the "
+                f"kernel entry point no longer reaches Pallas"))
+        for cap in records:
+            issues.extend(check_capture(cap))
+    return issues

@@ -1,0 +1,130 @@
+"""Retrace sentinel: count jit cache misses (XLA backend compiles) inside
+a scope.
+
+The engine's whole performance model assumes `warmup()` compiles the
+complete program set and steady-state serving never traces again — a
+silent retrace (a shape-varying operand, a python-object hash change, a
+new bucket size warmup missed) pays an XLA compile inside a live tick.
+The AST layer cannot see this; the runtime can:
+
+  * `jax.monitoring` fires one `/jax/core/compile/backend_compile_duration`
+    duration event per *actual backend compile* — cache hits fire nothing.
+    That count is authoritative.
+  * jax logs "Compiling <fn> with global shapes..." per compile on the
+    `jax._src.interpreters.pxla` logger; the sentinel attaches a handler
+    to capture the names, so a failure says WHICH program retraced.
+
+jax.monitoring has no public unregister, so one module-level listener is
+registered on first use and fans out to a stack of active sentinels —
+nesting works, and an inactive sentinel costs one set-membership check
+per compile event (i.e. nothing at steady state, where no compiles
+happen).
+"""
+from __future__ import annotations
+
+import logging
+from typing import List
+
+__all__ = ["RetraceSentinel"]
+
+_COMPILE_EVENT_SUFFIX = "backend_compile"
+_PXLA_LOGGER = "jax._src.interpreters.pxla"
+
+_ACTIVE: List["RetraceSentinel"] = []
+_LISTENER_REGISTERED = False
+
+
+def _on_duration(event: str, duration: float, **kwargs) -> None:
+    if _COMPILE_EVENT_SUFFIX in event:
+        for sentinel in _ACTIVE:
+            sentinel._event_count += 1
+
+
+def _ensure_listener() -> None:
+    global _LISTENER_REGISTERED
+    if _LISTENER_REGISTERED:
+        return
+    from jax import monitoring
+    monitoring.register_event_duration_secs_listener(_on_duration)
+    _LISTENER_REGISTERED = True
+
+
+class _NameCapture(logging.Handler):
+    """Collects the '<fn>' out of pxla's 'Compiling <fn> ...' records."""
+
+    def __init__(self, sink: List[str]):
+        super().__init__(level=logging.DEBUG)
+        self.sink = sink
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:
+            return
+        if msg.startswith("Compiling "):
+            self.sink.append(msg.split()[1])
+
+
+class RetraceSentinel:
+    """Context manager counting jit cache misses in its scope.
+
+    >>> with RetraceSentinel() as s:
+    ...     session.tick()
+    >>> s.count, s.compiled_names
+    (0, [])
+
+    `count` is the number of backend compiles (monitoring events — or the
+    captured-name count if the logging channel saw more, so neither
+    channel regressing can blind the sentinel); `compiled_names` best-
+    effort names the programs that compiled.  `ok` is `count == 0`."""
+
+    def __init__(self):
+        self._event_count = 0
+        self.compiled_names: List[str] = []
+        self._handler = None
+        self._prev_level = None
+        self._prev_propagate = None
+
+    def __enter__(self) -> "RetraceSentinel":
+        _ensure_listener()
+        logger = logging.getLogger(_PXLA_LOGGER)
+        self._prev_level = logger.level
+        self._prev_propagate = logger.propagate
+        # pxla logs compile names at DEBUG; raise the logger for the scope
+        # (the handler filters to 'Compiling ...' records only) without
+        # propagating DEBUG spam to the root handlers, and restore on exit
+        logger.setLevel(logging.DEBUG)
+        logger.propagate = False
+        self._handler = _NameCapture(self.compiled_names)
+        logger.addHandler(self._handler)
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.remove(self)
+        logger = logging.getLogger(_PXLA_LOGGER)
+        logger.removeHandler(self._handler)
+        logger.setLevel(self._prev_level)
+        logger.propagate = self._prev_propagate
+        return None
+
+    @property
+    def count(self) -> int:
+        return max(self._event_count, len(self.compiled_names))
+
+    @property
+    def ok(self) -> bool:
+        return self.count == 0
+
+    def selftest(self) -> bool:
+        """True when the sentinel's channels actually detect a compile: a
+        fresh jit function is dispatched under a nested sentinel, which
+        must count >= 1.  Guards against a jax upgrade silently renaming
+        the monitoring event AND the log message — a blind sentinel would
+        otherwise report a vacuous zero forever."""
+        import jax
+        import jax.numpy as jnp
+        with RetraceSentinel() as probe:
+            # a fresh function object per call -> guaranteed cache miss
+            jax.jit(lambda x: x * 2.0 + 1.0)(jnp.zeros((3, 5, 7)))
+        return probe.count >= 1

@@ -1,8 +1,12 @@
 """Noise schedules (survey §III-A).
 
 Forward process (Eq. 2-4):  q(x_t|x_0) = N(sqrt(abar_t) x0, (1-abar_t) I).
-All tables are precomputed on host as float64-ish float32 numpy and closed
-over by the samplers, so nothing here enters the traced graph except gathers.
+Schedule construction runs in float64 for precision (the cosine alpha-bar
+ratios and the cumprod are catastrophically lossy in f32), but every table
+the class EXPOSES is float32: these tables are closed over by jit'd
+samplers and gathered into every serving tick, so an f64 boundary here
+leaks wide dtypes into device programs (the ir-dtype lint enforces the
+f32 boundary repo-wide).
 """
 from __future__ import annotations
 
@@ -16,7 +20,12 @@ import numpy as np
 @dataclass(frozen=True)
 class NoiseSchedule:
     """Discrete-time DDPM schedule over T training steps."""
-    betas: np.ndarray          # (T,)
+    betas: np.ndarray          # (T,) float32 (cast at construction)
+
+    def __post_init__(self):
+        # f32 at the boundary, whatever precision the constructor used
+        object.__setattr__(self, "betas",
+                           np.asarray(self.betas, np.float32))
 
     @property
     def T(self) -> int:
@@ -24,15 +33,17 @@ class NoiseSchedule:
 
     @property
     def alphas(self) -> np.ndarray:
-        return 1.0 - self.betas
+        return (1.0 - self.betas).astype(np.float32)
 
     @property
     def alpha_bars(self) -> np.ndarray:
-        return np.cumprod(self.alphas)
+        # accumulate the product in f64 (a 1000-term f32 cumprod drifts),
+        # then cast at the boundary like every other exposed table
+        return np.cumprod(self.alphas, dtype=np.float64).astype(np.float32)
 
     def sigma(self, t):
         """sqrt(1 - abar_t) — noise std at step t."""
-        return np.sqrt(1.0 - self.alpha_bars[t])
+        return np.sqrt(1.0 - self.alpha_bars[t]).astype(np.float32)
 
     def q_sample(self, x0, t, eps):
         """Forward diffuse x0 to step t (Eq. 4). t: int array (B,)."""

@@ -92,6 +92,9 @@ class MixedModalityEngine:
         self.pools: Dict[str, DiffusionServingEngine] = dict(pools)
         #: MixedTelemetry of the most recent serve() call
         self.telemetry: Optional[MixedTelemetry] = None
+        #: aggregated repro.analysis.ir findings from warmup(verify=True);
+        #: None = never verified, [] = every sub-pool verified clean
+        self.ir_findings: Optional[List] = None
 
     @classmethod
     def from_workloads(cls, workloads: Mapping[str, DenoiseWorkload],
@@ -108,12 +111,21 @@ class MixedModalityEngine:
             for name, wl in workloads.items()})
 
     # ------------------------------------------------------------------
-    def warmup(self) -> Dict[str, Dict]:
+    def warmup(self, verify: bool = False) -> Dict[str, Dict]:
         """Pre-compile every sub-pool's tick programs (one bucket set per
         modality shape) so the first mixed tick runs at steady state.
         Returns {modality: program_profile} — each sub-pool's per-program
-        compile-time / FLOPs cost cards (see engine.warmup)."""
-        return {m: eng.warmup() for m, eng in self.pools.items()}
+        compile-time / FLOPs cost cards (see engine.warmup).
+
+        `verify=True` runs the repro.analysis.ir contract checks over
+        every sub-pool's program set (see engine.warmup(verify=True));
+        per-engine findings aggregate on `self.ir_findings`."""
+        out = {m: eng.warmup(verify=verify) for m, eng in self.pools.items()}
+        if verify:
+            self.ir_findings = [
+                f for _, eng in sorted(self.pools.items())
+                for f in (eng.ir_findings or ())]
+        return out
 
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[DiffusionRequest],

@@ -41,8 +41,9 @@ so hooks-off serving pays nothing.
 from .clock import monotonic, monotonic_ns, wall
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       default_registry)
-from .profiling import (ProgramProfile, compile_program, flops_per_row,
-                        profiler_trace, program_cost, redundancy_ratio)
+from .profiling import (ProgramIR, ProgramProfile, capture_ir,
+                        compile_program, flops_per_row, profiler_trace,
+                        program_cost, redundancy_ratio)
 from .trace import (TraceRecorder, load_cache_events, load_probes,
                     policy_signature, signal_trace_from_files,
                     validate_chrome_trace)
@@ -50,8 +51,8 @@ from .trace import (TraceRecorder, load_cache_events, load_probes,
 __all__ = [
     "monotonic", "monotonic_ns", "wall",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
-    "ProgramProfile", "compile_program", "flops_per_row", "profiler_trace",
-    "program_cost", "redundancy_ratio",
+    "ProgramIR", "ProgramProfile", "capture_ir", "compile_program",
+    "flops_per_row", "profiler_trace", "program_cost", "redundancy_ratio",
     "TraceRecorder", "load_cache_events", "load_probes", "policy_signature",
     "signal_trace_from_files", "validate_chrome_trace",
 ]

@@ -19,12 +19,13 @@ from __future__ import annotations
 import math
 from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from .clock import monotonic
 
-__all__ = ["ProgramProfile", "compile_program", "program_cost",
-           "flops_per_row", "redundancy_ratio", "profiler_trace"]
+__all__ = ["ProgramIR", "ProgramProfile", "capture_ir", "compile_program",
+           "program_cost", "flops_per_row", "redundancy_ratio",
+           "profiler_trace"]
 
 
 @dataclass(frozen=True)
@@ -35,10 +36,64 @@ class ProgramProfile:
     compile_seconds: float
     flops: float                # XLA cost model; nan when unavailable
     bytes_accessed: float       # XLA cost model; nan when unavailable
+    #: repro.analysis.ir findings attached by engine.warmup(verify=True);
+    #: empty means verified-clean OR not verified — check engine.ir_findings
+    #: (None = never verified) to tell the two apart
+    ir_findings: Tuple = ()
 
     def as_dict(self) -> Dict:
-        return {"key": self.key, "compile_seconds": self.compile_seconds,
-                "flops": self.flops, "bytes_accessed": self.bytes_accessed}
+        d = {"key": self.key, "compile_seconds": self.compile_seconds,
+             "flops": self.flops, "bytes_accessed": self.bytes_accessed}
+        if self.ir_findings:
+            d["ir_findings"] = [
+                f.to_dict() if hasattr(f, "to_dict") else str(f)
+                for f in self.ir_findings]
+        return d
+
+
+@dataclass(frozen=True)
+class ProgramIR:
+    """The inspectable intermediate representations of one jit program,
+    captured at trace/lower time (a `Compiled` executable no longer
+    carries its jaxpr, so engines capture this during warmup).
+
+    `jaxpr` is the ClosedJaxpr — closed-over arrays (model params, any
+    accidentally baked table) appear as `.consts`.  `lowered_text` is the
+    StableHLO module as text; donated-and-actually-aliased arguments carry
+    a `tf.aliasing_output` attribute there, which is what the ir-donation
+    check keys on.  `declared_const_specs` is the (shape, dtype-name)
+    multiset of consts the owner *intends* to close over (an engine's
+    model param leaves); anything else above the bloat threshold is a
+    closure-capture leak."""
+    key: object
+    jaxpr: object                              # jax ClosedJaxpr
+    lowered_text: str                          # StableHLO module text
+    fn_file: str = ""                          # def-site of the python fn
+    fn_line: int = 0
+    declared_const_specs: Tuple = ()           # ((shape, dtype_name), ...)
+
+
+def _fn_def_site(jitted) -> Tuple[str, int]:
+    """Best-effort (file, line) of the python function under a jit wrapper,
+    for anchoring findings that have no per-eqn source info."""
+    fn = getattr(jitted, "__wrapped__", jitted)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return "", 0
+    return code.co_filename, code.co_firstlineno
+
+
+def capture_ir(jitted, *args, key=None, declared_const_specs=(),
+               **kwargs) -> ProgramIR:
+    """Trace + lower a jit'd function on example args and keep the IRs
+    (without compiling).  Engines use this to re-capture IR for programs
+    whose compiled executables were already swapped in by a prior warmup."""
+    traced = jitted.trace(*args, **kwargs)
+    fn_file, fn_line = _fn_def_site(jitted)
+    return ProgramIR(key=key, jaxpr=traced.jaxpr,
+                     lowered_text=traced.lower().as_text(),
+                     fn_file=fn_file, fn_line=fn_line,
+                     declared_const_specs=tuple(declared_const_specs))
 
 
 def program_cost(compiled) -> Dict[str, float]:
@@ -60,20 +115,35 @@ def program_cost(compiled) -> Dict[str, float]:
             "bytes_accessed": float(ca.get("bytes accessed", math.nan))}
 
 
-def compile_program(jitted, *args, key=None, **kwargs):
+def compile_program(jitted, *args, key=None, want_ir=False,
+                    declared_const_specs=(), **kwargs):
     """AOT-compile a jit'd function on example args.
 
-    Returns (compiled, ProgramProfile).  The compiled executable is
-    directly callable with matching-shape args — the engine swaps it into
-    its tick-program cache so warmup's compile is never paid twice — and
-    its cost analysis prices the program in FLOPs/bytes."""
+    Returns (compiled, ProgramProfile) — or (compiled, profile, ProgramIR)
+    with `want_ir=True`, sharing one trace/lower pipeline so IR capture
+    costs no extra trace.  The compiled executable is directly callable
+    with matching-shape args — the engine swaps it into its tick-program
+    cache so warmup's compile is never paid twice — and its cost analysis
+    prices the program in FLOPs/bytes."""
     t0 = monotonic()
-    compiled = jitted.lower(*args, **kwargs).compile()
+    ir = None
+    if want_ir:
+        traced = jitted.trace(*args, **kwargs)
+        lowered = traced.lower()
+        fn_file, fn_line = _fn_def_site(jitted)
+        ir = ProgramIR(key=key, jaxpr=traced.jaxpr,
+                       lowered_text=lowered.as_text(),
+                       fn_file=fn_file, fn_line=fn_line,
+                       declared_const_specs=tuple(declared_const_specs))
+    else:
+        lowered = jitted.lower(*args, **kwargs)
+    compiled = lowered.compile()
     dt = monotonic() - t0
     cost = program_cost(compiled)
-    return compiled, ProgramProfile(key=key, compile_seconds=dt,
-                                    flops=cost["flops"],
-                                    bytes_accessed=cost["bytes_accessed"])
+    profile = ProgramProfile(key=key, compile_seconds=dt,
+                             flops=cost["flops"],
+                             bytes_accessed=cost["bytes_accessed"])
+    return (compiled, profile, ir) if want_ir else (compiled, profile)
 
 
 def flops_per_row(profiles: Dict) -> float:

@@ -75,7 +75,7 @@ from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
 from repro.diffusion import NoiseSchedule, linear_schedule
 from repro.diffusion.pipeline import slot_compact_denoise_fns, slot_want_fns
 from repro.obs.clock import monotonic
-from repro.obs.profiling import ProgramProfile, compile_program
+from repro.obs.profiling import ProgramIR, ProgramProfile, compile_program
 
 from .scheduler import DiffusionRequest, SlotScheduler
 from .telemetry import RequestRecord, ServingTelemetry
@@ -606,8 +606,12 @@ class DiffusionServingEngine:
                                  cfg_ws, ab_t, ab_n, y_c, y_u)
             return jax.jit(tick)
 
+        # program builders are kept either way: repro.analysis.ir re-traces
+        # programs through them to capture jaxprs AFTER warmup swapped the
+        # tick caches to bare Compiled executables (which carry no jaxpr)
+        self._make_compact_tick = make_compact_tick
+        self._make_tick = make_tick
         if self.row_compaction:
-            self._make_compact_tick = make_compact_tick
             self._compact_ticks = {}   # bucket size -> jit'd program (lazy)
             self._ticks = None
         else:
@@ -620,6 +624,9 @@ class DiffusionServingEngine:
         # tick instead of per-slot singleton embeds and two syncs
         self._want_all = jax.jit(
             slot_want_fns(params, cfg, self.policy, cfg_policy))
+        # the pre-compile jit wrapper, kept for IR re-capture (warmup swaps
+        # self._want_all for its Compiled executable)
+        self._want_src = self._want_all
 
         def refill(xs, states, slot, noise, fresh):
             return (xs.at[slot].set(noise),
@@ -660,6 +667,12 @@ class DiffusionServingEngine:
         #: per-program cost cards filled by warmup() — keyed by bucket size
         #: (row-compacted), tick kind (dense), plus "want" for the plan pass
         self.program_profile: Dict[object, ProgramProfile] = {}
+        #: captured jaxpr/StableHLO per program (same keys), filled by
+        #: warmup(verify=True) or lazily by _capture_program_ir()
+        self.program_ir: Dict[object, ProgramIR] = {}
+        #: repro.analysis.ir findings from the last warmup(verify=True);
+        #: None = never verified, [] = verified clean
+        self.ir_findings: Optional[List] = None
         self._warmed = False
 
     def _compact_tick(self, bucket: int):
@@ -670,7 +683,46 @@ class DiffusionServingEngine:
             fn = self._compact_ticks[bucket] = self._make_compact_tick(bucket)
         return fn
 
-    def warmup(self) -> Dict[object, ProgramProfile]:
+    def _warmup_operands(self):
+        """Dummy device operands shaped exactly like a live tick's: the
+        12-tuple every tick program takes, and the fused want pass's
+        6-tuple (shared prefixes, so warmup and IR capture trace the same
+        shapes a session dispatches)."""
+        S = self.slots
+        T, D = self.tokens, self.in_dim
+        xs = jnp.zeros((S, T, D), jnp.float32)
+        states = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (S,) + a.shape).copy(),
+            self._fresh)
+        zi = jnp.zeros((S,), jnp.int32)
+        zf = jnp.zeros((S,), jnp.float32)
+        nv = jnp.zeros((S, self.cfg.d_model), jnp.float32)
+        nm = jnp.zeros((S,), bool)
+        ab = jnp.full((S,), 0.5, jnp.float32)
+        tick_args = (states, zi, xs, zf, zi, zi, nv, nm, zf, zf, ab, ab)
+        want_args = (states, zi, xs, zf, zi, nm)
+        return tick_args, want_args
+
+    def _warmup_buckets(self) -> List[int]:
+        """Every bucket a tick can request, mirroring compact_rows exactly:
+        cond-only ticks pad n in 1..S capped at S, ticks with uncond rows
+        pad n in 1..2S capped at 2S."""
+        S = self.slots
+        return sorted(
+            {0}
+            | {min(1 << (n - 1).bit_length(), S) for n in range(1, S + 1)}
+            | {min(1 << (n - 1).bit_length(), 2 * S)
+               for n in range(1, 2 * S + 1)})
+
+    def _param_leaf_specs(self):
+        """(shape, dtype-name) multiset of the model param leaves — the
+        consts a tick program is DECLARED to close over; anything else
+        big is closure-capture bloat (repro.analysis.ir const check)."""
+        return tuple(
+            (tuple(getattr(l, "shape", ())), str(getattr(l, "dtype", "")))
+            for l in jax.tree_util.tree_leaves(self.params))
+
+    def warmup(self, verify: bool = False) -> Dict[object, ProgramProfile]:
         """Compile every tick program on dummy inputs before serving, and
         profile each one while at it.
 
@@ -688,58 +740,136 @@ class DiffusionServingEngine:
         plan pass — and the compiled executable is swapped into the tick
         cache so serving never re-pays the compile.  Returns the profile
         dict; `repro.obs.profiling.redundancy_ratio` combines it with
-        telemetry row counters into measured-FLOPs-saved."""
+        telemetry row counters into measured-FLOPs-saved.
+
+        `verify=True` additionally captures each program's jaxpr/StableHLO
+        during the same trace pipeline and runs the repro.analysis.ir
+        contract checks (host callbacks, f64/weak-type leaks, donation
+        aliasing, const bloat) over the whole program set: findings land
+        in `self.ir_findings` and on each returned profile's
+        `ir_findings`.  Warmup also pre-runs the small host-utility
+        programs a live session dispatches outside the tick programs
+        (admission noise, the jit'd refill, the harvest row gather), so
+        steady-state serving after warmup compiles NOTHING — the
+        ir-retrace sentinel enforces exactly that."""
         if self._warmed:
+            if verify and self.ir_findings is None:
+                self._run_ir_verification()
             return self.program_profile
-        S = self.slots
-        T, D = self.tokens, self.in_dim
-        xs = jnp.zeros((S, T, D), jnp.float32)
-        states = jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a[None], (S,) + a.shape).copy(),
-            self._fresh)
-        zi = jnp.zeros((S,), jnp.int32)
-        zf = jnp.zeros((S,), jnp.float32)
-        nv = jnp.zeros((S, self.cfg.d_model), jnp.float32)
-        nm = jnp.zeros((S,), bool)
-        ab = jnp.full((S,), 0.5, jnp.float32)
-        args = (states, zi, xs, zf, zi, zi, nv, nm, zf, zf, ab, ab)
+        args, want_args = self._warmup_operands()
+        specs = self._param_leaf_specs() if verify else ()
         # the fused want pass also compiles on first use; without this a
         # state-dependent policy pays that compile inside its first live tick
         if self._static_plan is None or self._static_cfg_plan is None:
-            self._want_all, prof = compile_program(
-                self._want_all, states, zi, xs, zf, zi, nm, key="want")
+            if verify:
+                self._want_all, prof, ir = compile_program(
+                    self._want_src, *want_args, key="want", want_ir=True,
+                    declared_const_specs=specs)
+                self.program_ir["want"] = ir
+            else:
+                self._want_all, prof = compile_program(
+                    self._want_all, *want_args, key="want")
             self.program_profile["want"] = prof
-        if not self.row_compaction:
+        if self.row_compaction:
+            S = self.slots
+            for bucket in self._warmup_buckets():
+                row_slot = jnp.zeros((bucket,), jnp.int32)
+                row_uncond = jnp.zeros((bucket,), bool)
+                row_dest = jnp.full((bucket,), 2 * S, jnp.int32)
+                fn = self._make_compact_tick(bucket)
+                if verify:
+                    compiled, prof, ir = compile_program(
+                        fn, *args, row_slot, row_uncond, row_dest,
+                        key=bucket, want_ir=True,
+                        declared_const_specs=specs)
+                    self.program_ir[bucket] = ir
+                else:
+                    compiled, prof = compile_program(
+                        fn, *args, row_slot, row_uncond, row_dest,
+                        key=bucket)
+                self._compact_ticks[bucket] = compiled
+                self.program_profile[bucket] = prof
+                # run once: validates the compiled avals against real-shaped
+                # operands now instead of inside the first live tick
+                compiled(*args, row_slot, row_uncond, row_dest)[0] \
+                    .block_until_ready()
+        else:
             for kind in ("full", "cond", "skip"):
-                self._ticks[kind], prof = compile_program(
-                    self._ticks[kind], *args, key=kind)
+                if verify:
+                    compiled, prof, ir = compile_program(
+                        self._ticks[kind], *args, key=kind, want_ir=True,
+                        declared_const_specs=specs)
+                    self.program_ir[kind] = ir
+                else:
+                    compiled, prof = compile_program(
+                        self._ticks[kind], *args, key=kind)
+                self._ticks[kind] = compiled
                 self.program_profile[kind] = prof
-                self._ticks[kind](*args)[0].block_until_ready()
-            self._warmed = True
-            return self.program_profile
-        # every bucket a tick can request, mirroring compact_rows exactly:
-        # cond-only ticks pad n in 1..S capped at S, ticks with uncond rows
-        # pad n in 1..2S capped at 2S
-        buckets = sorted(
-            {0}
-            | {min(1 << (n - 1).bit_length(), S) for n in range(1, S + 1)}
-            | {min(1 << (n - 1).bit_length(), 2 * S)
-               for n in range(1, 2 * S + 1)})
-        for bucket in buckets:
-            row_slot = jnp.zeros((bucket,), jnp.int32)
-            row_uncond = jnp.zeros((bucket,), bool)
-            row_dest = jnp.full((bucket,), 2 * S, jnp.int32)
-            fn = self._make_compact_tick(bucket)
-            compiled, prof = compile_program(
-                fn, *args, row_slot, row_uncond, row_dest, key=bucket)
-            self._compact_ticks[bucket] = compiled
-            self.program_profile[bucket] = prof
-            # run once: validates the compiled avals against real-shaped
-            # operands now instead of inside the first live tick
-            compiled(*args, row_slot, row_uncond, row_dest)[0] \
-                .block_until_ready()
+                compiled(*args)[0].block_until_ready()
+        # pre-warm the host-utility programs a live session dispatches
+        # outside the tick programs: admission noise (PRNGKey / fold_in /
+        # normal), the jit'd refill, and the harvest row gather+transfer.
+        # Without this the first admission/harvest pays their compiles
+        # mid-session — which the retrace sentinel rightly counts
+        xs, states = args[2], args[0]
+        key = jax.random.fold_in(jax.random.PRNGKey(0), 0)
+        noise = jax.random.normal(key, (self.tokens, self.in_dim))
+        warm_xs, _ = self._refill(xs, states, 0, noise, self._fresh)
+        np.asarray(warm_xs[0])
         self._warmed = True
+        if verify:
+            self._run_ir_verification()
         return self.program_profile
+
+    def _capture_program_ir(self) -> Dict[object, ProgramIR]:
+        """ProgramIR per warmup program key, capturing lazily when warmup
+        ran without verify: programs are re-traced through their stored
+        builders (fresh jit wrappers — the warmed caches hold bare
+        Compiled executables, which carry no jaxpr)."""
+        if not self._warmed:
+            self.warmup()
+        if self.program_ir:
+            return self.program_ir
+        from repro.obs.profiling import capture_ir
+        specs = self._param_leaf_specs()
+        args, want_args = self._warmup_operands()
+        if self._static_plan is None or self._static_cfg_plan is None:
+            self.program_ir["want"] = capture_ir(
+                self._want_src, *want_args, key="want",
+                declared_const_specs=specs)
+        if self.row_compaction:
+            S = self.slots
+            for bucket in self._warmup_buckets():
+                row_slot = jnp.zeros((bucket,), jnp.int32)
+                row_uncond = jnp.zeros((bucket,), bool)
+                row_dest = jnp.full((bucket,), 2 * S, jnp.int32)
+                self.program_ir[bucket] = capture_ir(
+                    self._make_compact_tick(bucket), *args, row_slot,
+                    row_uncond, row_dest, key=bucket,
+                    declared_const_specs=specs)
+        else:
+            for kind in ("full", "cond", "skip"):
+                self.program_ir[kind] = capture_ir(
+                    self._make_tick(kind), *args, key=kind,
+                    declared_const_specs=specs)
+        return self.program_ir
+
+    def _run_ir_verification(self) -> None:
+        """verify_programs over the captured IR set; findings land on
+        self.ir_findings and on the matching program profiles.  The
+        analysis layer is imported lazily — engines serving in production
+        never pay for it unless verify was requested."""
+        import dataclasses
+        from repro.analysis.ir import verify_programs_by_key
+        by_key = verify_programs_by_key(self)
+        self.ir_findings = [
+            f for _, fs in sorted(by_key.items(), key=lambda kv: str(kv[0]))
+            for f in fs]
+        for k, prof in list(self.program_profile.items()):
+            attached = tuple(by_key.get(k, ()))
+            if attached:
+                self.program_profile[k] = dataclasses.replace(
+                    prof, ir_findings=attached)
 
     def _probe_static_plan(self, policy: CachePolicy) -> Optional[np.ndarray]:
         try:

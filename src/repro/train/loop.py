@@ -13,8 +13,13 @@ from repro import checkpoint as ckpt_lib
 def train_loop(step_fn: Callable, state, batches: Iterator, num_steps: int, *,
                log_every: int = 10, ckpt_dir: Optional[str] = None,
                ckpt_every: int = 500, log_fn=print, jit: bool = True,
-               donate: bool = True):
+               donate: bool = True, verify_donation: bool = False):
     """Run `num_steps` of `step_fn(state, batch) -> (state, metrics)`.
+
+    `verify_donation=True` checks, on the first batch, that every leaf of
+    the donated state actually aliases an output in the lowered program
+    (repro.analysis.ir) — donate_argnums that fails to alias silently
+    no-ops and doubles peak memory.  Raises ValueError when it does.
 
     Returns (final state, list of metric dicts)."""
     if jit:
@@ -24,6 +29,14 @@ def train_loop(step_fn: Callable, state, batches: Iterator, num_steps: int, *,
     for i, batch in enumerate(batches):
         if i >= num_steps:
             break
+        if i == 0 and jit and donate and verify_donation:
+            from repro.analysis.ir import check_donation
+            issue = check_donation(
+                step_fn.lower(state, batch).as_text(),
+                len(jax.tree_util.tree_leaves(state)),
+                "train_loop step_fn donate_argnums=(0,)")
+            if issue is not None:
+                raise ValueError(issue.message)
         state, metrics = step_fn(state, batch)
         if (i + 1) % log_every == 0 or i == 0:
             metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
