@@ -1,0 +1,77 @@
+"""Text-to-image cache-aware serving demo.
+
+Builds the t2i workload (image DiT + AdaLN-zero-gated cross-attention
+over prompt embeddings) at smoke scale, wraps its text encoder in a
+PromptCache, and serves a prompted CFG queue where a few popular prompts
+repeat — the shape of real T2I traffic.  The demo prints what the
+conditioning stack pays at each frequency:
+
+  * text encoder: once per UNIQUE prompt (PromptCache content-hash LRU),
+  * cross-attn K/V projection: once per admission (per-slot text tables),
+  * per tick/step: nothing — text K/V are operands of the tick programs.
+
+    PYTHONPATH=src python examples/text_to_image_serving.py
+"""
+import numpy as np
+
+from repro.core import FasterCacheCFG, make_policy
+from repro.modalities import make_workload
+from repro.serving.diffusion import DiffusionRequest
+
+NUM_STEPS = 12
+SLOTS = 2
+
+PROMPTS = [
+    "a photo of a red fox in the snow",
+    "a watercolor painting of a lighthouse",
+    "a photo of a red fox in the snow",       # repeat: cache hit
+    "an isometric render of a tiny city",
+    "a watercolor painting of a lighthouse",  # repeat: cache hit
+    "a photo of a red fox in the snow",       # repeat: cache hit
+]
+
+
+def main():
+    wl = make_workload("t2i", smoke=True)
+    print(f"t2i latent {wl.latent_shape()}  backbone={wl.cfg.name}  "
+          f"text_len={wl.cfg.dit_text_len}")
+
+    conditioner = wl.conditioner()            # PromptCache + text encoder
+    engine = wl.engine(make_policy("teacache", delta=0.1), slots=SLOTS,
+                       max_steps=NUM_STEPS,
+                       cfg_policy=FasterCacheCFG(4, NUM_STEPS),
+                       conditioner=conditioner)
+    profiles = engine.warmup()   # buckets + want + text_kv + text_encoder
+    text_programs = sorted(k for k in profiles
+                           if isinstance(k, str) and k.startswith("text"))
+    print(f"warmup compiled {len(profiles)} programs "
+          f"(text-side: {text_programs})")
+
+    # a prompted guided queue; one request adds a negative prompt, which
+    # rides the uncond branch's null-vec + text tables under CFG
+    reqs = [DiffusionRequest(
+        i, num_steps=NUM_STEPS, seed=i, cfg_scale=3.0,
+        prompt_tokens=p,
+        neg_prompt_tokens="blurry, low quality" if i == 0 else None)
+        for i, p in enumerate(PROMPTS)]
+    results = engine.serve(reqs)
+    assert all(np.isfinite(r.x0).all() for r in results)
+
+    s = engine.telemetry.summary()
+    print(f"\nserved {s['requests']} prompted requests in "
+          f"{s['elapsed_s']:.2f}s ({s['throughput_rps']:.2f} req/s)")
+    print(f"backbone rows computed {s['backbone_rows_computed']} "
+          f"(saved {s['backbone_rows_saved']})")
+
+    st = conditioner.stats
+    print(f"\nprompt cache: {st['misses']} encoder runs for "
+          f"{len(reqs) + 1} prompt resolutions "
+          f"({st['hits']} hits, hit rate {st['hit_rate']:.2f})")
+    # the same prompt, re-submitted, is a host-side dict hit — the
+    # embedding (and the per-slot K/V built from it) never recompute
+    pe = conditioner.get(PROMPTS[0])
+    assert conditioner.get(PROMPTS[0]) is pe
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,13 @@
 """The golden mixed-modality session: the lint-time serving fixture the
 ir-* rules (and the sentinel tests) share.
 
-One cached context per process builds a tiny image + video engine pair
-(signal policies + a CFG branch, so the fused want pass, the uncond rows
-and every bucket program all exist), warms them with IR capture, runs
-`verify_programs` over both, then serves a mixed guided/unguided queue
-through a MixedModalityEngine under a RetraceSentinel — steady-state
-serving after warmup must compile NOTHING.
+One cached context per process builds tiny image + video + prompted-t2i
+engines (signal policies + a CFG branch + a PromptCache conditioner, so
+the fused want pass, the uncond rows, every bucket program and the text
+programs all exist), warms them with IR capture, runs `verify_programs`
+over each, then serves a mixed guided/unguided/prompted queue through a
+MixedModalityEngine under a RetraceSentinel — steady-state serving after
+warmup must compile NOTHING, in-session prompt-cache misses included.
 
 Tiny is load-bearing: the context compiles ~a dozen programs, so the
 configs are reduced to 1 layer / 32 dims and the checks run in seconds
@@ -35,34 +36,52 @@ class GoldenContext:
 
 
 def build_golden_engines() -> Dict[str, object]:
-    """Tiny image + video engines with state-dependent policies and a CFG
-    branch — the program-surface-maximizing configuration: want pass +
-    every bucket + uncond rows all compile at warmup."""
+    """Tiny image + video + t2i engines with state-dependent policies and
+    a CFG branch — the program-surface-maximizing configuration: want pass
+    + every bucket + uncond rows + the text programs (prompt encoder,
+    admission-time text_kv) all compile at warmup."""
     from repro.core import FasterCacheCFG
     from repro.modalities import get_modality, make_workload
 
     engines = {}
     for modality, policy in (("image", "teacache"),
-                             ("video", "teacache_video")):
-        cfg = get_modality(modality).config(smoke=True).reduced(
-            num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64)
+                             ("video", "teacache_video"),
+                             ("t2i", "teacache")):
+        spec = get_modality(modality)
+        extra = {"dit_text_len": 4} if spec.text else {}
+        cfg = spec.config(smoke=True).reduced(
+            num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+            **extra)
         wl = make_workload(modality, cfg=cfg)
+        kw = {"conditioner": wl.conditioner(seed=0)} if spec.text else {}
         engines[modality] = wl.engine(
-            policy, slots=2, max_steps=6, cfg_policy=FasterCacheCFG(2, 6))
+            policy, slots=2, max_steps=6, cfg_policy=FasterCacheCFG(2, 6),
+            **kw)
     return engines
 
 
 def golden_requests(num_steps: int = 6):
-    """A mixed queue: guided + unguided, image + video, enough requests
-    that slots refill mid-flight (the refill path must also be warm)."""
+    """A mixed queue: guided + unguided, image + video + prompted t2i,
+    enough requests that slots refill mid-flight (the refill path must
+    also be warm).  The t2i prompts include a fresh-at-admission prompt
+    and a CFG negative prompt, so the sentinel proves the whole text path
+    — encoder miss, K/V table rebuild — compiles nothing post-warmup."""
     from repro.serving.diffusion import DiffusionRequest
     reqs = []
     rid = 0
-    for modality, n in (("image", 3), ("video", 2)):
+    for modality, n in (("image", 3), ("video", 2), ("t2i", 3)):
         for i in range(n):
+            kw = {}
+            if modality == "t2i":
+                # distinct within the 4-token golden truncation, so the
+                # session exercises real misses AND a repeat-prompt hit
+                kw["prompt_tokens"] = ("cat", "dog")[i % 2]
+                if i % 2 == 0:
+                    kw["neg_prompt_tokens"] = "bad"
             reqs.append(DiffusionRequest(
                 rid, num_steps=num_steps, seed=rid, class_label=i % 3,
-                cfg_scale=2.0 if i % 2 == 0 else 0.0, modality=modality))
+                cfg_scale=2.0 if i % 2 == 0 else 0.0, modality=modality,
+                **kw))
             rid += 1
     return reqs
 

@@ -31,7 +31,8 @@ class ClockRule(Rule):
                  "injected clock callable so simulated traces, tests and "
                  "benchmarks stay deterministic; a raw time.time() "
                  "desynchronizes them from the virtual timeline")
-    trees = ("src/repro/serving/", "src/repro/modalities/")
+    trees = ("src/repro/serving/", "src/repro/modalities/",
+             "src/repro/conditioning/")
 
     def check_module(self, module: ModuleSource) -> List[Finding]:
         findings: List[Finding] = []

@@ -56,7 +56,7 @@ class HostSyncRule(Rule):
                  "tick, so any other sync silently serializes the pipeline "
                  "and caps req/s")
     trees = ("src/repro/serving/", "src/repro/modalities/",
-             "src/repro/core/")
+             "src/repro/core/", "src/repro/conditioning/")
 
     def check_module(self, module: ModuleSource) -> List[Finding]:
         findings: List[Finding] = []

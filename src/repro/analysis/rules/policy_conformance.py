@@ -11,6 +11,10 @@ The serving engine trusts three things about every policy it hosts:
     requests (no state bleed across the requests that share a slot).
   * `static_schedule`, when offered, is coherent: length == num_steps and
     step 0 computes (the engine's zero-sync static plan trusts it blindly).
+  * pab-family `RANGES` tables name module TYPES that some registered DiT
+    backbone actually exposes (`block_branches`): a range keyed on a
+    module type no backbone has is a silent no-op — the policy claims to
+    broadcast a branch that never exists.
 
 This rule is not an AST pass: it imports `repro.core` and drives each
 registry entry with small dummy inputs, so a policy merged without the
@@ -85,6 +89,23 @@ class PolicyConformanceRule(ProjectRule):
                                     f"policy '{name}': {msg}",
                                     snippet=snippet))
 
+        # module types some registered DiT backbone exposes — the legal
+        # key universe for pab-family RANGES tables
+        exposed = None
+        try:
+            from repro.configs import ALL_ARCH_IDS, get_config
+            from repro.diffusion.pipeline import backbone_module
+            exposed = set()
+            for arch in ALL_ARCH_IDS:
+                cfg = get_config(arch)
+                if cfg.is_dit:
+                    exposed |= set(backbone_module(cfg).block_branches(cfg))
+        except Exception as e:
+            findings.append(Finding(
+                self.id, self.REL_PATH, 1, 0,
+                f"cannot enumerate backbone module types for the RANGES "
+                f"conformance check: {e!r}"))
+
         x = jnp.ones((2, 4), jnp.float32)
         for name in sorted(POLICY_REGISTRY):
             try:
@@ -97,6 +118,15 @@ class PolicyConformanceRule(ProjectRule):
                 fail(name, f"make_policy returned {type(policy).__name__}, "
                            f"not a CachePolicy")
                 continue
+            ranges = getattr(type(policy), "RANGES", None)
+            if ranges and exposed is not None:
+                unknown = sorted(set(ranges) - exposed)
+                if unknown:
+                    fail(name, f"RANGES names module types {unknown} that "
+                               f"no registered DiT backbone exposes "
+                               f"(block_branches union: {sorted(exposed)}) "
+                               f"— those broadcast ranges can never serve "
+                               f"a real branch")
             try:
                 s1 = policy.init_state(x.shape)
                 s2 = policy.init_state(x.shape)

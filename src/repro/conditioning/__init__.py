@@ -1,0 +1,30 @@
+"""repro.conditioning — text conditioning for T2I/T2V serving.
+
+The survey's headline scenario is text-to-image/video generation; this
+package supplies the text side and its caches, exploiting the one
+invariance every other cache in the repo has to *estimate* but text gets
+for free: prompts do not change across denoise steps.
+
+  encoder — ClipCap-style prefix text encoder: byte-level tokens -> a
+            (L_text, d_model) prompt-embedding table, padded to exactly
+            cfg.dit_text_len so serving keeps its fixed-shape discipline
+  cache   — PromptCache: content-hashed LRU over prompt embeddings; the
+            encoder runs once per UNIQUE prompt (obs metrics:
+            repro_conditioning_prompt_cache_*)
+
+Downstream, the serving engine holds per-slot cross-attn K/V tables next
+to null_vecs: K/V projections are computed once at admission
+(models.dit.text_kv over all layers at once) and reused by every tick —
+zero text FLOPs inside the denoise loop.  CFG negative prompts reuse the
+null-vec path with the pooled embedding, plus their own K/V tables for
+the uncond rows.
+"""
+from .cache import PromptCache, PromptEmbedding
+from .encoder import (TextEncoderConfig, encode_tokens, init_text_encoder,
+                      pooled_embedding, text_encoder_config, tokenize)
+
+__all__ = [
+    "PromptCache", "PromptEmbedding",
+    "TextEncoderConfig", "encode_tokens", "init_text_encoder",
+    "pooled_embedding", "text_encoder_config", "tokenize",
+]

@@ -1,0 +1,155 @@
+"""ClipCap-style prefix text encoder: tokens -> (L_text, d_model) prompt
+embeddings the DiT cross-attention branches attend over.
+
+The survey's central serving scenario is text-to-image/video; this module
+is the text side of it.  Deliberately small — a byte-level tokenizer, a
+few bidirectional pre-LN transformer blocks, and a projection into the
+backbone's d_model — because the caching claims it supports do not depend
+on encoder quality: prompt embeddings are DETERMINISTIC per prompt and
+step-invariant across the whole denoise trajectory, which makes them the
+cheapest cache in the system (repro.conditioning.cache.PromptCache pays
+the encoder once per unique prompt, the engine pays the cross-attn K/V
+projection once per admission).
+
+Every prompt is padded to exactly `max_len` (= cfg.dit_text_len) tokens:
+the serving engine's bucket programs keep their padded-shape discipline
+and the retrace sentinel stays at zero.  Padding positions are masked out
+of the encoder's self-attention (negative k_positions are always masked
+by blocked_attention) and the output rows at padding positions are zeroed
+— the invariant the cross-attention no-op branch relies on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.encdec import sinusoidal_positions
+from repro.models.layers import (blocked_attention, dense_init, embed_init,
+                                 init_mlp, layer_norm, mlp_forward)
+
+__all__ = ["TextEncoderConfig", "text_encoder_config", "init_text_encoder",
+           "tokenize", "encode_tokens", "pooled_embedding"]
+
+TokensLike = Union[str, Sequence[int]]
+
+
+@dataclass(frozen=True)
+class TextEncoderConfig:
+    """Shape contract between encoder, PromptCache, and serving engine."""
+    d_model: int                 # output width == backbone d_model
+    max_len: int                 # padded prompt length == cfg.dit_text_len
+    vocab: int = 256             # byte-level tokens
+    num_layers: int = 2
+    num_heads: int = 4
+    d_ff: int = 0                # 0 -> 4 * d_model
+
+    def __post_init__(self):
+        if self.max_len < 1:
+            raise ValueError("text encoder needs max_len >= 1 "
+                             "(cfg.dit_text_len > 0)")
+        if self.d_ff == 0:
+            object.__setattr__(self, "d_ff", 4 * self.d_model)
+        if self.d_model % self.num_heads:
+            raise ValueError(f"d_model {self.d_model} not divisible by "
+                             f"num_heads {self.num_heads}")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def text_encoder_config(cfg, **overrides) -> TextEncoderConfig:
+    """Derive the encoder shape contract from a text-enabled ArchConfig."""
+    kw = dict(d_model=cfg.d_model, max_len=cfg.dit_text_len)
+    kw.update(overrides)
+    return TextEncoderConfig(**kw)
+
+
+def _init_block(key, tc, dtype):
+    d, H, hd = tc.d_model, tc.num_heads, tc.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": {"wq": dense_init(ks[0], d, H * hd, dtype),
+                 "wk": dense_init(ks[1], d, H * hd, dtype),
+                 "wv": dense_init(ks[2], d, H * hd, dtype),
+                 "wo": dense_init(ks[3], H * hd, d, dtype)},
+        "mlp": init_mlp(ks[3], d, tc.d_ff, dtype, gated=False),
+    }
+
+
+def init_text_encoder(key, tc: TextEncoderConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    bkeys = jax.random.split(ks[0], tc.num_layers)
+    return {
+        "tok_embed": embed_init(ks[1], tc.vocab, tc.d_model, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, tc, dtype))(bkeys),
+        "proj": dense_init(ks[2], tc.d_model, tc.d_model, dtype),
+    }
+
+
+def tokenize(prompt: TokensLike, tc: TextEncoderConfig):
+    """prompt (str or explicit int token sequence) -> (ids, mask):
+    ids (max_len,) int32, mask (max_len,) bool.
+
+    Strings tokenize byte-level (UTF-8) and truncate silently at max_len;
+    an EXPLICIT overlong token sequence is a caller error and raises."""
+    if isinstance(prompt, str):
+        ids = list(prompt.encode("utf-8"))[:tc.max_len]
+    else:
+        ids = [int(t) for t in prompt]
+        if len(ids) > tc.max_len:
+            raise ValueError(f"prompt token sequence of length {len(ids)} "
+                             f"exceeds max_len {tc.max_len}")
+        bad = [t for t in ids if not 0 <= t < tc.vocab]
+        if bad:
+            raise ValueError(f"prompt tokens out of vocab range "
+                             f"[0, {tc.vocab}): {bad[:4]}")
+    n = len(ids)
+    out = np.zeros((tc.max_len,), np.int32)
+    out[:n] = ids
+    mask = np.zeros((tc.max_len,), bool)
+    mask[:n] = True
+    return out, mask
+
+
+def encode_tokens(params, ids, mask, tc: TextEncoderConfig):
+    """(B, L) int32 ids + (B, L) bool mask -> (B, L, d_model) f32 prompt
+    embeddings, zeroed at padding positions."""
+    L = tc.max_len
+    x = params["tok_embed"][ids]
+    x = x + sinusoidal_positions(jnp.arange(L)[None], tc.d_model).astype(
+        x.dtype)
+    qpos = jnp.broadcast_to(jnp.arange(L)[None], ids.shape)
+    kpos = jnp.where(mask, qpos, -1)          # negative -> always masked
+    d = tc.d_model
+    ones, zeros = jnp.ones((d,), x.dtype), jnp.zeros((d,), x.dtype)
+    H, hd = tc.num_heads, tc.head_dim
+
+    def body(x, p):
+        B, T, _ = x.shape
+        h = layer_norm(x, ones, zeros)
+        q = (h @ p["attn"]["wq"]).reshape(B, T, H, hd)
+        k = (h @ p["attn"]["wk"]).reshape(B, T, H, hd)
+        v = (h @ p["attn"]["wv"]).reshape(B, T, H, hd)
+        o = blocked_attention(q, k, v, causal=False,
+                              q_positions=qpos, k_positions=kpos)
+        x = x + o.reshape(B, T, H * hd) @ p["attn"]["wo"]
+        x = x + mlp_forward(p["mlp"], layer_norm(x, ones, zeros))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    out = layer_norm(x, ones, zeros) @ params["proj"]
+    return jnp.where(mask[..., None], out, 0.0)
+
+
+def pooled_embedding(embed, mask):
+    """Masked mean over the token axis: (..., L, d) -> (..., d).  Embeds
+    are already zeroed at padding, so a sum over L only needs the count.
+    This is the ClipCap-style pooled vector the CFG negative-prompt path
+    feeds through the engine's null-vec tables."""
+    n = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1)
+    return jnp.sum(embed, axis=-2) / n

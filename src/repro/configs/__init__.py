@@ -1,8 +1,9 @@
 """Config registry: `--arch <id>` resolution."""
 from .base import ArchConfig, InputShape, INPUT_SHAPES
-from . import (arctic_480b, deepseek_v2_236b, dit_audio, dit_video, dit_xl,
-               falcon_mamba_7b, minitron_8b, pixtral_12b, qwen2_7b,
-               qwen2p5_14b, tinyllama_1p1b, whisper_small, zamba2_2p7b)
+from . import (arctic_480b, deepseek_v2_236b, dit_audio, dit_t2i, dit_t2v,
+               dit_video, dit_xl, falcon_mamba_7b, minitron_8b, pixtral_12b,
+               qwen2_7b, qwen2p5_14b, tinyllama_1p1b, whisper_small,
+               zamba2_2p7b)
 
 _MODULES = {
     "zamba2-2.7b": zamba2_2p7b,
@@ -18,9 +19,11 @@ _MODULES = {
     "dit-xl": dit_xl,
     "dit-video": dit_video,
     "dit-audio": dit_audio,
+    "dit-t2i": dit_t2i,
+    "dit-t2v": dit_t2v,
 }
 
-_DIT_IDS = ("dit-xl", "dit-video", "dit-audio")
+_DIT_IDS = ("dit-xl", "dit-video", "dit-audio", "dit-t2i", "dit-t2v")
 ARCH_IDS = [k for k in _MODULES if k not in _DIT_IDS]  # the 10 assigned
 ALL_ARCH_IDS = list(_MODULES)
 

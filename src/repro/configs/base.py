@@ -73,6 +73,10 @@ class ArchConfig:
     # video DiT (factorized spatio-temporal attention): > 0 selects the
     # repro.models.video_dit backbone over (frames * patch) latent clips
     dit_num_frames: int = 0
+    # text conditioning (T2I/T2V): > 0 adds an AdaLN-zero-gated cross-attn
+    # branch to every block, attending over a prompt-embedding table padded
+    # to exactly this many tokens (repro.conditioning)
+    dit_text_len: int = 0
 
     # --- numerics ---
     dtype: str = "bfloat16"          # activation/param dtype on TPU
@@ -138,6 +142,7 @@ class ArchConfig:
             dit_in_dim=min(self.dit_in_dim, 16) if self.dit_in_dim else 0,
             dit_num_classes=min(self.dit_num_classes, 10),
             dit_num_frames=min(self.dit_num_frames, 4) if self.dit_num_frames else 0,
+            dit_text_len=min(self.dit_text_len, 8) if self.dit_text_len else 0,
             sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
             dtype="float32",
             name=self.name + "-smoke",

@@ -81,6 +81,14 @@ POLICY_REGISTRY = {
     # tuner's re-pricing.
     "blockcache": lambda profile=None, delta=0.1, **kw:
         BlockCachePolicy(_require_profile(profile), delta),
+    # PAB as a module-level policy: one instance per module TYPE, interval
+    # looked up from its broadcast-range table (cross attention broadcast
+    # over the longest range — text conditioning drifts slowest).  The
+    # whole-stack form lives in STRUCTURAL_POLICIES["pab_video"]; this
+    # entry serves engines/denoisers that gate one module type (and gives
+    # the registry sweep a PAB representative).
+    "pab": lambda module_type="spatial_attn", ranges=None, **kw:
+        PABPolicy(module_type, ranges),
     "clusca": lambda interval=4, k=16, **kw: ClusCaPolicy(interval, k),
     "speca": lambda interval=4, tau=0.1, **kw: SpeCaPolicy(interval, tau=tau),
     # temporal-aware TeaCache for video latent clips: the input-side signal

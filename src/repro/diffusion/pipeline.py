@@ -61,16 +61,21 @@ def backbone_module(cfg):
 def backbone_fns(params, cfg):
     """(forward_fn, signal_fn) bound to params for this config's modality.
 
-    forward_fn(xs, ts, labels, y_embed=None) -> eps — xs (B, T, D), ts (B,)
-    float timesteps, labels (B,) int32 class conditioning, y_embed (B, d)
-    optional conditioning-vector override (negative prompts).
-    signal_fn(xs, ts, labels) -> the TeaCache modulated input signal.
+    forward_fn(xs, ts, labels, y_embed=None, txt_kv=None, txt_mask=None)
+    -> eps — xs (B, T, D), ts (B,) float timesteps, labels (B,) int32 class
+    conditioning, y_embed (B, d) optional conditioning-vector override
+    (negative prompts), txt_kv/txt_mask the precomputed per-layer text K/V
+    tables + key mask (text-enabled configs; see models.dit.text_kv).
+    signal_fn(xs, ts, labels) -> the TeaCache modulated input signal
+    (computed BEFORE the first block, so it is text-independent by
+    construction — prompts never perturb the refresh decision).
     """
     mod = backbone_module(cfg)
 
-    def forward_fn(xs, ts, labels, y_embed=None):
+    def forward_fn(xs, ts, labels, y_embed=None, txt_kv=None, txt_mask=None):
         return mod.forward(params, xs, ts.astype(jnp.float32),
-                           labels.astype(jnp.int32), cfg, y_embed=y_embed)
+                           labels.astype(jnp.int32), cfg, y_embed=y_embed,
+                           txt_kv=txt_kv, txt_mask=txt_mask)
 
     def signal_fn(xs, ts, labels):
         h, c = mod.embed_patches(params, xs, ts.astype(jnp.float32),
@@ -87,13 +92,45 @@ def _null_embed_rows(params, nulls, null_vecs, null_mask):
     return jnp.where(null_mask[:, None], null_vecs.astype(ce.dtype), ce)
 
 
+def _as_text(text, cfg):
+    """Normalize prompt conditioning to (te (L, d) f32, tm (L,) bool).
+
+    `text` is a repro.conditioning PromptEmbedding, an (embed, mask) pair,
+    or None.  Embeddings are zeroed at masked positions — the invariant the
+    cross-attention no-op branch relies on (models.dit.cross_attn_branch).
+    """
+    if text is None:
+        return None
+    if cfg.dit_text_len <= 0:
+        raise ValueError(f"config '{cfg.name}' is not text-enabled "
+                         f"(dit_text_len == 0) but a prompt was given")
+    te, tm = (text.embed, text.mask) if hasattr(text, "embed") else text
+    te = jnp.asarray(te, jnp.float32)
+    tm = jnp.asarray(tm, bool)
+    if te.ndim == 3:                      # batched (1, L, d) -> (L, d)
+        te, tm = te[0], tm[0]
+    if te.shape != (cfg.dit_text_len, cfg.d_model):
+        raise ValueError(f"prompt embedding shape {te.shape} != "
+                         f"({cfg.dit_text_len}, {cfg.d_model})")
+    return jnp.where(tm[:, None], te, 0.0), tm
+
+
+def _text_pooled(text):
+    """The pooled (d_model,) view of a normalized (te, tm) pair — the
+    vector the CFG negative-prompt (null-vec) path conditions on."""
+    te, tm = text
+    n = jnp.maximum(jnp.sum(tm), 1)
+    return jnp.sum(te, axis=0) / n
+
+
 class CachedDenoiser:
     """eps_hat = denoiser(state, i, x, t); state threads the cache pytrees."""
 
     def __init__(self, params, cfg, policy: Optional[CachePolicy] = None,
                  granularity: str = "model", shallow_n: int = 4,
                  cfg_scale: float = 0.0, cfg_policy: Optional[CachePolicy] = None,
-                 class_label: int = 0, null_embed=None):
+                 class_label: int = 0, null_embed=None, text=None,
+                 neg_text=None):
         assert granularity in ("model", "block", "deepcache", "pab_video")
         self.params = params
         self.cfg = cfg
@@ -103,8 +140,21 @@ class CachedDenoiser:
         self.cfg_scale = float(cfg_scale)
         self.cfg_policy = cfg_policy
         self.class_label = class_label
+        # prompt conditioning (PromptEmbedding or (embed, mask); text-enabled
+        # configs only): cross-attn K/V projected ONCE here — text is
+        # step-invariant, so no denoise step ever recomputes it
+        self._text = _as_text(text, cfg)
+        self._neg = _as_text(neg_text, cfg)
+        self._text_kv = (None if self._text is None else
+                         dit.text_kv(params, self._text[0][None], cfg))
+        self._neg_kv = (None if self._neg is None else
+                        dit.text_kv(params, self._neg[0][None], cfg))
         # negative-prompt conditioning: an arbitrary (d_model,) vector for the
-        # unconditional branch (None = the model's null-class embedding)
+        # unconditional branch (None = the model's null-class embedding); a
+        # neg_text prompt defaults it to the pooled prompt embedding — the
+        # same convention the serving engine's null-vec tables use
+        if null_embed is None and self._neg is not None:
+            null_embed = _text_pooled(self._neg)
         self.null_embed = (None if null_embed is None
                            else jnp.asarray(null_embed, jnp.float32))
         self._mod = backbone_module(cfg)
@@ -118,10 +168,42 @@ class CachedDenoiser:
             self._stack = TemporalPABStack(video_dit.pab_branch_fns(cfg),
                                            cfg.num_layers)
 
+    # -- text helpers ---------------------------------------------------
+    def _text_rows(self, which, B):
+        """(te, tm) broadcast to batch B; zero/empty rows when no prompt
+        (text-enabled configs run the exact no-op branch then)."""
+        if which is not None:
+            te, tm = which
+        else:
+            te = jnp.zeros((self.cfg.dit_text_len, self.cfg.d_model),
+                           jnp.float32)
+            tm = jnp.zeros((self.cfg.dit_text_len,), bool)
+        return (jnp.broadcast_to(te[None], (B,) + te.shape),
+                jnp.broadcast_to(tm[None], (B,) + tm.shape))
+
+    def _txt_kwargs(self, kv, which, B):
+        """forward() kwargs for the precomputed-K/V path (model/deepcache
+        granularity and the uncond branch — full-forward call sites)."""
+        if kv is None:
+            return {}
+        tk, tv = kv
+        _, tm = self._text_rows(which, B)
+        return {"txt_kv": (jnp.broadcast_to(tk, (B,) + tk.shape[1:]),
+                           jnp.broadcast_to(tv, (B,) + tv.shape[1:])),
+                "txt_mask": tm}
+
     def _block(self, p, x, c):
+        """One block under the cond-branch text conditioning.  Cache-stack
+        scans broadcast their args across layers, so per-layer K/V is
+        projected inline from the (step-invariant) prompt embeddings."""
+        txt = None
+        if self.cfg.dit_text_len > 0:
+            te, tm = self._text_rows(self._text, x.shape[0])
+            tk, tv = dit.cross_attn_kv(p["cross"], te.astype(x.dtype))
+            txt = (tk, tv, tm)
         if self._mod is video_dit:
-            return video_dit.video_block(p, x, c, self.cfg)
-        return dit.dit_block(p, x, c, self.cfg)
+            return video_dit.video_block(p, x, c, self.cfg, txt=txt)
+        return dit.dit_block(p, x, c, self.cfg, txt=txt)
 
     # ------------------------------------------------------------------
     def init_state(self, batch: int) -> PyTree:
@@ -151,7 +233,10 @@ class CachedDenoiser:
 
         if self.granularity == "model":
             def compute_fn(lat):
-                return mod.forward(params, lat, t_vec, y, cfgm)
+                return mod.forward(params, lat, t_vec, y, cfgm,
+                                   **self._txt_kwargs(self._text_kv,
+                                                      self._text,
+                                                      lat.shape[0]))
 
             # TeaCache's signal: timestep-modulated first-block input
             h, c = mod.embed_patches(params, x_lat, t_vec, y, cfgm)
@@ -161,7 +246,14 @@ class CachedDenoiser:
 
         h, c = mod.embed_patches(params, x_lat, t_vec, y, cfgm)
         if self.granularity in ("block", "pab_video"):
-            h, new_state = self._stack(state, step, h, params["blocks"], c)
+            if self.granularity == "pab_video" and cfgm.dit_text_len > 0:
+                # text-enabled PAB branch fns take (c, te, tm) broadcast args
+                te, tm = self._text_rows(self._text, h.shape[0])
+                h, new_state = self._stack(state, step, h, params["blocks"],
+                                           c, te, tm)
+            else:
+                h, new_state = self._stack(state, step, h, params["blocks"],
+                                           c)
             return mod.final_layer(params, h, c, cfgm), new_state
 
         # deepcache split
@@ -197,8 +289,13 @@ class CachedDenoiser:
             mod = self._mod
 
             def plain_uncond(lat):
+                # uncond rows attend over the NEGATIVE prompt's K/V (zero
+                # tables when none — the classic empty-prompt uncond branch)
                 return mod.forward(self.params, lat, t_vec, y_null, self.cfg,
-                                   y_embed=y_embed)
+                                   y_embed=y_embed,
+                                   **self._txt_kwargs(self._neg_kv,
+                                                      self._neg,
+                                                      lat.shape[0]))
 
             if self.cfg_policy is not None:
                 # unconditional branch gated by the CFG policy; its compute_fn
@@ -247,8 +344,15 @@ def slot_denoise_fns(params, cfg, policy: CachePolicy):
     """
     forward_fn, signal_fn = backbone_fns(params, cfg)
 
-    def backbone_fn(xs, ts, labels):
-        return forward_fn(xs, ts, labels)
+    def backbone_fn(xs, ts, labels, txt=None):
+        """txt: the engine's per-slot text-table dict ({} / None = no text;
+        an EMPTY dict contributes zero jit operand leaves, so text-free
+        engines keep the exact pre-text program signature).  Cond rows
+        attend over k/v/mask — K/V were projected once at admission."""
+        if not txt:
+            return forward_fn(xs, ts, labels)
+        return forward_fn(xs, ts, labels, txt_kv=(txt["k"], txt["v"]),
+                          txt_mask=txt["mask"])
 
     def _ctx(x, t, label):
         xb = x[None]
@@ -316,15 +420,24 @@ def slot_cfg_denoise_fns(params, cfg, policy: CachePolicy,
     forward_fn, _ = backbone_fns(params, cfg)
     backbone_fn, base_apply, base_want = slot_denoise_fns(params, cfg, policy)
 
-    def backbone2_fn(xs, ts, labels, null_labels, null_vecs, null_mask):
+    def backbone2_fn(xs, ts, labels, null_labels, null_vecs, null_mask,
+                     txt=None):
         S = xs.shape[0]
         x2 = jnp.concatenate([xs, xs], axis=0)
         t2 = jnp.concatenate([ts, ts], axis=0).astype(jnp.float32)
         y2 = jnp.concatenate([labels, null_labels], axis=0).astype(jnp.int32)
         ce_c = params["class_embed"][labels.astype(jnp.int32)]
         ce_u = _null_embed_rows(params, null_labels, null_vecs, null_mask)
+        kw = {}
+        if txt:
+            # cond rows attend the prompt's K/V, uncond rows the NEGATIVE
+            # prompt's (nk/nv; all-masked when the request carries none)
+            kw = {"txt_kv": (jnp.concatenate([txt["k"], txt["nk"]], axis=0),
+                             jnp.concatenate([txt["v"], txt["nv"]], axis=0)),
+                  "txt_mask": jnp.concatenate([txt["mask"], txt["nmask"]],
+                                              axis=0)}
         eps = forward_fn(x2, t2, y2,
-                         y_embed=jnp.concatenate([ce_c, ce_u], axis=0))
+                         y_embed=jnp.concatenate([ce_c, ce_u], axis=0), **kw)
         return eps[:S], eps[S:]
 
     def apply_fn(state, step, x, t, label, scale, cfg_w, y_c, y_u):
@@ -388,7 +501,7 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
      want_uncond_fn) = slot_cfg_denoise_fns(params, cfg, policy, cfg_policy)
 
     def compact_backbone_fn(xs, tvals, labels, nulls, null_vecs, null_mask,
-                            row_slot, row_uncond, row_dest):
+                            txt, row_slot, row_uncond, row_dest):
         S, T, D = xs.shape
         xb = xs[row_slot]
         tb = tvals[row_slot].astype(jnp.float32)
@@ -398,7 +511,19 @@ def slot_compact_denoise_fns(params, cfg, policy: CachePolicy,
         ce = _null_embed_rows(params, yb, null_vecs[row_slot],
                               jnp.logical_and(row_uncond,
                                               null_mask[row_slot]))
-        eps = forward_fn(xb, tb, yb, y_embed=ce)
+        kw = {}
+        if txt:
+            # per-row text tables: cond rows gather the slot's prompt K/V,
+            # uncond rows its negative-prompt K/V
+            sel = row_uncond[:, None, None, None]
+            kw = {"txt_kv": (jnp.where(sel, txt["nk"][row_slot],
+                                       txt["k"][row_slot]),
+                             jnp.where(sel, txt["nv"][row_slot],
+                                       txt["v"][row_slot])),
+                  "txt_mask": jnp.where(row_uncond[:, None],
+                                        txt["nmask"][row_slot],
+                                        txt["mask"][row_slot])}
+        eps = forward_fn(xb, tb, yb, y_embed=ce, **kw)
         # scatter: padding rows all land in the 2S dump row and are dropped
         buf = jnp.zeros((2 * S + 1, T, D), eps.dtype).at[row_dest].set(eps)
         return buf[:S], buf[S:2 * S]
@@ -458,23 +583,42 @@ def slot_want_fns(params, cfg, policy: CachePolicy,
 
 
 def cfg_denoise_fn(params, cfg, cfg_scale: float, class_label: int = 0,
-                   null_embed=None):
+                   null_embed=None, text=None, neg_text=None):
     """Uncached CFG denoiser (the exact baseline): eps = e_u + s (e_c - e_u).
 
     `null_embed` (d_model,) replaces the null-class embedding with an
-    arbitrary negative-prompt conditioning vector."""
+    arbitrary negative-prompt conditioning vector.  `text` / `neg_text`
+    (PromptEmbedding or (embed, mask); text-enabled configs) condition the
+    cond / uncond branch through cross-attention; K/V are projected once at
+    construction, and a neg_text prompt defaults `null_embed` to its pooled
+    embedding — the same convention CachedDenoiser and the engine use."""
     forward_fn, _ = backbone_fns(params, cfg)
+    txt = _as_text(text, cfg)
+    neg = _as_text(neg_text, cfg)
+    txt_kv = None if txt is None else dit.text_kv(params, txt[0][None], cfg)
+    neg_kv = None if neg is None else dit.text_kv(params, neg[0][None], cfg)
+    if null_embed is None and neg is not None:
+        null_embed = _text_pooled(neg)
     ne = None if null_embed is None else jnp.asarray(null_embed, jnp.float32)
+
+    def _kw(kv, pair, B):
+        if kv is None:
+            return {}
+        tk, tv = kv
+        return {"txt_kv": (jnp.broadcast_to(tk, (B,) + tk.shape[1:]),
+                           jnp.broadcast_to(tv, (B,) + tv.shape[1:])),
+                "txt_mask": jnp.broadcast_to(pair[1][None],
+                                             (B,) + pair[1].shape)}
 
     def fn(state, step, x, t_vec):
         B = x.shape[0]
         y_c = jnp.full((B,), class_label, jnp.int32)
         y_u = jnp.full((B,), cfg.dit_num_classes, jnp.int32)
-        e_c = forward_fn(x, t_vec, y_c)
+        e_c = forward_fn(x, t_vec, y_c, **_kw(txt_kv, txt, B))
         if cfg_scale <= 0.0:
             return e_c, state
         ye = None if ne is None else jnp.broadcast_to(ne[None],
                                                       (B, cfg.d_model))
-        e_u = forward_fn(x, t_vec, y_u, y_embed=ye)
+        e_u = forward_fn(x, t_vec, y_u, y_embed=ye, **_kw(neg_kv, neg, B))
         return e_u + cfg_scale * (e_c - e_u), state
     return fn

@@ -44,6 +44,9 @@ class ModalitySpec:
     description: str
     #: does the latent carry a frame axis (factorized video backbone)?
     temporal: bool = False
+    #: is the backbone text-conditioned (per-block cross-attention over
+    #: prompt embeddings; requests may carry prompt_tokens)?
+    text: bool = False
 
     def config(self, smoke: bool = False):
         from repro.configs import get_smoke_config
@@ -58,6 +61,10 @@ class ModalitySpec:
             raise ValueError(
                 f"modality '{self.name}': temporal={self.temporal} but "
                 f"cfg.dit_num_frames={cfg.dit_num_frames}")
+        if self.text != (cfg.dit_text_len > 0):
+            raise ValueError(
+                f"modality '{self.name}': text={self.text} but "
+                f"cfg.dit_text_len={cfg.dit_text_len}")
 
 
 MODALITIES: Dict[str, ModalitySpec] = {
@@ -71,6 +78,14 @@ MODALITIES: Dict[str, ModalitySpec] = {
     "audio": ModalitySpec(
         "audio", "dit-audio",
         "mel-spectrogram latents (time-frames x mel bins), isotropic DiT"),
+    "t2i": ModalitySpec(
+        "t2i", "dit-t2i",
+        "text-to-image: latent patches + cross-attn over prompt embeddings",
+        text=True),
+    "t2v": ModalitySpec(
+        "t2v", "dit-t2v",
+        "text-to-video: factorized video DiT + cross-attn text conditioning",
+        temporal=True, text=True),
 }
 
 
@@ -140,11 +155,25 @@ class DenoiseWorkload:
         return CachedDenoiser(self.params, self.cfg, policy, **kw)
 
     def cfg_denoise_fn(self, cfg_scale: float, class_label: int = 0,
-                       null_embed=None):
+                       null_embed=None, text=None, neg_text=None):
         """The exact (uncached) guided baseline for this modality."""
         from repro.diffusion.pipeline import cfg_denoise_fn
         return cfg_denoise_fn(self.params, self.cfg, cfg_scale, class_label,
-                              null_embed)
+                              null_embed, text=text, neg_text=neg_text)
+
+    def conditioner(self, capacity: int = 128, seed: int = 0, metrics=None):
+        """A PromptCache over a freshly initialised text encoder matched
+        to this workload's config (text modalities only) — what the
+        engine resolves DiffusionRequest.prompt_tokens through."""
+        if not self.spec.text:
+            raise ValueError(f"modality '{self.spec.name}' is not "
+                             f"text-conditioned; no conditioner to build")
+        from repro.conditioning import (PromptCache, init_text_encoder,
+                                        text_encoder_config)
+        tc = text_encoder_config(self.cfg)
+        tparams = init_text_encoder(jax.random.PRNGKey(seed), tc)
+        return PromptCache(tparams, tc, capacity=capacity, metrics=metrics,
+                           name=self.spec.name)
 
     def engine(self, policy=None, **kw):
         """A single-modality DiffusionServingEngine over this backbone —

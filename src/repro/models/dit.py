@@ -25,7 +25,7 @@ def _init_dit_block(key, cfg, dtype):
     d = cfg.d_model
     ks = jax.random.split(key, 4)
     H, hd = cfg.num_heads, cfg.head_dim
-    return {
+    block = {
         "attn": {"wq": dense_init(ks[0], d, H * hd, dtype),
                  "wk": dense_init(ks[0], d, H * hd, dtype),
                  "wv": dense_init(ks[1], d, H * hd, dtype),
@@ -35,6 +35,16 @@ def _init_dit_block(key, cfg, dtype):
         "ada_w": jnp.zeros((d, 6 * d), dtype),
         "ada_b": jnp.zeros((6 * d,), dtype),
     }
+    if cfg.dit_text_len > 0:
+        # text cross-attention branch (T2I): its own AdaLN-zero triple so
+        # no-text configs keep a bit-identical param tree and forward pass
+        block["cross"] = {"wq": dense_init(ks[3], d, H * hd, dtype),
+                          "wk": dense_init(ks[3], d, H * hd, dtype),
+                          "wv": dense_init(ks[0], d, H * hd, dtype),
+                          "wo": dense_init(ks[1], H * hd, d, dtype)}
+        block["cross_ada_w"] = jnp.zeros((d, 3 * d), dtype)
+        block["cross_ada_b"] = jnp.zeros((3 * d,), dtype)
+    return block
 
 
 def init_dit(key, cfg, dtype=None):
@@ -72,8 +82,70 @@ def _modulate(x, shift, scale):
     return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
 
 
-def dit_block(p, x, c, cfg):
-    """One DiT block. x: (B,T,d); c: (B,d) conditioning."""
+# ----------------------------------------------------------------------
+# text cross-attention (repro.conditioning; survey's T2I/T2V scenario)
+# ----------------------------------------------------------------------
+
+def cross_attn_kv(p_cross, te):
+    """One layer's text K/V projections.  te: (B, L, d) prompt embeddings
+    -> (k, v) each (B, L, H*hd).  Text is step-invariant, so these are the
+    cacheable half of the cross-attention branch."""
+    return te @ p_cross["wk"], te @ p_cross["wv"]
+
+
+def text_kv(params, te, cfg):
+    """All layers' text K/V at once: (B, L, d) -> (k, v) each
+    (B, num_layers, L, H*hd).  Computed ONCE per prompt at admission and
+    reused across every denoise step (the per-slot K/V cache's payload)."""
+    del cfg
+    wk = params["blocks"]["cross"]["wk"]          # (nl, d, H*hd)
+    wv = params["blocks"]["cross"]["wv"]
+    return (jnp.einsum("bld,ndh->bnlh", te, wk),
+            jnp.einsum("bld,ndh->bnlh", te, wv))
+
+
+def cross_attn_branch(p, x, c, tk, tv, tm, cfg):
+    """Gated cross-attention residual: latent queries over text keys.
+
+    tk/tv: (B, L, H*hd) this layer's text K/V; tm: (B, L) bool key mask.
+    The branch has its own AdaLN-zero triple (cross_ada_w/b).  Invariant:
+    K/V tables are ZEROED at masked positions, so a fully-masked (prompt-
+    less) row returns exactly zero — uniform softmax times zero values —
+    and the no-text forward is reproduced bit-for-bit."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    mod = jax.nn.silu(c) @ p["cross_ada_w"] + p["cross_ada_b"]
+    s, sc, g = jnp.split(mod, 3, axis=-1)
+    h = _modulate(layer_norm(x, jnp.ones((d,), x.dtype),
+                             jnp.zeros((d,), x.dtype)), s, sc)
+    q = (h @ p["cross"]["wq"]).reshape(B, T, H, hd)
+    k = tk.reshape(B, -1, H, hd).astype(q.dtype)
+    v = tv.reshape(B, -1, H, hd).astype(q.dtype)
+    logits = jnp.einsum("bthd,blhd->bhtl", q, k) / math.sqrt(hd)
+    logits = jnp.where(tm[:, None, None, :], logits, -1e9)
+    o = jnp.einsum("bhtl,blhd->bthd", jax.nn.softmax(logits, axis=-1), v)
+    return g[:, None, :] * (o.reshape(B, T, H * hd) @ p["cross"]["wo"])
+
+
+def cross_attn_embed_branch(p, x, c, te, tm, cfg):
+    """cross_attn_branch with K/V projected inline from the prompt
+    embeddings — the form block-granularity cache stacks use (their scan
+    broadcasts `te` across layers, so per-layer K/V can't ride the args)."""
+    tk, tv = cross_attn_kv(p["cross"], te.astype(x.dtype))
+    return cross_attn_branch(p, x, c, tk, tv, tm, cfg)
+
+
+def block_branches(cfg):
+    """Module types this backbone's blocks expose as separately cacheable
+    branches (PAB's vocabulary; the registry-conformance lint checks
+    PABPolicy.RANGES against the union of these over all DiT configs)."""
+    return (("spatial_attn", "cross_attn", "mlp") if cfg.dit_text_len > 0
+            else ("spatial_attn", "mlp"))
+
+
+def dit_block(p, x, c, cfg, txt=None):
+    """One DiT block. x: (B,T,d); c: (B,d) conditioning; txt: optional
+    (tk, tv, tm) per-layer text K/V + mask (see cross_attn_branch)."""
     B, T, d = x.shape
     mod = jax.nn.silu(c) @ p["ada_w"] + p["ada_b"]
     s1, sc1, g1, s2, sc2, g2 = jnp.split(mod, 6, axis=-1)
@@ -86,6 +158,9 @@ def dit_block(p, x, c, cfg):
     v = (h @ p["attn"]["wv"]).reshape(B, T, H, hd)
     o = blocked_attention(q, k, v, causal=False)
     x = x + g1[:, None, :] * (o.reshape(B, T, H * hd) @ p["attn"]["wo"])
+    if txt is not None:
+        tk, tv, tm = txt
+        x = x + cross_attn_branch(p, x, c, tk, tv, tm, cfg)
     h = _modulate(layer_norm(x, ones, zeros), s2, sc2)
     x = x + g2[:, None, :] * mlp_forward(p["mlp"], h)
     return x
@@ -118,10 +193,54 @@ def final_layer(params, x, c, cfg):
     return h @ params["patch_out"]
 
 
-def forward(params, latents, t, y, cfg, *, y_embed=None, remat=False):
-    """latents: (B, T, in_dim); t: (B,); y: (B,) -> noise prediction."""
+def resolve_txt(params, cfg, batch, text_kv_fn, *, txt_kv=None, txt_mask=None,
+                txt_embed=None, dtype=jnp.float32):
+    """Normalize a text-conditioning operand set to (tk, tv, tm) with
+    tk/tv (B, nl, L, H*hd) and tm (B, L) bool — zero tables + all-False
+    mask when no text is supplied, so a text-enabled backbone stays an
+    exact no-op for promptless batches (see cross_attn_branch)."""
+    if txt_embed is not None and txt_kv is None:
+        mask = (jnp.ones((batch, cfg.dit_text_len), bool)
+                if txt_mask is None else txt_mask)
+        txt_kv = text_kv_fn(params, jnp.where(mask[..., None], txt_embed, 0.0),
+                            cfg)
+        txt_mask = mask
+    if txt_kv is None:
+        nl, L = cfg.num_layers, cfg.dit_text_len
+        width = cfg.num_heads * cfg.head_dim
+        zeros = jnp.zeros((batch, nl, L, width), dtype)
+        return zeros, zeros, jnp.zeros((batch, L), bool)
+    tk, tv = txt_kv
+    tm = (jnp.ones(tk.shape[:1] + tk.shape[2:3], bool)
+          if txt_mask is None else txt_mask)
+    return tk, tv, tm
+
+
+def forward(params, latents, t, y, cfg, *, y_embed=None, txt_kv=None,
+            txt_mask=None, txt_embed=None, remat=False):
+    """latents: (B, T, in_dim); t: (B,); y: (B,) -> noise prediction.
+
+    Text conditioning (cfg.dit_text_len > 0): pass either `txt_kv` (the
+    precomputed per-layer K/V pair from text_kv — the serving path) or
+    `txt_embed` (B, L, d) prompt embeddings projected inline, plus
+    `txt_mask` (B, L).  Omitting both runs the zero-table no-op branch."""
     x, c = embed_patches(params, latents, t, y, cfg, y_embed)
     ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    if cfg.dit_text_len > 0:
+        tk, tv, tm = resolve_txt(params, cfg, x.shape[0], text_kv,
+                                 txt_kv=txt_kv, txt_mask=txt_mask,
+                                 txt_embed=txt_embed, dtype=x.dtype)
+
+        @ckpt
+        def body(x, inp):
+            p, tk_l, tv_l = inp
+            return dit_block(p, x, c, cfg, txt=(tk_l, tv_l, tm)), None
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"],
+                                      jnp.moveaxis(tk, 1, 0),
+                                      jnp.moveaxis(tv, 1, 0)))
+        return final_layer(params, x, c, cfg)
 
     @ckpt
     def body(x, p):

@@ -24,12 +24,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .dit import _modulate, condition
+from .dit import (_modulate, condition, cross_attn_branch,
+                  cross_attn_embed_branch, resolve_txt, text_kv)
 from .encdec import sinusoidal_positions
 from .layers import blocked_attention, dense_init, init_mlp, layer_norm, \
     mlp_forward
 
 #: the three PAB module types of a factorized block, in execution order
+#: (text-enabled configs insert cross_attn after spatial_attn — see
+#: block_branches)
 BRANCHES = ("spatial_attn", "temporal_attn", "mlp")
 
 
@@ -43,9 +46,9 @@ def _init_attn(key, d, H, hd, dtype):
 
 def _init_video_block(key, cfg, dtype):
     d = cfg.d_model
-    ks = jax.random.split(key, 3)
+    ks = jax.random.split(key, 4)
     H, hd = cfg.num_heads, cfg.head_dim
-    return {
+    block = {
         "spatial": _init_attn(ks[0], d, H, hd, dtype),
         "temporal": _init_attn(ks[1], d, H, hd, dtype),
         "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype, gated=False),
@@ -53,6 +56,13 @@ def _init_video_block(key, cfg, dtype):
         "ada_w": jnp.zeros((d, 9 * d), dtype),
         "ada_b": jnp.zeros((9 * d,), dtype),
     }
+    if cfg.dit_text_len > 0:
+        # text cross-attention branch (T2V): own AdaLN-zero triple, same
+        # param layout as the image DiT's so text_kv works on both
+        block["cross"] = _init_attn(ks[3], d, H, hd, dtype)
+        block["cross_ada_w"] = jnp.zeros((d, 3 * d), dtype)
+        block["cross_ada_b"] = jnp.zeros((3 * d,), dtype)
+    return block
 
 
 def init_video_dit(key, cfg, dtype=None):
@@ -138,18 +148,47 @@ BRANCH_FNS = {"spatial_attn": spatial_branch, "temporal_attn": temporal_branch,
               "mlp": mlp_branch}
 
 
+def block_branches(cfg):
+    """Module types this backbone's blocks expose as separately cacheable
+    branches, in execution order (the PAB vocabulary; the registry-
+    conformance lint checks PABPolicy.RANGES against the union of these
+    over all DiT configs).  Cross-attention queries are per-frame patch
+    tokens attending over the shared text keys — per-query softmax makes
+    the frame-folded and flat-clip forms identical, so the branch runs on
+    the flat (B, F*P, d) layout."""
+    return (("spatial_attn", "cross_attn", "temporal_attn", "mlp")
+            if cfg.dit_text_len > 0 else BRANCHES)
+
+
 def pab_branch_fns(cfg):
     """The factorized branches bound to `cfg`, keyed by PAB module type —
     the single source for TemporalPABStack construction (pipeline's
-    pab_video granularity and DenoiseWorkload.pab_stack both use it)."""
+    pab_video granularity and DenoiseWorkload.pab_stack both use it).
+
+    Text-enabled configs add the cross_attn branch (broadcast over the
+    LONGEST range — text is step-invariant) and every branch takes the
+    broadcast stack args (c, te, tm): TemporalPABStack's scan broadcasts
+    args across layers, so the cross branch projects its K/V inline from
+    the prompt embeddings on refresh steps."""
+    if cfg.dit_text_len > 0:
+        fns = {name: (lambda p, x, c, te, tm, fn=fn: fn(p, x, c, cfg))
+               for name, fn in BRANCH_FNS.items()}
+        fns["cross_attn"] = (lambda p, x, c, te, tm:
+                             cross_attn_embed_branch(p, x, c, te, tm, cfg))
+        return {name: fns[name] for name in block_branches(cfg)}
     return {name: (lambda p, x, c, fn=fn: fn(p, x, c, cfg))
             for name, fn in BRANCH_FNS.items()}
 
 
-def video_block(p, x, c, cfg):
-    """One factorized block: the three gated residual branches in order."""
+def video_block(p, x, c, cfg, txt=None):
+    """One factorized block: the gated residual branches in order; txt
+    ((tk, tv, tm) per-layer text K/V + mask) inserts the cross-attention
+    branch after spatial attention."""
     for name in BRANCHES:
         x = x + BRANCH_FNS[name](p, x, c, cfg)
+        if name == "spatial_attn" and txt is not None:
+            tk, tv, tm = txt
+            x = x + cross_attn_branch(p, x, c, tk, tv, tm, cfg)
     return x
 
 
@@ -182,10 +221,28 @@ def final_layer(params, x, c, cfg):
     return _norm_mod(x, s, sc, cfg) @ params["patch_out"]
 
 
-def forward(params, latents, t, y, cfg, *, y_embed=None, remat=False):
-    """latents: (B, F*P, in_dim); t: (B,); y: (B,) -> noise prediction."""
+def forward(params, latents, t, y, cfg, *, y_embed=None, txt_kv=None,
+            txt_mask=None, txt_embed=None, remat=False):
+    """latents: (B, F*P, in_dim); t: (B,); y: (B,) -> noise prediction.
+    Text operands as in dit.forward (precomputed txt_kv or inline
+    txt_embed, both optional)."""
     x, c = embed_patches(params, latents, t, y, cfg, y_embed)
     ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    if cfg.dit_text_len > 0:
+        tk, tv, tm = resolve_txt(params, cfg, x.shape[0], text_kv,
+                                 txt_kv=txt_kv, txt_mask=txt_mask,
+                                 txt_embed=txt_embed, dtype=x.dtype)
+
+        @ckpt
+        def body(x, inp):
+            p, tk_l, tv_l = inp
+            return video_block(p, x, c, cfg, txt=(tk_l, tv_l, tm)), None
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"],
+                                      jnp.moveaxis(tk, 1, 0),
+                                      jnp.moveaxis(tv, 1, 0)))
+        return final_layer(params, x, c, cfg)
 
     @ckpt
     def body(x, p):

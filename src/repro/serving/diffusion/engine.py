@@ -74,6 +74,7 @@ from repro.core import (CachePolicy, SlotBatchedPolicy, cache_state_bytes,
                         make_policy)
 from repro.diffusion import NoiseSchedule, linear_schedule
 from repro.diffusion.pipeline import slot_compact_denoise_fns, slot_want_fns
+from repro.models import dit
 from repro.obs.clock import monotonic
 from repro.obs.profiling import ProgramIR, ProgramProfile, compile_program
 
@@ -248,6 +249,11 @@ class ServeSession:
         # only when admission changes it, not on every tick
         self._null_vecs = jnp.asarray(engine._null_vecs)
         self._null_mask = jnp.asarray(engine._null_mask)
+        # device-resident per-slot cross-attn text tables (K/V + masks for
+        # prompt and negative prompt), rebuilt only when admission changes
+        # a slot's prompt — text is step-invariant, so every tick reuses
+        # them verbatim ({} on text-free engines: zero operand leaves)
+        self._txt = engine._build_text_tables()
         self.results: Dict[int, DiffusionResult] = {}
         self.ticks = 0
         self._finished = False
@@ -256,16 +262,9 @@ class ServeSession:
     def _validate(engine: "DiffusionServingEngine",
                   r: DiffusionRequest) -> None:
         """Reject malformed requests before any work runs, not at admission
-        deep inside a tick."""
-        if r.num_steps > engine.max_steps:
-            raise ValueError(f"request {r.request_id}: num_steps="
-                             f"{r.num_steps} > max_steps={engine.max_steps}")
-        if r.null_label is not None and np.ndim(r.null_label) > 0:
-            shape = np.shape(r.null_label)
-            if shape != (engine.cfg.d_model,):
-                raise ValueError(
-                    f"request {r.request_id}: null_label vector shape "
-                    f"{shape} != (d_model={engine.cfg.d_model},)")
+        deep inside a tick — same contract as admission itself
+        (engine._check_request is the single source of truth)."""
+        engine._check_request(r)
 
     @property
     def done(self) -> bool:
@@ -331,6 +330,9 @@ class ServeSession:
         if admitted:
             self._null_vecs = jnp.asarray(eng._null_vecs)
             self._null_mask = jnp.asarray(eng._null_mask)
+            # one text_kv pass per admission wave (not per tick): project
+            # the newly installed prompt embeddings to per-slot K/V tables
+            self._txt = eng._build_text_tables()
 
         active = np.asarray(sched.active_mask())
         steps = np.asarray(sched.steps(), np.int32)
@@ -367,7 +369,7 @@ class ServeSession:
                       "skip": 0}[kind]
         args = (self.states, jnp.asarray(idx), self.xs, jnp.asarray(tvals),
                 jnp.asarray(eng._labels), jnp.asarray(eng._nulls),
-                self._null_vecs, self._null_mask,
+                self._null_vecs, self._null_mask, self._txt,
                 jnp.asarray(eng._scales), jnp.asarray(cfg_ws),
                 jnp.asarray(ab_t), jnp.asarray(ab_n))
         if eng.row_compaction:
@@ -506,11 +508,20 @@ class DiffusionServingEngine:
                  noise_schedule: Optional[NoiseSchedule] = None,
                  align: Optional[int] = None,
                  cfg_policy: Union[CachePolicy, str, None] = None,
-                 row_compaction: bool = True):
+                 row_compaction: bool = True,
+                 conditioner=None):
         self.params, self.cfg = params, cfg
         self.slots = slots
         self.max_steps = max_steps
         self.row_compaction = bool(row_compaction)
+        # text conditioning (T2I/T2V): a repro.conditioning.PromptCache that
+        # resolves DiffusionRequest.prompt_tokens at admission; requires a
+        # text-enabled config (per-block cross-attention branches)
+        self.text_enabled = cfg.dit_text_len > 0
+        if conditioner is not None and not self.text_enabled:
+            raise ValueError(f"conditioner given but config '{cfg.name}' is "
+                             f"not text-enabled (dit_text_len == 0)")
+        self.conditioner = conditioner
         self.sched = noise_schedule or linear_schedule(1000)
         # string-built policies get the engine's actual geometry: num_steps
         # for step-indexed curves (magcache), frames for the temporal
@@ -572,14 +583,18 @@ class DiffusionServingEngine:
 
         def make_tick(mode: str):
             """Dense whole-pool programs (row_compaction=False baseline):
-            the backbone runs OUTSIDE vmap over S or 2S rows."""
+            the backbone runs OUTSIDE vmap over S or 2S rows.  `txt` is the
+            per-slot text-table dict — an EMPTY dict on text-free engines,
+            which contributes zero jit operand leaves, so their program
+            signature is exactly the pre-text one."""
             def tick(states, steps, xs, tvals, labels, nulls, null_vecs,
-                     null_mask, scales, cfg_ws, ab_t, ab_n):
+                     null_mask, txt, scales, cfg_ws, ab_t, ab_n):
                 if mode == "full":
                     y_c, y_u = backbone2_fn(xs, tvals, labels, nulls,
-                                            null_vecs, null_mask)
+                                            null_vecs, null_mask, txt=txt)
                 elif mode == "cond":
-                    y_c, y_u = backbone_fn(xs, tvals, labels), jnp.zeros_like(xs)
+                    y_c = backbone_fn(xs, tvals, labels, txt=txt)
+                    y_u = jnp.zeros_like(xs)
                 else:
                     y_c = y_u = jnp.zeros_like(xs)
                 return slot_step(states, steps, xs, tvals, labels, scales,
@@ -593,13 +608,13 @@ class DiffusionServingEngine:
             they only reach branches the per-slot select discards).  All
             index operands are traced, so this compiles once per bucket."""
             def tick(states, steps, xs, tvals, labels, nulls, null_vecs,
-                     null_mask, scales, cfg_ws, ab_t, ab_n,
+                     null_mask, txt, scales, cfg_ws, ab_t, ab_n,
                      row_slot, row_uncond, row_dest):
                 if bucket == 0:
                     y_c = y_u = jnp.zeros_like(xs)
                 else:
                     y_c, y_u = compact_backbone_fn(xs, tvals, labels, nulls,
-                                                   null_vecs, null_mask,
+                                                   null_vecs, null_mask, txt,
                                                    row_slot, row_uncond,
                                                    row_dest)
                 return slot_step(states, steps, xs, tvals, labels, scales,
@@ -627,6 +642,24 @@ class DiffusionServingEngine:
         # the pre-compile jit wrapper, kept for IR re-capture (warmup swaps
         # self._want_all for its Compiled executable)
         self._want_src = self._want_all
+
+        def build_text_tables(te, tm, ne, nm):
+            """Per-slot cross-attn K/V over ALL layers at once, from the
+            admission-time prompt / negative-prompt embedding tables.  Runs
+            once per admission wave — text K/V is step-invariant, so no
+            tick program carries a single text-projection FLOP.  Embeddings
+            are re-zeroed under their masks (defense in depth: the zero-
+            K/V + all-masked no-op branch must hold bit-exactly)."""
+            te = jnp.where(tm[..., None], te, 0.0)
+            ne = jnp.where(nm[..., None], ne, 0.0)
+            tk, tv = dit.text_kv(params, te, cfg)
+            nk, nv = dit.text_kv(params, ne, cfg)
+            return {"k": tk, "v": tv, "mask": tm,
+                    "nk": nk, "nv": nv, "nmask": nm}
+
+        self._text_tables_src = build_text_tables
+        self._text_tables = (jax.jit(build_text_tables)
+                             if self.text_enabled else None)
 
         def refill(xs, states, slot, noise, fresh):
             return (xs.at[slot].set(noise),
@@ -657,6 +690,14 @@ class DiffusionServingEngine:
         # negative-prompt conditioning vectors (per slot) + their mask
         self._null_vecs = np.zeros((slots, cfg.d_model), np.float32)
         self._null_mask = np.zeros((slots,), bool)
+        # per-slot prompt / negative-prompt embedding tables (host side;
+        # zero-size when the config is not text-enabled) — the admission-
+        # time inputs of build_text_tables, padded to cfg.dit_text_len
+        Lt = cfg.dit_text_len
+        self._txt_embed = np.zeros((slots, Lt, cfg.d_model), np.float32)
+        self._txt_mask = np.zeros((slots, Lt), bool)
+        self._neg_embed = np.zeros((slots, Lt, cfg.d_model), np.float32)
+        self._neg_mask = np.zeros((slots, Lt), bool)
         self._scales = np.zeros((slots,), np.float32)
         self._nsteps = np.ones((slots,), np.int32)
         self._guided = np.zeros((slots,), bool)
@@ -683,11 +724,45 @@ class DiffusionServingEngine:
             fn = self._compact_ticks[bucket] = self._make_compact_tick(bucket)
         return fn
 
+    # -- text conditioning ---------------------------------------------
+    def _text_table_operands(self):
+        """Dummy (te, tm, ne, nm) operands shaped like one admission wave's
+        inputs to build_text_tables (text-enabled engines only)."""
+        S, Lt = self.slots, self.cfg.dit_text_len
+        te = jnp.zeros((S, Lt, self.cfg.d_model), jnp.float32)
+        tm = jnp.zeros((S, Lt), bool)
+        return te, tm, te, tm
+
+    def _empty_txt(self):
+        """An all-masked per-slot text-table dict (zero K/V, zero masks) —
+        the exact no-op under the cross-attn masking invariant.  {} on
+        text-free engines: an empty dict contributes zero jit operand
+        leaves, keeping their tick signature byte-identical to pre-text."""
+        if not self.text_enabled:
+            return {}
+        S, Lt = self.slots, self.cfg.dit_text_len
+        kd = self.params["blocks"]["cross"]["wk"].shape[-1]
+        z = jnp.zeros((S, self.cfg.num_layers, Lt, kd), jnp.float32)
+        m = jnp.zeros((S, Lt), bool)
+        return {"k": z, "v": z, "mask": m, "nk": z, "nv": z, "nmask": m}
+
+    def _build_text_tables(self):
+        """The live per-slot text-table dict from the host embedding
+        tables: one jitted text_kv pass over every slot, re-run only when
+        admission changed a slot's prompt (never per tick)."""
+        if not self.text_enabled:
+            return {}
+        return self._text_tables(
+            jnp.asarray(self._txt_embed), jnp.asarray(self._txt_mask),
+            jnp.asarray(self._neg_embed), jnp.asarray(self._neg_mask))
+
+    # ------------------------------------------------------------------
     def _warmup_operands(self):
         """Dummy device operands shaped exactly like a live tick's: the
-        12-tuple every tick program takes, and the fused want pass's
-        6-tuple (shared prefixes, so warmup and IR capture trace the same
-        shapes a session dispatches)."""
+        13-tuple every tick program takes (the text-table dict is empty on
+        text-free engines — zero operand leaves), and the fused want
+        pass's 6-tuple (shared prefixes, so warmup and IR capture trace
+        the same shapes a session dispatches)."""
         S = self.slots
         T, D = self.tokens, self.in_dim
         xs = jnp.zeros((S, T, D), jnp.float32)
@@ -699,7 +774,8 @@ class DiffusionServingEngine:
         nv = jnp.zeros((S, self.cfg.d_model), jnp.float32)
         nm = jnp.zeros((S,), bool)
         ab = jnp.full((S,), 0.5, jnp.float32)
-        tick_args = (states, zi, xs, zf, zi, zi, nv, nm, zf, zf, ab, ab)
+        tick_args = (states, zi, xs, zf, zi, zi, nv, nm, self._empty_txt(),
+                     zf, zf, ab, ab)
         want_args = (states, zi, xs, zf, zi, nm)
         return tick_args, want_args
 
@@ -717,10 +793,15 @@ class DiffusionServingEngine:
     def _param_leaf_specs(self):
         """(shape, dtype-name) multiset of the model param leaves — the
         consts a tick program is DECLARED to close over; anything else
-        big is closure-capture bloat (repro.analysis.ir const check)."""
-        return tuple(
+        big is closure-capture bloat (repro.analysis.ir const check).
+        Includes the conditioner's text-encoder leaves, so the
+        "text_encoder" program verifies under the same declaration."""
+        specs = tuple(
             (tuple(getattr(l, "shape", ())), str(getattr(l, "dtype", "")))
             for l in jax.tree_util.tree_leaves(self.params))
+        if self.conditioner is not None:
+            specs += tuple(self.conditioner.param_leaf_specs())
+        return specs
 
     def warmup(self, verify: bool = False) -> Dict[object, ProgramProfile]:
         """Compile every tick program on dummy inputs before serving, and
@@ -770,6 +851,28 @@ class DiffusionServingEngine:
                 self._want_all, prof = compile_program(
                     self._want_all, *want_args, key="want")
             self.program_profile["want"] = prof
+        # text-serving programs: the admission-time K/V table build, and
+        # the conditioner's text encoder — both outside the tick loop, but
+        # a live session dispatches them, so the zero-recompile-after-
+        # warmup claim must cover them too
+        if self.text_enabled:
+            targs = self._text_table_operands()
+            if verify:
+                self._text_tables, prof, ir = compile_program(
+                    self._text_tables, *targs, key="text_kv", want_ir=True,
+                    declared_const_specs=specs)
+                self.program_ir["text_kv"] = ir
+            else:
+                self._text_tables, prof = compile_program(
+                    self._text_tables, *targs, key="text_kv")
+            self.program_profile["text_kv"] = prof
+            if self.conditioner is not None:
+                if verify:
+                    prof, ir = self.conditioner.warmup(verify=True)
+                    self.program_ir["text_encoder"] = ir
+                else:
+                    prof = self.conditioner.warmup()
+                self.program_profile["text_encoder"] = prof
         if self.row_compaction:
             S = self.slots
             for bucket in self._warmup_buckets():
@@ -816,6 +919,11 @@ class DiffusionServingEngine:
         noise = jax.random.normal(key, (self.tokens, self.in_dim))
         warm_xs, _ = self._refill(xs, states, 0, noise, self._fresh)
         np.asarray(warm_xs[0])
+        if self.text_enabled:
+            # validates the compiled text_kv avals against the real host
+            # tables (and warms their host->device transfers)
+            jax.tree_util.tree_map(lambda a: a.block_until_ready(),
+                                   self._build_text_tables())
         self._warmed = True
         if verify:
             self._run_ir_verification()
@@ -837,6 +945,13 @@ class DiffusionServingEngine:
             self.program_ir["want"] = capture_ir(
                 self._want_src, *want_args, key="want",
                 declared_const_specs=specs)
+        if self.text_enabled:
+            self.program_ir["text_kv"] = capture_ir(
+                jax.jit(self._text_tables_src), *self._text_table_operands(),
+                key="text_kv", declared_const_specs=specs)
+            if self.conditioner is not None:
+                self.program_ir["text_encoder"] = \
+                    self.conditioner.capture_ir()
         if self.row_compaction:
             S = self.slots
             for bucket in self._warmup_buckets():
@@ -880,7 +995,37 @@ class DiffusionServingEngine:
             return None
 
     # ------------------------------------------------------------------
+    def _check_request(self, req: DiffusionRequest) -> None:
+        """The one request-shape contract, shared by session submission
+        (ServeSession._validate) and slot admission (_install_request) —
+        previously duplicated at both sites and free to drift."""
+        if req.num_steps > self.max_steps:
+            raise ValueError(f"request {req.request_id}: num_steps="
+                             f"{req.num_steps} > max_steps={self.max_steps}")
+        if req.null_label is not None and np.ndim(req.null_label) > 0:
+            shape = np.shape(req.null_label)
+            if shape != (self.cfg.d_model,):
+                raise ValueError(
+                    f"request {req.request_id}: null_label vector shape "
+                    f"{shape} != (d_model={self.cfg.d_model},)")
+        if req.prompt_tokens is not None or req.neg_prompt_tokens is not None:
+            if not self.text_enabled:
+                raise ValueError(
+                    f"request {req.request_id}: prompt on non-text config "
+                    f"'{self.cfg.name}' (dit_text_len == 0)")
+            if self.conditioner is None:
+                raise ValueError(
+                    f"request {req.request_id}: prompt given but the engine "
+                    f"has no conditioner (pass conditioner=PromptCache(...))")
+        if (req.neg_prompt_tokens is not None and req.null_label is not None
+                and np.ndim(req.null_label) > 0):
+            raise ValueError(
+                f"request {req.request_id}: neg_prompt_tokens conflicts "
+                f"with a vector-valued null_label — both claim the uncond "
+                f"conditioning vector")
+
     def _install_request(self, slot: int, req: DiffusionRequest) -> None:
+        self._check_request(req)
         ts = self.sched.spaced(req.num_steps)
         abar = self.sched.alpha_bars[ts].astype(np.float32)
         self._ab[slot, :] = 1.0
@@ -897,15 +1042,32 @@ class DiffusionServingEngine:
             self._nulls[slot] = int(null)
         else:
             # negative prompt: an arbitrary conditioning vector overrides the
-            # class-embedding lookup on this slot's uncond rows
-            vec = np.asarray(null, np.float32)
-            if vec.shape != (self.cfg.d_model,):
-                raise ValueError(
-                    f"request {req.request_id}: null_label vector shape "
-                    f"{vec.shape} != (d_model={self.cfg.d_model},)")
+            # class-embedding lookup on this slot's uncond rows (shape was
+            # checked by _check_request)
             self._nulls[slot] = self.cfg.dit_num_classes
-            self._null_vecs[slot, :] = vec
+            self._null_vecs[slot, :] = np.asarray(null, np.float32)
             self._null_mask[slot] = True
+        if self.text_enabled:
+            # reset-on-refill extends to the text tables: slot reuse must
+            # never leak a previous request's prompt into this one
+            self._txt_embed[slot] = 0.0
+            self._txt_mask[slot] = False
+            self._neg_embed[slot] = 0.0
+            self._neg_mask[slot] = False
+            if req.prompt_tokens is not None:
+                pe = self.conditioner.get(req.prompt_tokens)
+                self._txt_embed[slot] = pe.embed
+                self._txt_mask[slot] = pe.mask
+            if req.neg_prompt_tokens is not None:
+                ne = self.conditioner.get(req.neg_prompt_tokens)
+                self._neg_embed[slot] = ne.embed
+                self._neg_mask[slot] = ne.mask
+                # the pooled negative-prompt embedding rides the null-vec
+                # path: uncond rows condition on it instead of the
+                # null-class embedding, AND cross-attend its K/V above
+                self._nulls[slot] = self.cfg.dit_num_classes
+                self._null_vecs[slot, :] = ne.pooled
+                self._null_mask[slot] = True
         self._scales[slot] = req.cfg_scale
         self._nsteps[slot] = req.num_steps
         self._guided[slot] = req.guided

@@ -41,7 +41,14 @@ class DiffusionRequest:
 
     `modality` routes the request to the matching per-modality sub-pool in
     a mixed pool (repro.modalities.MixedModalityEngine); a single-modality
-    DiffusionServingEngine ignores it."""
+    DiffusionServingEngine ignores it.
+
+    `prompt_tokens` carries text conditioning (T2I/T2V): a prompt string or
+    an explicit token-id sequence, resolved through the engine's PromptCache
+    at admission (text-enabled configs only).  `neg_prompt_tokens` is the
+    CFG negative prompt — its K/V tables feed the slot's uncond rows and
+    its pooled embedding rides the null-vec path (so it conflicts with a
+    vector-valued `null_label`; the engine rejects that combination)."""
     request_id: int
     num_steps: int
     seed: int = 0
@@ -50,6 +57,8 @@ class DiffusionRequest:
     cfg_scale: float = 0.0
     null_label: Optional[Any] = None
     modality: str = "image"
+    prompt_tokens: Optional[Any] = None
+    neg_prompt_tokens: Optional[Any] = None
 
     @property
     def guided(self) -> bool:

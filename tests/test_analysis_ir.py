@@ -205,8 +205,13 @@ def test_schedule_tables_are_f32_at_the_boundary(make):
 def test_golden_context_builds_and_serves():
     ctx = golden_context()
     assert ctx.error == "", ctx.error
-    assert set(ctx.engines) == {"image", "video"}
-    assert ctx.requests_served == 5        # 3 image + 2 video, all finished
+    assert set(ctx.engines) == {"image", "video", "t2i"}
+    assert ctx.requests_served == 8   # 3 image + 2 video + 3 t2i, finished
+    # the prompted t2i requests resolved through the golden PromptCache:
+    # encoder ran once per unique prompt (2 prompts + 1 negative), repeats
+    # were host-side hits
+    stats = ctx.engines["t2i"].conditioner.stats
+    assert stats["misses"] == 3 and stats["hits"] == 2
 
 
 def test_golden_session_zero_recompiles_after_warmup():

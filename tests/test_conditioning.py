@@ -1,0 +1,356 @@
+"""repro.conditioning: tokenizer/encoder contracts, PromptCache LRU and
+content hashing, cross-attn K/V step-invariance through the serving
+engine (text-encoder FLOPs paid once per unique prompt, tick programs
+free of text projections), negative-prompt CFG round-trip, refill
+isolation of the per-slot text tables, and the pab policy serving its
+cross_attn range end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.conditioning import (PromptCache, init_text_encoder,
+                                text_encoder_config, tokenize)
+from repro.configs import get_config
+from repro.core import FasterCacheCFG, make_policy
+from repro.core.static_policies import PABPolicy
+from repro.diffusion import ddim_step, linear_schedule, sample
+from repro.models import dit
+from repro.modalities import get_modality, make_workload
+from repro.serving.diffusion import DiffusionRequest, request_noise_key
+
+NUM_STEPS = 8
+
+
+def _tiny_workload(name):
+    spec = get_modality(name)
+    overrides = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+                     d_ff=128, dit_patch_tokens=8, dit_in_dim=4,
+                     dit_num_classes=10)
+    if spec.temporal:
+        overrides.update(dit_patch_tokens=4, dit_num_frames=2)
+    if spec.text:
+        overrides.update(dit_text_len=4)
+    cfg = get_config(spec.arch_id).reduced(**overrides)
+    return make_workload(name, cfg=cfg)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return _tiny_workload("t2i")
+
+
+@pytest.fixture(scope="module")
+def wl_image():
+    return _tiny_workload("image")
+
+
+@pytest.fixture(scope="module")
+def cache(wl):
+    return wl.conditioner(seed=0)
+
+
+# ----------------------------------------------------------------------
+# tokenizer + encoder contracts
+# ----------------------------------------------------------------------
+
+def test_tokenize_pads_masks_and_is_deterministic(wl):
+    tc = text_encoder_config(wl.cfg)
+    ids, mask = tokenize("ab", tc)
+    assert ids.shape == (tc.max_len,) and mask.shape == (tc.max_len,)
+    assert mask.tolist() == [True, True, False, False]
+    assert ids[2:].tolist() == [0, 0]            # padding is zeroed
+    ids2, mask2 = tokenize("ab", tc)
+    np.testing.assert_array_equal(ids, ids2)
+    np.testing.assert_array_equal(mask, mask2)
+    # a string and its explicit byte spelling tokenize identically
+    ids3, mask3 = tokenize([ord("a"), ord("b")], tc)
+    np.testing.assert_array_equal(ids, ids3)
+    np.testing.assert_array_equal(mask, mask3)
+
+
+def test_tokenize_rejects_bad_explicit_sequences(wl):
+    tc = text_encoder_config(wl.cfg)
+    with pytest.raises(ValueError):                  # overlong explicit seq
+        tokenize(list(range(tc.max_len + 1)), tc)
+    with pytest.raises(ValueError):                  # out-of-vocab token
+        tokenize([0, tc.vocab], tc)
+    # strings truncate silently instead (serving-friendly)
+    ids, mask = tokenize("x" * (tc.max_len + 3), tc)
+    assert mask.all() and len(ids) == tc.max_len
+
+
+def test_encoder_zeroes_padding_and_pools_masked_mean(cache):
+    pe = cache.get("ab")
+    assert pe.embed.shape == (cache.tc.max_len, cache.tc.d_model)
+    np.testing.assert_array_equal(pe.embed[~pe.mask], 0.0)
+    assert np.abs(pe.embed[pe.mask]).max() > 0.0
+    np.testing.assert_allclose(pe.pooled, pe.embed[pe.mask].mean(axis=0),
+                               atol=1e-6)
+
+
+def test_fully_masked_text_is_a_noop_branch(wl):
+    """The cross-attn branch contract: an all-padding prompt leaves the
+    forward bit-for-bit equal to the promptless forward (K/V zeroed at
+    masked positions + additive mask => fully-masked rows return 0)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), wl.latent_shape(1))
+    t = jnp.full((1,), 10.0, jnp.float32)
+    y = jnp.zeros((1,), jnp.int32)
+    plain = dit.forward(wl.params, x, t, y, wl.cfg)
+    Lt = wl.cfg.dit_text_len
+    masked = dit.forward(
+        wl.params, x, t, y, wl.cfg,
+        txt_embed=jnp.zeros((1, Lt, wl.cfg.d_model)),
+        txt_mask=jnp.zeros((1, Lt), bool))
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(masked))
+
+
+def test_prompt_actually_conditions_the_forward(wl, cache):
+    x = jax.random.normal(jax.random.PRNGKey(0), wl.latent_shape(1))
+    t = jnp.full((1,), 10.0, jnp.float32)
+    y = jnp.zeros((1,), jnp.int32)
+    plain = dit.forward(wl.params, x, t, y, wl.cfg)
+    pe = cache.get("cat")
+    prompted = dit.forward(wl.params, x, t, y, wl.cfg,
+                           txt_embed=jnp.asarray(pe.embed[None]),
+                           txt_mask=jnp.asarray(pe.mask[None]))
+    assert np.abs(np.asarray(plain) - np.asarray(prompted)).max() > 1e-5
+
+
+# ----------------------------------------------------------------------
+# PromptCache: hit/miss accounting, LRU bounds, content hashing
+# ----------------------------------------------------------------------
+
+def test_prompt_cache_hit_miss_and_lru_eviction(wl):
+    tc = text_encoder_config(wl.cfg)
+    params = init_text_encoder(jax.random.PRNGKey(0), tc)
+    c = PromptCache(params, tc, capacity=2)
+    a, b = c.get("aa"), c.get("bb")
+    assert (c.misses, c.hits, c.evictions) == (2, 0, 0)
+    assert c.get("aa") is a and c.hits == 1     # hit returns the SAME entry
+    c.get("cc")                                  # evicts LRU "bb", not "aa"
+    assert (c.misses, c.evictions, len(c)) == (3, 1, 2)
+    assert c.get("aa") is a                      # survived: recently used
+    got_b = c.get("bb")                          # evicted: re-encoded
+    assert c.misses == 4 and got_b is not b
+    np.testing.assert_array_equal(got_b.embed, b.embed)  # but deterministic
+    assert c.stats["hit_rate"] == pytest.approx(2 / 6)
+
+
+def test_prompt_cache_content_hash_unifies_spellings(cache):
+    """A string prompt and its explicit token sequence share one entry."""
+    before = cache.misses
+    pe = cache.get("hi")
+    assert cache.get([ord("h"), ord("i")]) is pe
+    assert cache.misses == before + 1
+    assert cache.content_key("hi") == cache.content_key([ord("h"), ord("i")])
+
+
+def test_prompt_cache_rejects_zero_capacity(wl):
+    tc = text_encoder_config(wl.cfg)
+    params = init_text_encoder(jax.random.PRNGKey(0), tc)
+    with pytest.raises(ValueError):
+        PromptCache(params, tc, capacity=0)
+
+
+# ----------------------------------------------------------------------
+# serving: K/V step-invariance, CFG round-trip, refill isolation
+# ----------------------------------------------------------------------
+
+def test_warmup_profiles_and_encoder_paid_once_per_unique_prompt(wl):
+    """Step-invariance through the profile surface: warmup compiles the
+    text programs ('text_encoder' once per unique prompt, 'text_kv' once
+    per admission) SEPARATE from the tick buckets, and a served session
+    with repeated prompts pays the encoder exactly once per unique
+    prompt.  The tick programs themselves carry no text-projection work:
+    their profiled FLOPs are identical on sessions with 1 vs 3 unique
+    prompts (text K/V arrive as operands, never as per-step compute)."""
+    cond = wl.conditioner(seed=0)
+    eng = wl.engine(make_policy("fora", interval=2), slots=2,
+                    max_steps=NUM_STEPS, conditioner=cond)
+    profiles = eng.warmup()
+    assert "text_kv" in profiles and "text_encoder" in profiles
+    tick_flops = {k: v.flops for k, v in profiles.items()
+                  if isinstance(k, int)}
+    assert tick_flops                      # bucket programs were profiled
+    reqs = [DiffusionRequest(i, NUM_STEPS, seed=i,
+                             prompt_tokens=("sun", "sun", "sea", "sun")[i])
+            for i in range(4)]
+    res = eng.serve(reqs)
+    assert all(np.isfinite(r.x0).all() for r in res)
+    assert cond.misses == 2 and cond.hits == 2   # encoder ran twice, total
+    # same-prompt requests share bit-identical embeddings
+    assert cond.get("sun") is cond.get([ord(c) for c in "sun"])
+    # tick programs did not change or grow because prompts were served
+    assert {k: v.flops for k, v in eng.program_profile.items()
+            if isinstance(k, int)} == tick_flops
+
+
+def test_image_engine_has_no_text_programs(wl_image):
+    profiles = wl_image.engine("none", slots=1, max_steps=NUM_STEPS).warmup()
+    assert "text_kv" not in profiles and "text_encoder" not in profiles
+
+
+def _reference(wl, req, policy_name, policy_kw, cfg_policy=None, den_kw=None):
+    sched = linear_schedule(1000)
+    ts = sched.spaced(req.num_steps)
+    xT = jax.random.normal(request_noise_key(req),
+                           (1, wl.tokens, wl.latent_dim))
+    pol = (wl.make_policy(policy_name, num_steps=req.num_steps, **policy_kw)
+           if policy_name else None)
+    den = wl.denoiser(pol, cfg_scale=req.cfg_scale, cfg_policy=cfg_policy,
+                      **(den_kw or {}))
+    ref, _ = sample(den, xT, ts, sched, step_fn=ddim_step,
+                    denoiser_state=den.init_state(1))
+    return np.asarray(ref[0])
+
+
+def test_negative_prompt_cfg_roundtrip(wl, cache):
+    """Engine-served (prompt, negative prompt, CFG) must match the
+    single-trajectory CachedDenoiser(text=, neg_text=) reference — the
+    negative prompt rides the null-vec tables, the prompt the K/V
+    tables, and both survive the guided two-branch tick."""
+    req = DiffusionRequest(0, NUM_STEPS, seed=7, cfg_scale=2.5,
+                           prompt_tokens="a cat photo",
+                           neg_prompt_tokens="blurry")
+    eng = wl.engine(make_policy("fora", interval=2), slots=2,
+                    max_steps=NUM_STEPS,
+                    cfg_policy=FasterCacheCFG(2, NUM_STEPS),
+                    conditioner=cache)
+    res = eng.serve([req])
+    ref = _reference(wl, req, "fora", {"interval": 2},
+                     cfg_policy=FasterCacheCFG(2, NUM_STEPS),
+                     den_kw={"text": cache.get("a cat photo"),
+                             "neg_text": cache.get("blurry")})
+    np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
+
+
+def test_negative_prompt_changes_output(wl, cache):
+    eng = wl.engine("none", slots=1, max_steps=NUM_STEPS, conditioner=cache)
+    base = eng.serve([DiffusionRequest(0, NUM_STEPS, seed=4, cfg_scale=2.0,
+                                       prompt_tokens="cat")])
+    neg = eng.serve([DiffusionRequest(0, NUM_STEPS, seed=4, cfg_scale=2.0,
+                                      prompt_tokens="cat",
+                                      neg_prompt_tokens="dog")])
+    assert np.abs(base[0].x0 - neg[0].x0).max() > 1e-5
+
+
+def test_refill_isolation_of_text_tables(wl):
+    """More prompted requests than slots: every request's output equals
+    serving it alone on a fresh engine — slot refill fully resets the
+    per-slot text K/V and negative tables (no prompt bleed between the
+    requests that share a slot)."""
+    cond = wl.conditioner(seed=0)
+
+    def fresh_engine():
+        return wl.engine(make_policy("fora", interval=2), slots=2,
+                         max_steps=NUM_STEPS,
+                         cfg_policy=FasterCacheCFG(2, NUM_STEPS),
+                         conditioner=cond)
+
+    prompts = ("cat", "dog", None, "fox", "cat")
+    negs = ("bad", None, None, "bad", None)
+    reqs = [DiffusionRequest(i, NUM_STEPS, seed=i, class_label=i % 3,
+                             cfg_scale=2.0 if i % 2 == 0 else 0.0,
+                             prompt_tokens=prompts[i],
+                             neg_prompt_tokens=negs[i])
+            for i in range(5)]
+    res = fresh_engine().serve(reqs)
+    assert len(res) == 5
+    for req, r in zip(reqs, res):
+        solo = fresh_engine().serve([req])[0]
+        np.testing.assert_allclose(
+            r.x0, solo.x0, atol=5e-4, rtol=1e-3,
+            err_msg=f"request {req.request_id} (prompt="
+                    f"{req.prompt_tokens!r})")
+
+
+def test_t2v_prompted_serving_matches_reference(wl_image):
+    """The video text path: prompted t2v engine == CachedDenoiser
+    reference on the factorized spatial/temporal backbone."""
+    wl = _tiny_workload("t2v")
+    cond = wl.conditioner(seed=0)
+    req = DiffusionRequest(0, NUM_STEPS, seed=5, cfg_scale=2.0,
+                           prompt_tokens="waves")
+    eng = wl.engine(wl.make_policy("teacache_video", delta=0.1,
+                                   num_steps=NUM_STEPS),
+                    slots=1, max_steps=NUM_STEPS, conditioner=cond)
+    res = eng.serve([req])
+    ref = _reference(wl, req, "teacache_video", {"delta": 0.1},
+                     den_kw={"text": cond.get("waves")})
+    np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# pab: the cross_attn range (6) serves for real
+# ----------------------------------------------------------------------
+
+def test_pab_registry_entry_serves_cross_attn_range(wl):
+    """The pab registry policy keyed on cross_attn must (a) construct with
+    the canonical range of 6, (b) actually SAVE compute over a served
+    trajectory, and (c) match the CachedDenoiser reference under the same
+    policy — the broadcast range gates a branch that exists now that the
+    backbone exposes cross-attention."""
+    pol = make_policy("pab", module_type="cross_attn")
+    assert isinstance(pol, PABPolicy)
+    assert PABPolicy.RANGES["cross_attn"] == 6
+    sched = pol.static_schedule(NUM_STEPS)
+    assert sched[0] and 0 < sum(sched) < NUM_STEPS
+
+    cond = wl.conditioner(seed=0)
+    req = DiffusionRequest(0, NUM_STEPS, seed=9, prompt_tokens="a red fox")
+    eng = wl.engine(make_policy("pab", module_type="cross_attn"), slots=1,
+                    max_steps=NUM_STEPS, conditioner=cond)
+    res = eng.serve([req])
+    assert res[0].record.computed_steps < NUM_STEPS     # reuse fired
+    ref = _reference(wl, req, "pab", {"module_type": "cross_attn"},
+                     den_kw={"text": cond.get("a red fox")})
+    np.testing.assert_allclose(res[0].x0, ref, atol=5e-3, rtol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# validation: the request/engine/config contracts
+# ----------------------------------------------------------------------
+
+def test_prompt_rejected_on_textless_config(wl_image):
+    eng = wl_image.engine("none", slots=1, max_steps=NUM_STEPS)
+    with pytest.raises(ValueError):
+        eng.serve([DiffusionRequest(0, NUM_STEPS, prompt_tokens="cat")])
+
+
+def test_prompt_rejected_without_conditioner(wl):
+    eng = wl.engine("none", slots=1, max_steps=NUM_STEPS)  # no conditioner
+    with pytest.raises(ValueError):
+        eng.serve([DiffusionRequest(0, NUM_STEPS, prompt_tokens="cat")])
+
+
+def test_conditioner_rejected_on_textless_config(wl, wl_image, cache):
+    with pytest.raises(ValueError):
+        wl_image.engine("none", slots=1, max_steps=NUM_STEPS,
+                        conditioner=cache)
+
+
+def test_neg_prompt_conflicts_with_null_vector(wl, cache):
+    """Both claim the slot's null-vec table — the engine must refuse the
+    ambiguous request instead of silently picking one."""
+    eng = wl.engine("none", slots=1, max_steps=NUM_STEPS, conditioner=cache)
+    vec = np.zeros((wl.cfg.d_model,), np.float32)
+    with pytest.raises(ValueError):
+        eng.serve([DiffusionRequest(0, NUM_STEPS, cfg_scale=2.0,
+                                    prompt_tokens="cat",
+                                    neg_prompt_tokens="dog",
+                                    null_label=vec)])
+
+
+def test_workload_conditioner_requires_text_modality(wl_image):
+    with pytest.raises(ValueError):
+        wl_image.conditioner()
+
+
+def test_modality_spec_rejects_text_config_mismatch():
+    spec = get_modality("t2i")
+    cfg = get_config(spec.arch_id).reduced(num_layers=1, d_model=32,
+                                           num_heads=2, num_kv_heads=2,
+                                           d_ff=64, dit_text_len=0)
+    with pytest.raises(ValueError):
+        spec.validate(cfg)

@@ -42,6 +42,10 @@ ALWAYS_COMPUTE = {
     "clusca": {"interval": 1},
     "speca": {"interval": 1},
     "fastercache_cfg": {"interval": 1},
+    # PAB at model granularity: ranges all 1 -> every module type (incl.
+    # the text cross-attn branch) recomputes each step
+    "pab": {"ranges": dict.fromkeys(
+        ("spatial_attn", "temporal_attn", "cross_attn", "mlp"), 1)},
     # constructor-argument policies: callable entries get the workload so
     # the gate/profile can match its latent shapes.  threshold=1.0 makes
     # the learned gate refresh every step (sigmoid <= 1); delta=0.0 under
@@ -60,8 +64,19 @@ def _tiny_workload(name):
                      dit_num_classes=10)
     if spec.temporal:
         overrides.update(dit_patch_tokens=4, dit_num_frames=2)
+    if spec.text:
+        overrides.update(dit_text_len=4)
     cfg = get_config(spec.arch_id).reduced(**overrides)
-    return make_workload(name, cfg=cfg)
+    wl = make_workload(name, cfg=cfg)
+    if spec.text:
+        # one shared PromptCache per text workload; the sweep conditions
+        # every trajectory on the same (prompt, negative-prompt) pair so
+        # cached==uncached equivalence covers the cross-attn branch too
+        cache = wl.conditioner(seed=0)
+        wl.extras["conditioner"] = cache
+        wl.extras["text"] = cache.get("tiny smoke prompt")
+        wl.extras["neg_text"] = cache.get("bad")
+    return wl
 
 
 @pytest.fixture(scope="module")
@@ -86,6 +101,9 @@ def _exact(exact_cache, workloads, modality, cfg_scale=0.0):
 
 
 def _trajectory(wl, policy=None, seed=1, batch=1, **den_kw):
+    if wl.spec.text:                 # text modalities denoise under prompts
+        den_kw.setdefault("text", wl.extras["text"])
+        den_kw.setdefault("neg_text", wl.extras["neg_text"])
     sched = linear_schedule(200)
     ts = sched.spaced(NUM_STEPS)
     xT = wl.noise(jax.random.PRNGKey(seed), batch)
